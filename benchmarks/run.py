@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Modules:
+
+* fig5_motivation  -- paper Fig. 5 (exact published CCTs)
+* fig7_cct_vs_msgsize -- paper Fig. 7(a-c)
+* fig8_scalability -- paper Fig. 8(a-b)
+* scheduler_bench  -- solve-time vs the paper's Gurobi claim
+* kernel_bench     -- Pallas kernel microbenches (interpret mode)
+* swot_ladder      -- optical scheduling modes on a real step's
+                      collectives (EXPERIMENTS.md section 4.1)
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        fig5_motivation,
+        fig7_cct_vs_msgsize,
+        fig8_scalability,
+        kernel_bench,
+        scheduler_bench,
+        swot_ladder,
+    )
+
+    modules = [
+        fig5_motivation,
+        fig7_cct_vs_msgsize,
+        fig8_scalability,
+        scheduler_bench,
+        kernel_bench,
+        swot_ladder,
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for module in modules:
+        if only and only not in module.__name__:
+            continue
+        for name, us, note in module.run():
+            print(f"{name},{us:.1f},{note}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

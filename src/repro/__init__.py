@@ -1,0 +1,9 @@
+"""SWOT-JAX: reconfiguration-communication overlap for collective
+communication in optical networks, as a production JAX framework.
+
+See README.md; public entry points:
+  repro.core          -- the paper's contribution (scheduler/shim/...)
+  repro.models.lm     -- build_model(cfg, ctx) for the 10-arch zoo
+  repro.configs       -- registry.get_config / smoke_config
+  repro.launch        -- mesh / dryrun / train / serve drivers
+"""

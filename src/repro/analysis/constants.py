@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants for the roofline analysis."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BANDWIDTH = 819e9  # bytes/s per chip
+ICI_LINK_BANDWIDTH = 50e9  # bytes/s per link (one link assumed per the
+# roofline formula: collective_term = bytes / (chips x link_bw))
+VMEM_BYTES = 16 * 2**20  # ~16 MiB per core (kernel tiling budget)
+HBM_BYTES = 16 * 2**30  # 16 GiB per chip

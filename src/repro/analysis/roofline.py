@@ -1,0 +1,132 @@
+"""Roofline terms per (arch x shape x mesh) from a compiled dry-run.
+
+Three per-chip time lower bounds (the SPMD program is per-device, so all
+numerators are per-device quantities; equivalently global / chips):
+
+    compute    = device_FLOPs / 197e12         (bf16 MXU peak)
+    memory     = device_HBM_bytes / 819e9
+    collective = device_collective_bytes / 50e9 (one ICI link)
+
+plus MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode) with N = active
+parameters, and the usefulness ratio MODEL_FLOPS / global_HLO_FLOPs that
+exposes remat and masked-attention waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.analysis import constants as hw
+from repro.analysis.hlo import HloCostSummary
+from repro.configs.base import ArchConfig, ShapeCell
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_global: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        if self.hlo_flops_global <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops_global
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline the step achieves if it runs
+        exactly at the max-term bound: model_flops_time / bound."""
+        ideal = self.model_flops / (self.chips * hw.PEAK_FLOPS_BF16)
+        if self.bound_s <= 0:
+            return 0.0
+        return ideal / self.bound_s
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_global": self.hlo_flops_global,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def active_param_count(cfg: ArchConfig, specs) -> float:
+    """Parameters touched per token: shared + top-k routed experts."""
+    import jax
+
+    from repro.models.common import is_spec
+
+    total_active = 0.0
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=is_spec
+    )[0]:
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        n = math.prod(spec.shape)
+        if "moe" in keys and "router" not in keys:
+            n = n * cfg.top_k / max(cfg.n_experts, 1)
+        total_active += n
+    return total_active
+
+
+def model_flops_for(
+    cfg: ArchConfig, cell: ShapeCell, specs
+) -> float:
+    n_active = active_param_count(cfg, specs)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch
+
+
+def roofline_from_summary(
+    arch: str,
+    cell: ShapeCell,
+    mesh_name: str,
+    chips: int,
+    summary: HloCostSummary,
+    model_flops: float,
+) -> Roofline:
+    return Roofline(
+        arch=arch,
+        shape=cell.name,
+        mesh=mesh_name,
+        chips=chips,
+        compute_s=summary.flops / hw.PEAK_FLOPS_BF16,
+        memory_s=summary.bytes_accessed / hw.HBM_BANDWIDTH,
+        collective_s=summary.collective_bytes / hw.ICI_LINK_BANDWIDTH,
+        model_flops=model_flops,
+        hlo_flops_global=summary.flops * chips,
+    )

@@ -1,0 +1,227 @@
+"""JAX-native multi-step collectives matching the paper's patterns.
+
+Each algorithm here is the executable twin of a `repro.core.patterns`
+pattern: the same bijective-pairing step sequence, realized with
+``lax.ppermute`` inside ``shard_map``.  One source of truth connects the
+optical scheduler (which times the steps) and the runtime (which runs
+them): ``pattern_for`` returns the core pattern whose step/volume
+structure matches what the collective will transmit.
+
+All functions are *per-device* bodies: call them inside ``shard_map``
+with the relevant mesh axis, or use the ``*_sharded`` wrappers.  They are
+validated against ``lax.psum`` / ``lax.all_to_all`` oracles on 8 host
+devices (tests/test_comms.py).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.patterns import (
+    Pattern,
+    bruck_alltoall,
+    pairwise_alltoall,
+    rabenseifner_allreduce,
+    ring_allreduce,
+)
+
+
+def _axis_size(axis: str) -> int:
+    return lax.axis_size(axis)
+
+
+def _rotation_perm(n: int, shift: int) -> list[tuple[int, int]]:
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def _xor_perm(n: int, mask: int) -> list[tuple[int, int]]:
+    return [(i, i ^ mask) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Ring all-reduce: 2(N-1) steps, single rotation config.
+
+
+def ring_all_reduce(x: jax.Array, axis: str) -> jax.Array:
+    """Bandwidth-optimal ring AllReduce (reduce-scatter + all-gather)."""
+    n = _axis_size(axis)
+    if n == 1:
+        return x
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n, -1)
+    rank = lax.axis_index(axis)
+    perm = _rotation_perm(n, 1)
+
+    # Reduce-scatter ring: the travelling partial passes rank -> rank+1;
+    # at step t rank r receives the partial of chunk (r - t) mod n and
+    # adds its own contribution.  After n-1 steps r owns chunk (r+1) % n.
+    acc = jnp.take(chunks, rank, axis=0)
+    for t in range(1, n):
+        acc = lax.ppermute(acc, axis, perm)
+        acc = acc + jnp.take(chunks, (rank - t) % n, axis=0)
+    out = jnp.zeros_like(chunks)
+    out = out.at[(rank + 1) % n].set(acc)
+    # All-gather ring: n-1 rotations forwarding the newest chunk; at step
+    # s rank r receives the fully-reduced chunk (r + 1 - s) mod n.
+    cur = acc
+    for s in range(1, n):
+        cur = lax.ppermute(cur, axis, perm)
+        out = out.at[(rank + 1 - s) % n].set(cur)
+    flat_out = out.reshape(-1)
+    if pad:
+        flat_out = flat_out[: flat.size - pad]
+    return flat_out.reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# Rabenseifner all-reduce: recursive halving + recursive doubling.
+
+
+def rabenseifner_all_reduce(x: jax.Array, axis: str) -> jax.Array:
+    n = _axis_size(axis)
+    if n == 1:
+        return x
+    log = n.bit_length() - 1
+    if 1 << log != n:
+        raise ValueError(f"rabenseifner needs power-of-two ranks, got {n}")
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    total = flat.size
+    rank = lax.axis_index(axis)
+
+    # Reduce-scatter phase (recursive halving): window [off, off+size).
+    buf = flat
+    off = jnp.zeros((), jnp.int32)
+    size = total
+    for t in range(1, log + 1):
+        mask = 1 << (t - 1)
+        size //= 2
+        bit = (rank >> (t - 1)) & 1
+        keep_off = off + bit * size
+        send_off = off + (1 - bit) * size
+        send = lax.dynamic_slice(buf, (send_off,), (size,))
+        recv = lax.ppermute(send, axis, _xor_perm(n, mask))
+        kept = lax.dynamic_slice(buf, (keep_off,), (size,))
+        buf = lax.dynamic_update_slice(buf, kept + recv, (keep_off,))
+        off = keep_off
+    # Rank now owns the reduced segment [off, off+size).
+
+    # All-gather phase (recursive doubling), reversing the halving.
+    for t in range(log, 0, -1):
+        mask = 1 << (t - 1)
+        bit = (rank >> (t - 1)) & 1
+        send = lax.dynamic_slice(buf, (off,), (size,))
+        recv = lax.ppermute(send, axis, _xor_perm(n, mask))
+        partner_off = off + jnp.where(bit == 1, -size, size)
+        buf = lax.dynamic_update_slice(buf, recv, (partner_off,))
+        off = jnp.minimum(off, partner_off)
+        size *= 2
+    if pad:
+        buf = buf[: total - pad]
+    return buf.reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# Pairwise all-to-all: N-1 steps, all configs distinct.
+
+
+def pairwise_all_to_all(x: jax.Array, axis: str) -> jax.Array:
+    """x: (N, ...) chunk c goes to rank c; returns gathered (N, ...)."""
+    n = _axis_size(axis)
+    if n == 1:
+        return x
+    rank = lax.axis_index(axis)
+    out = jnp.zeros_like(x)
+    out = out.at[rank].set(jnp.take(x, rank, axis=0))
+    for k in range(1, n):
+        send = jnp.take(x, (rank + k) % n, axis=0)  # chunk for rank+k
+        recv = lax.ppermute(send, axis, _rotation_perm(n, k))
+        out = out.at[(rank - k) % n].set(recv)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Bruck all-to-all: ceil(log2 N) phases of rotation-by-2^k sends.
+
+
+def bruck_all_to_all(x: jax.Array, axis: str) -> jax.Array:
+    """x: (N, ...) chunk c goes to rank c; returns gathered (N, ...)."""
+    n = _axis_size(axis)
+    if n == 1:
+        return x
+    rank = lax.axis_index(axis)
+    # Local rotation: y[o] = block destined to rank (rank + o) mod n.
+    offsets = (rank + jnp.arange(n)) % n
+    y = jnp.take(x, offsets, axis=0)
+    n_phases = max(1, math.ceil(math.log2(n)))
+    for k in range(n_phases):
+        step = 1 << k
+        slots = [o for o in range(n) if (o >> k) & 1]
+        if not slots:
+            continue
+        send = y[jnp.array(slots)]
+        recv = lax.ppermute(send, axis, _rotation_perm(n, step))
+        y = y.at[jnp.array(slots)].set(recv)
+    # y[o] now holds the block from rank (rank - o) destined to us;
+    # un-rotate into source order.
+    sources = (rank - jnp.arange(n)) % n
+    out = jnp.zeros_like(y)
+    out = out.at[sources].set(y)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical all-reduce for multi-pod meshes.
+
+
+def hierarchical_all_reduce(
+    x: jax.Array, inner_axis: str, outer_axis: str
+) -> jax.Array:
+    """Reduce-scatter intra-pod, all-reduce across pods, all-gather back.
+
+    The cross-pod traffic is 1/N_inner of the naive flat all-reduce --
+    the standard topology-aware schedule for pod-scale DP (DESIGN.md
+    section 4).
+    """
+    n = _axis_size(inner_axis)
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    shard = lax.psum_scatter(
+        flat.reshape(n, -1), inner_axis, scatter_dimension=0, tiled=False
+    )  # (chunk,) this rank's reduced shard
+    shard = lax.psum(shard, outer_axis)
+    gathered = lax.all_gather(shard, inner_axis, axis=0, tiled=False)
+    flat_out = gathered.reshape(-1)
+    if pad:
+        flat_out = flat_out[: flat.size - pad]
+    return flat_out.reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# Pattern handoff to the SWOT scheduler.
+
+ALGORITHM_PATTERNS = {
+    "ring_all_reduce": ring_allreduce,
+    "rabenseifner_all_reduce": rabenseifner_allreduce,
+    "pairwise_all_to_all": pairwise_alltoall,
+    "bruck_all_to_all": bruck_alltoall,
+}
+
+
+def pattern_for(algorithm: str, n_nodes: int, size_bytes: float) -> Pattern:
+    """The core Pattern whose steps this collective will transmit."""
+    return ALGORITHM_PATTERNS[algorithm](n_nodes, size_bytes)

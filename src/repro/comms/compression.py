@@ -1,0 +1,92 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+Distributed-optimization trick for the DP gradient sync (DESIGN.md
+section 4): gradients are blockwise int8-quantized before the wire
+(4x fewer collective bytes than bf16, 2x fewer than... fp16), with the
+quantization residual fed back into the next step so the error does not
+accumulate (EF-SGD style).
+
+``compressed_all_reduce`` performs mean-reduction over the axis with int8
+payloads: quantize locally, all-to-all-style exchange via ppermute ring
+summation in f32, requantize only on the wire.  The simpler
+``quantize_block``/``dequantize_block`` pair is also used by the
+checkpoint codec.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+BLOCK = 2048
+
+
+def quantize_block(
+    x: jax.Array, block: int = BLOCK
+) -> tuple[jax.Array, jax.Array, int]:
+    """Blockwise symmetric int8: returns (q, scales, orig_size)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), n
+
+
+def dequantize_block(
+    q: jax.Array, scale: jax.Array, n: int, shape: tuple[int, ...]
+) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def compress_decompress(x: jax.Array) -> jax.Array:
+    """Round-trip through the wire format (for error analysis/tests)."""
+    q, s, n = quantize_block(x)
+    return dequantize_block(q, s, n, x.shape)
+
+
+def compressed_all_reduce(
+    x: jax.Array,
+    axis: str,
+    error: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Mean all-reduce with int8 wire format + error feedback.
+
+    Returns (mean_reduced, new_error).  ``error`` is the residual pytree
+    leaf from the previous step (zeros initially).  Per-device math:
+
+        send    = quantize(x + error)
+        error'  = (x + error) - dequantize(send)
+        result  = ring-sum of dequantized payloads / N
+    """
+    n = lax.axis_size(axis)
+    if error is None:
+        error = jnp.zeros_like(x)
+    target = x + error
+    q, scale, size = quantize_block(target)
+    wire = dequantize_block(q, scale, size, x.shape)
+    new_error = target - wire
+    if n == 1:
+        return wire, new_error
+    # Ring summation of the wire values: each hop transfers the int8
+    # payload (q, scale); accumulation stays f32 locally.
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    acc = wire
+    q_cur, s_cur = q, scale
+    for _ in range(n - 1):
+        q_cur = lax.ppermute(q_cur, axis, perm)
+        s_cur = lax.ppermute(s_cur, axis, perm)
+        acc = acc + dequantize_block(q_cur, s_cur, size, x.shape)
+    return acc / n, new_error
+
+
+def wire_bytes(x: jax.Array) -> int:
+    """Bytes on the wire for the compressed format (vs 4*size for f32)."""
+    q, scale, _ = quantize_block(x)
+    return q.size + scale.size * 4

@@ -1,0 +1,89 @@
+"""Input builders per (arch x shape) cell.
+
+``input_specs`` returns allocation-free ``ShapeDtypeStruct`` stand-ins for
+every model input of a cell (the dry-run path); ``make_batch`` builds small
+concrete random batches (the smoke-test / example path).  Modality
+frontends are stubs per the assignment: VLM cells get precomputed patch
+embeddings, audio cells get precomputed encoder frames.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _extras_shapes(
+    cfg: ArchConfig, batch: int
+) -> dict[str, tuple[tuple[int, ...], object]]:
+    extras: dict = {}
+    if cfg.family in ("vlm",) or (
+        cfg.family == "moe" and cfg.n_image_patches
+    ):
+        extras["image_embeds"] = (
+            (batch, cfg.n_image_patches, cfg.d_model),
+            COMPUTE_DTYPE,
+        )
+    if cfg.family == "audio":
+        extras["encoder_frames"] = (
+            (batch, cfg.n_audio_frames, cfg.d_model),
+            COMPUTE_DTYPE,
+        )
+    return extras
+
+
+def train_batch_shapes(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    shapes = {
+        "tokens": ((b, s), jnp.int32),
+        "targets": ((b, s), jnp.int32),
+    }
+    shapes.update(_extras_shapes(cfg, b))
+    return shapes
+
+
+def prefill_batch_shapes(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    shapes = {"tokens": ((b, s), jnp.int32)}
+    shapes.update(_extras_shapes(cfg, b))
+    return shapes
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct tree for the cell's step-function inputs."""
+    if cell.kind == "train":
+        shapes = train_batch_shapes(cfg, cell)
+    elif cell.kind == "prefill":
+        shapes = prefill_batch_shapes(cfg, cell)
+    elif cell.kind == "decode":
+        shapes = {"tokens": ((cell.global_batch, 1), jnp.int32)}
+    else:
+        raise ValueError(f"unknown cell kind {cell.kind!r}")
+    return {
+        k: jax.ShapeDtypeStruct(shape, dtype)
+        for k, (shape, dtype) in shapes.items()
+    }
+
+
+def make_batch(cfg: ArchConfig, cell: ShapeCell, key: jax.Array) -> dict:
+    """Concrete random batch (smoke tests, examples)."""
+    if cell.kind == "train":
+        shapes = train_batch_shapes(cfg, cell)
+    elif cell.kind == "prefill":
+        shapes = prefill_batch_shapes(cfg, cell)
+    else:
+        shapes = {"tokens": ((cell.global_batch, 1), jnp.int32)}
+    batch = {}
+    for name, (shape, dtype) in shapes.items():
+        key, sub = jax.random.split(key)
+        if dtype == jnp.int32:
+            batch[name] = jax.random.randint(
+                sub, shape, 1, cfg.vocab_size, dtype=jnp.int32
+            )
+        else:
+            batch[name] = jax.random.normal(sub, shape, dtype)
+    return batch

@@ -1,0 +1,91 @@
+"""SWOT core: intra-collective optical reconfiguration with overlap.
+
+Public API for the paper's contribution:
+
+* ``OpticalFabric`` -- p nodes x k OCS planes, bandwidth, reconfig latency.
+* ``patterns`` -- CC algorithms as bijective-pairing step sequences.
+* ``solve_milp`` / ``swot_greedy`` / ``swot_schedule`` -- the SWOT
+  reconfiguration-communication overlap schedulers.
+* ``one_shot`` / ``strawman_icr`` / ``ideal_cct`` -- the paper's baselines.
+* ``SwotShim`` / ``OpticalController`` -- the coordination shim.
+"""
+
+from repro.core.baselines import (
+    InfeasibleError,
+    ideal_cct,
+    one_shot,
+    one_shot_allocation,
+    prestage_for,
+    strawman_icr,
+)
+from repro.core.fabric import (
+    FIG5_LINK_BANDWIDTH,
+    PAPER_LINK_BANDWIDTH,
+    PAPER_RECONFIG_LATENCY,
+    TPU_V5E_LINK_BANDWIDTH,
+    OpticalFabric,
+)
+from repro.core.greedy import swot_greedy
+from repro.core.milp import MilpResult, solve_milp
+from repro.core.patterns import (
+    ALGORITHMS,
+    Pattern,
+    Step,
+    all_gather,
+    bruck_alltoall,
+    get_pattern,
+    pairwise_alltoall,
+    rabenseifner_allreduce,
+    reduce_scatter,
+    ring_allreduce,
+)
+from repro.core.schedule import (
+    Decisions,
+    DependencyMode,
+    Kind,
+    PlaneActivity,
+    Schedule,
+)
+from repro.core.scheduler import SwotPlan, plan_collective, swot_schedule
+from repro.core.shim import CollectiveRequest, OpticalController, SwotShim
+from repro.core.simulator import cct_of, execute
+
+__all__ = [
+    "ALGORITHMS",
+    "CollectiveRequest",
+    "Decisions",
+    "DependencyMode",
+    "FIG5_LINK_BANDWIDTH",
+    "InfeasibleError",
+    "Kind",
+    "MilpResult",
+    "OpticalController",
+    "OpticalFabric",
+    "PAPER_LINK_BANDWIDTH",
+    "PAPER_RECONFIG_LATENCY",
+    "Pattern",
+    "PlaneActivity",
+    "Schedule",
+    "Step",
+    "SwotPlan",
+    "SwotShim",
+    "TPU_V5E_LINK_BANDWIDTH",
+    "all_gather",
+    "bruck_alltoall",
+    "cct_of",
+    "execute",
+    "get_pattern",
+    "ideal_cct",
+    "one_shot",
+    "one_shot_allocation",
+    "pairwise_alltoall",
+    "plan_collective",
+    "prestage_for",
+    "rabenseifner_allreduce",
+    "reduce_scatter",
+    "ring_allreduce",
+    "solve_milp",
+    "strawman_icr",
+    "swot_greedy",
+    "swot_schedule",
+]

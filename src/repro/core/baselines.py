@@ -1,0 +1,132 @@
+"""Baseline schedulers from the paper's evaluation (Section 4.1.1).
+
+* **One-shot** -- full optical pre-configuration with a fixed topology: each
+  plane is statically assigned one config for the entire collective.  A
+  step can only use the planes that hold its config, so static allocation
+  "activates only a subset of OCSes per communication step, wasting the
+  bandwidth of other optical links" (paper Section 4.2.1).  Feasible only
+  when #distinct configs <= #planes -- the paper's scalability wall (Fig. 8:
+  with 4 OCSs, AllReduce tops out at 16 nodes, pairwise all-to-all at 5).
+* **Strawman-ICR** -- naive intra-collective reconfiguration: every plane
+  carries every step; on a config change all planes reconfigure in lockstep,
+  pausing the collective for ``t_recfg`` (the paper's Fig. 5(a)).
+* **Ideal** -- transmission at full aggregate NIC bandwidth, no
+  reconfiguration or network constraints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.fabric import OpticalFabric
+from repro.core.patterns import Pattern
+from repro.core.schedule import Decisions, Schedule
+from repro.core.simulator import execute
+
+
+class InfeasibleError(RuntimeError):
+    """Raised when a scheduling paradigm cannot realize a pattern."""
+
+
+def prestage_for(fabric: OpticalFabric, pattern: Pattern) -> OpticalFabric:
+    """All planes pre-staged at the first step's config (paper Fig. 5)."""
+    return fabric.prestaged(pattern.steps[0].config)
+
+
+def ideal_cct(fabric: OpticalFabric, pattern: Pattern) -> float:
+    """CCT with no network constraints: aggregate bandwidth, zero reconfig."""
+    total_bw = sum(fabric.plane_bandwidth(j) for j in range(fabric.n_planes))
+    return sum(step.volume / total_bw for step in pattern.steps)
+
+
+def _proportional_split(
+    fabric: OpticalFabric, planes: list[int], volume: float
+) -> dict[int, float]:
+    total = sum(fabric.plane_bandwidth(j) for j in planes)
+    return {
+        j: volume * fabric.plane_bandwidth(j) / total for j in planes
+    }
+
+
+def strawman_icr(fabric: OpticalFabric, pattern: Pattern) -> Schedule:
+    """Naive ICR: all planes, lockstep reconfiguration, no overlap."""
+    planes = list(range(fabric.n_planes))
+    splits = tuple(
+        _proportional_split(fabric, planes, step.volume)
+        for step in pattern.steps
+    )
+    return execute(fabric, pattern, Decisions(splits=splits))
+
+
+def one_shot_allocation(
+    pattern: Pattern, n_planes: int
+) -> dict[int, int]:
+    """Optimal static plane->config-count allocation.
+
+    Minimizes sum_i m_i / n(cfg_i) over integer allocations with
+    n(c) >= 1 for every distinct config c.  The objective is separable
+    convex in each n(c), so incremental greedy (give the next plane to the
+    config with the largest marginal gain) is exact.
+    """
+    volume_by_config: dict[int, float] = {}
+    for step in pattern.steps:
+        volume_by_config[step.config] = (
+            volume_by_config.get(step.config, 0.0) + step.volume
+        )
+    configs = sorted(volume_by_config)
+    if len(configs) > n_planes:
+        raise InfeasibleError(
+            f"one-shot needs {len(configs)} planes for "
+            f"{pattern.name} on {pattern.n_nodes} nodes, have {n_planes} "
+            "(the paper's one-shot scalability limit)"
+        )
+    counts = {c: 1 for c in configs}
+    for _ in range(n_planes - len(configs)):
+        best = max(
+            configs,
+            key=lambda c: volume_by_config[c]
+            * (1.0 / counts[c] - 1.0 / (counts[c] + 1)),
+        )
+        counts[best] += 1
+    return counts
+
+
+def one_shot(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    n_planes: int | None = None,
+) -> Schedule:
+    """One-shot static provisioning.
+
+    ``n_planes`` overrides the fabric's plane count to model the paper's
+    "overprovision to feasibility" variant (Fig. 7 runs one-shot with one
+    plane per distinct config when the base fabric is too small).  Raises
+    ``InfeasibleError`` when #configs > n_planes.
+    """
+    k = fabric.n_planes if n_planes is None else n_planes
+    counts = one_shot_allocation(pattern, k)
+    # Assign concrete planes to configs, then pre-stage them permanently.
+    assignment: list[int] = []
+    for config in sorted(counts):
+        assignment.extend([config] * counts[config])
+    assignment.extend(
+        [assignment[0]] * (k - len(assignment))
+    )  # unreachable filler; counts always sum to k
+    static_fabric = dataclasses.replace(
+        fabric,
+        n_planes=k,
+        plane_bandwidth_scale=None
+        if fabric.plane_bandwidth_scale is None or k != fabric.n_planes
+        else fabric.plane_bandwidth_scale,
+        initial_configs=tuple(assignment[:k]),
+    )
+    planes_of_config: dict[int, list[int]] = {}
+    for j, config in enumerate(assignment[:k]):
+        planes_of_config.setdefault(config, []).append(j)
+    splits = tuple(
+        _proportional_split(
+            static_fabric, planes_of_config[step.config], step.volume
+        )
+        for step in pattern.steps
+    )
+    return execute(static_fabric, pattern, Decisions(splits=splits))

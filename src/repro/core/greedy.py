@@ -1,0 +1,318 @@
+"""Scalable overlap-aware greedy scheduler.
+
+The MILP (`repro.core.milp`) is exact but its solve time grows with steps x
+planes; the paper reports ~90 s at 128 nodes with Gurobi.  This greedy
+scheduler makes the same class of decisions -- per-step volume splits plus
+"reserve a plane now so it can reconfigure for an upcoming config while the
+others keep transmitting" -- in O(2^k S^2) time, which handles 512-node
+collectives in milliseconds.  It is cross-validated against the MILP optimum
+on every instance small enough to solve exactly (tests assert a small gap).
+
+CHAIN mode (paper-faithful):
+  per step, enumerate which planes to *reserve* (divert to reconfigure for
+  an upcoming config); the remaining planes carry the step's volume with
+  water-filling splits (equalized finish times given per-plane ready
+  times).  Candidates are scored by rolling out the remaining steps with
+  the no-reserve policy and comparing final CCT.
+
+INDEPENDENT mode (beyond-paper, for collectives whose steps carry no data
+dependency, e.g. pairwise all-to-all):
+  steps are packed onto planes by least-finish-time, letting transmissions
+  of different steps proceed concurrently on different planes; the global
+  step barrier (P3) disappears and reconfigurations pipeline naturally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.core.fabric import OpticalFabric
+from repro.core.patterns import Pattern
+from repro.core.schedule import Decisions, DependencyMode, Schedule
+from repro.core.simulator import execute
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class _PlaneState:
+    config: int | None
+    free: float
+
+
+def _water_fill(
+    ready: list[tuple[int, float]],  # (plane, ready time), any order
+    bandwidths: dict[int, float],
+    volume: float,
+) -> tuple[float, dict[int, float]]:
+    """Equalize finish times: returns (step end, plane -> volume).
+
+    Planes whose ready time exceeds the resulting water level carry nothing
+    (and are reported with zero volume).
+    """
+    if volume <= _EPS:
+        first = min(r for _, r in ready) if ready else 0.0
+        return first, {}
+    order = sorted(ready, key=lambda t: t[1])
+    active: list[int] = []
+    level = order[0][1]
+    remaining = volume
+    idx = 0
+    while True:
+        while idx < len(order) and order[idx][1] <= level + _EPS:
+            active.append(order[idx][0])
+            idx += 1
+        bw_sum = sum(bandwidths[p] for p in active)
+        next_ready = order[idx][1] if idx < len(order) else float("inf")
+        # Volume absorbed before the next plane becomes ready.
+        absorb = bw_sum * (next_ready - level)
+        if remaining <= absorb or idx >= len(order):
+            level += remaining / bw_sum
+            break
+        remaining -= absorb
+        level = next_ready
+    ready_of = dict(ready)
+    split = {
+        p: bandwidths[p] * (level - ready_of[p])
+        for p in active
+        if level - ready_of[p] > _EPS
+    }
+    return level, split
+
+
+def _upcoming_targets(
+    pattern: Pattern, start_step: int, held: set[int], n: int
+) -> list[int]:
+    """Next ``n`` distinct upcoming configs not already held/being prepared."""
+    targets: list[int] = []
+    seen = set(held)
+    for i in range(start_step, pattern.n_steps):
+        cfg = pattern.steps[i].config
+        if cfg not in seen:
+            targets.append(cfg)
+            seen.add(cfg)
+            if len(targets) == n:
+                break
+    return targets
+
+
+def _rollout(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    states: list[_PlaneState],
+    barrier: float,
+    start_step: int,
+    horizon: int,
+) -> float:
+    """CCT estimate: run remaining steps with the no-reserve policy."""
+    bw = {j: fabric.plane_bandwidth(j) for j in range(fabric.n_planes)}
+    states = [dataclasses.replace(s) for s in states]
+    end_step = min(pattern.n_steps, start_step + horizon)
+    for i in range(start_step, end_step):
+        step = pattern.steps[i]
+        ready = []
+        for j, st in enumerate(states):
+            extra = 0.0 if st.config == step.config else fabric.t_recfg
+            ready.append((j, max(barrier, st.free + extra)))
+        level, split = _water_fill(ready, bw, step.volume)
+        for j, vol in split.items():
+            st = states[j]
+            if st.config != step.config:
+                st.free += fabric.t_recfg
+                st.config = step.config
+            st.free = max(barrier, st.free) + vol / bw[j]
+        barrier = level
+    if end_step < pattern.n_steps:
+        # Tail lower-bound: remaining volume at aggregate bandwidth plus one
+        # reconfiguration per config change.
+        tail_volume = sum(
+            pattern.steps[i].volume for i in range(end_step, pattern.n_steps)
+        )
+        changes = sum(
+            1
+            for i in range(end_step, pattern.n_steps)
+            if pattern.steps[i].config
+            != pattern.steps[max(i - 1, end_step)].config
+        )
+        barrier += tail_volume / sum(bw.values())
+        barrier += changes * fabric.t_recfg / fabric.n_planes
+    return barrier
+
+
+def swot_greedy_chain(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    rollout_horizon: int = 24,
+    max_enumerated_planes: int = 8,
+    polish: bool = True,
+) -> Schedule:
+    """Greedy CHAIN-mode (paper-faithful P3) scheduler."""
+    n_planes = fabric.n_planes
+    bw = {j: fabric.plane_bandwidth(j) for j in range(n_planes)}
+    states = [
+        _PlaneState(config=fabric.initial_config(j), free=0.0)
+        for j in range(n_planes)
+    ]
+    barrier = 0.0
+    splits: list[dict[int, float]] = []
+
+    for i, step in enumerate(pattern.steps):
+        # Candidate reserve sets.  Reserved planes skip this step and
+        # reconfigure toward upcoming configs instead.
+        if n_planes <= max_enumerated_planes:
+            reserve_sets = [
+                set(c)
+                for size in range(n_planes)
+                for c in itertools.combinations(range(n_planes), size)
+            ]
+        else:
+            by_free = sorted(range(n_planes), key=lambda j: states[j].free)
+            reserve_sets = [set(by_free[:size]) for size in range(4)]
+
+        best: tuple[float, float, dict[int, float], list[_PlaneState], float] | None = None
+        for reserved in reserve_sets:
+            servers = [j for j in range(n_planes) if j not in reserved]
+            if not servers:
+                continue
+            trial = [dataclasses.replace(s) for s in states]
+            held = {
+                trial[j].config
+                for j in range(n_planes)
+                if trial[j].config is not None
+            }
+            held.add(step.config)
+            targets = _upcoming_targets(pattern, i + 1, held, len(reserved))
+            for j, cfg in zip(sorted(reserved, key=lambda j: trial[j].free), targets):
+                trial[j].free += fabric.t_recfg
+                trial[j].config = cfg
+            ready = []
+            for j in servers:
+                extra = 0.0 if trial[j].config == step.config else fabric.t_recfg
+                ready.append((j, max(barrier, trial[j].free + extra)))
+            level, split = _water_fill(ready, bw, step.volume)
+            if step.volume > _EPS and not split:
+                continue
+            for j, vol in split.items():
+                st = trial[j]
+                if st.config != step.config:
+                    st.free += fabric.t_recfg
+                    st.config = step.config
+                st.free = max(barrier, st.free) + vol / bw[j]
+            score = _rollout(
+                fabric, pattern, trial, level, i + 1, rollout_horizon
+            )
+            key = (score, level)
+            if best is None or key < (best[0], best[1]):
+                best = (score, level, split, trial, level)
+        assert best is not None, "no feasible reserve set"
+        _, _, split, states, barrier = best
+        splits.append(split)
+
+    schedule = execute(fabric, pattern, Decisions(tuple(splits)))
+    if polish:
+        from repro.core.milp import lp_polish
+
+        schedule = lp_polish(schedule)
+        schedule = _structure_local_search(fabric, pattern, schedule)
+    return schedule
+
+
+# Structure local search is gated to instances whose LP solves quickly.
+_LOCAL_SEARCH_MAX_CELLS = 160
+_LOCAL_SEARCH_MAX_LP = 400
+
+
+def _structure_local_search(
+    fabric: OpticalFabric, pattern: Pattern, schedule: Schedule
+) -> Schedule:
+    """Hill-climb the serving-set structure, scoring flips with the exact LP.
+
+    The discrete structure of a SWOT schedule is fully captured by the
+    serving sets ``u`` (reconfigurations follow lazily, and the LP recovers
+    optimal continuous splits/timing for any ``u``).  Single-cell flips of
+    ``u`` therefore explore structures the constructive greedy cannot
+    reach, e.g. "both planes serve step 0 but one releases early".
+    """
+    import numpy as np
+
+    from repro.core.milp import _structure_of, solve_fixed_structure
+
+    n_cells = pattern.n_steps * fabric.n_planes
+    if n_cells > _LOCAL_SEARCH_MAX_CELLS:
+        return schedule
+    u = _structure_of(schedule)["u"]
+    best = schedule
+    lp_calls = 0
+    improved = True
+    while improved and lp_calls < _LOCAL_SEARCH_MAX_LP:
+        improved = False
+        for i in range(pattern.n_steps):
+            for j in range(fabric.n_planes):
+                trial = u.copy()
+                trial[i, j] = 1 - trial[i, j]
+                if trial[i].sum() < 1:
+                    continue
+                cand = solve_fixed_structure(
+                    fabric, pattern, trial, mode=schedule.mode
+                )
+                lp_calls += 1
+                if cand is not None and cand.cct < best.cct * (1 - 1e-9):
+                    best, u = cand, trial
+                    improved = True
+                if lp_calls >= _LOCAL_SEARCH_MAX_LP:
+                    break
+            if lp_calls >= _LOCAL_SEARCH_MAX_LP:
+                break
+    return best
+
+
+def swot_greedy_independent(
+    fabric: OpticalFabric, pattern: Pattern, polish: bool = True
+) -> Schedule:
+    """Beyond-paper INDEPENDENT-mode packing (no cross-step barrier)."""
+    n_planes = fabric.n_planes
+    bw = {j: fabric.plane_bandwidth(j) for j in range(n_planes)}
+    states = [
+        _PlaneState(config=fabric.initial_config(j), free=0.0)
+        for j in range(n_planes)
+    ]
+    splits: list[dict[int, float]] = []
+    for step in pattern.steps:
+        # Finish time if the whole step lands on plane j.
+        def finish(j: int) -> float:
+            extra = 0.0 if states[j].config == step.config else fabric.t_recfg
+            return states[j].free + extra + step.volume / bw[j]
+
+        j = min(range(n_planes), key=finish)
+        st = states[j]
+        if st.config != step.config:
+            st.free += fabric.t_recfg
+            st.config = step.config
+        st.free += step.volume / bw[j]
+        splits.append({j: step.volume})
+    schedule = execute(
+        fabric,
+        pattern,
+        Decisions(tuple(splits), mode=DependencyMode.INDEPENDENT),
+    )
+    if polish:
+        from repro.core.milp import lp_polish
+
+        schedule = lp_polish(schedule)
+    return schedule
+
+
+def swot_greedy(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    mode: DependencyMode = DependencyMode.CHAIN,
+) -> Schedule:
+    if mode is DependencyMode.CHAIN:
+        return swot_greedy_chain(fabric, pattern)
+    # Every CHAIN-legal schedule is INDEPENDENT-legal (the barrier is just
+    # conservative), so independent mode returns the better of step-packing
+    # and the chain scheduler -- splitting wins when steps are few or wide.
+    indep = swot_greedy_independent(fabric, pattern)
+    chain = swot_greedy_chain(fabric, pattern)
+    return chain if chain.cct < indep.cct else indep

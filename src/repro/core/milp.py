@@ -1,0 +1,429 @@
+"""The paper's MILP scheduler (Section 3.2, Table 1, Eqs. 1-11).
+
+Decision variables per (step i, plane j): transmitted volume ``d``, binary
+``u`` (plane active), binary ``r`` (plane reconfigures to step i's config),
+and the activity timings.  The paper tracks "does plane j's current config
+match step i" (``s``/``last_cfg``) with big-M bookkeeping; we linearize the
+same semantics exactly with *inheritance* binaries ``z[i, j, i']`` -- plane
+j at step i reuses the config installed at step i' (or the initial config,
+i' = -1) -- pruned to the (i, i') pairs whose configs actually match, which
+keeps the model tiny for real collectives (configs rarely repeat).
+
+Strengthenings over the literal paper formulation (all optimum-preserving):
+
+* the strawman-ICR schedule is feasible, so its CCT is both the big-M value
+  and an upper bound on the objective;
+* per-step work lower bounds ``se_i - se_{i-1} >= m_i / sum_j B_j`` (CHAIN
+  mode) and the aggregate-bandwidth bound on ``cct``;
+* symmetry breaking between interchangeable planes (identical bandwidth and
+  initial config) via monotone first-step volumes.
+
+The solver is scipy/HiGHS branch-and-cut (`scipy.optimize.milp`), standing
+in for the paper's Gurobi.  Times are modeled in milliseconds and volumes
+in megabytes so the constraint matrix stays well-conditioned.
+
+``lp_polish`` re-solves the model with the binary structure fixed to an
+existing schedule's discrete decisions -- an exact LP that finds the optimal
+continuous volume splits for that structure.  The greedy scheduler uses it
+to recover, e.g., "serve a step partially, then release the plane early to
+reconfigure" splits that water-filling cannot express.
+
+Solutions are re-executed through the earliest-start executor
+(`repro.core.simulator.execute`), yielding a validated legal ``Schedule``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+from scipy.optimize import Bounds, LinearConstraint
+from scipy.optimize import milp as _scipy_milp
+
+from repro.core.fabric import OpticalFabric
+from repro.core.patterns import Pattern
+from repro.core.schedule import Decisions, DependencyMode, Kind, Schedule
+from repro.core.simulator import execute
+
+_MS = 1e3  # seconds  -> model time unit (ms)
+_MB = 1e-6  # bytes   -> model volume unit (MB)
+
+
+@dataclasses.dataclass(frozen=True)
+class MilpResult:
+    schedule: Schedule
+    objective: float  # seconds, solver's CCT
+    mip_gap: float
+    status: int
+    message: str
+    n_binaries: int
+    n_constraints: int
+
+
+class _Vars:
+    """Flat variable index allocator."""
+
+    def __init__(self) -> None:
+        self.n = 0
+        self.lb: list[float] = []
+        self.ub: list[float] = []
+        self.integrality: list[int] = []
+
+    def add(self, lo: float, hi: float, integer: bool = False) -> int:
+        idx = self.n
+        self.n += 1
+        self.lb.append(lo)
+        self.ub.append(hi)
+        self.integrality.append(1 if integer else 0)
+        return idx
+
+
+class _Rows:
+    """Sparse constraint accumulator: lb <= A x <= ub."""
+
+    def __init__(self) -> None:
+        self.rows: list[int] = []
+        self.cols: list[int] = []
+        self.vals: list[float] = []
+        self.lb: list[float] = []
+        self.ub: list[float] = []
+        self.n = 0
+
+    def add(
+        self, terms: list[tuple[int, float]], lo: float, hi: float
+    ) -> None:
+        for col, val in terms:
+            self.rows.append(self.n)
+            self.cols.append(col)
+            self.vals.append(val)
+        self.lb.append(lo)
+        self.ub.append(hi)
+        self.n += 1
+
+
+def _strawman_cct_ms(fabric: OpticalFabric, pattern: Pattern) -> float:
+    """Strawman-ICR CCT in model units (feasible => valid upper bound)."""
+    total_bw = sum(
+        fabric.plane_bandwidth(j) * _MB / _MS for j in range(fabric.n_planes)
+    )
+    cct = 0.0
+    current = {fabric.initial_config(j) for j in range(fabric.n_planes)}
+    for step in pattern.steps:
+        if current != {step.config}:
+            cct += fabric.t_recfg * _MS
+            current = {step.config}
+        cct += step.volume * _MB / total_bw
+    return cct
+
+
+def _solve(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    mode: DependencyMode,
+    time_limit: float,
+    mip_rel_gap: float,
+    fixed: dict[str, np.ndarray] | None,
+) -> MilpResult:
+    steps = pattern.steps
+    n_steps = len(steps)
+    n_planes = fabric.n_planes
+    volumes = [s.volume * _MB for s in steps]  # MB
+    configs = [s.config for s in steps]
+    bw = [
+        fabric.plane_bandwidth(j) * _MB / _MS for j in range(n_planes)
+    ]  # MB per ms
+    total_bw = sum(bw)
+    t_recfg = fabric.t_recfg * _MS  # ms
+    initial = [fabric.initial_config(j) for j in range(n_planes)]
+
+    # Upper bound / big-M: the strawman schedule is feasible.
+    horizon = _strawman_cct_ms(fabric, pattern) + t_recfg
+    big_m = horizon
+
+    def _fix(kind: str, i: int, j: int) -> tuple[int, int] | tuple[None, None]:
+        if fixed is None:
+            return None, None
+        val = int(fixed[kind][i, j])
+        return val, val
+
+    v = _Vars()
+    d = [[v.add(0.0, volumes[i]) for _ in range(n_planes)] for i in range(n_steps)]
+    u = [
+        [
+            v.add(*(_fix("u", i, j) if fixed else (0, 1)), integer=fixed is None)
+            for j in range(n_planes)
+        ]
+        for i in range(n_steps)
+    ]
+    r = [
+        [
+            v.add(*(_fix("r", i, j) if fixed else (0, 1)), integer=fixed is None)
+            for j in range(n_planes)
+        ]
+        for i in range(n_steps)
+    ]
+    xs = [[v.add(0.0, horizon) for _ in range(n_planes)] for _ in range(n_steps)]
+    xe = [[v.add(0.0, horizon) for _ in range(n_planes)] for _ in range(n_steps)]
+    rs = [[v.add(0.0, horizon) for _ in range(n_planes)] for _ in range(n_steps)]
+    re = [[v.add(0.0, horizon) for _ in range(n_planes)] for _ in range(n_steps)]
+    pe = [[v.add(0.0, horizon) for _ in range(n_planes)] for _ in range(n_steps)]
+    se = [v.add(0.0, horizon) for _ in range(n_steps)]
+    cct = v.add(0.0, horizon)
+
+    # Inheritance binaries z[(i, j, i')]: plane j at step i reuses the config
+    # installed at step i' (i' = -1 denotes the initial config), pruned to
+    # matching configs.  With fixed (u, r), inheritance is implied and the z
+    # stay free continuous in [0, 1] -- the LP relaxation is exact for them.
+    z: dict[tuple[int, int, int], int] = {}
+    sources: dict[tuple[int, int], list[int]] = {}
+    for i in range(n_steps):
+        for j in range(n_planes):
+            src: list[int] = []
+            if initial[j] is not None and initial[j] == configs[i]:
+                src.append(-1)
+            for ip in range(i):
+                if configs[ip] == configs[i]:
+                    src.append(ip)
+            sources[(i, j)] = src
+            for ip in src:
+                z[(i, j, ip)] = v.add(0, 1, integer=fixed is None)
+
+    c = _Rows()
+    inf = np.inf
+    for i in range(n_steps):
+        # (Eq.1) volume conservation.
+        c.add([(d[i][j], 1.0) for j in range(n_planes)], volumes[i], volumes[i])
+        for j in range(n_planes):
+            # d active-gating (linearization of d*u).
+            c.add([(d[i][j], 1.0), (u[i][j], -volumes[i])], -inf, 0.0)
+            # (Eq.2) transmission duration.
+            c.add(
+                [(xe[i][j], 1.0), (xs[i][j], -1.0), (d[i][j], -1.0 / bw[j])],
+                0.0,
+                0.0,
+            )
+            # (Eq.3) reconfiguration duration.
+            c.add(
+                [(re[i][j], 1.0), (rs[i][j], -1.0), (r[i][j], -t_recfg)],
+                0.0,
+                0.0,
+            )
+            # (Eq.4) P1: transmit only after own reconfiguration.
+            c.add([(xs[i][j], 1.0), (re[i][j], -1.0)], 0.0, inf)
+            # (Eq.5/6) config availability: active needs fresh reconfig or
+            # inheritance from a matching earlier installation.
+            terms = [(u[i][j], 1.0), (r[i][j], -1.0)]
+            terms += [(z[(i, j, ip)], -1.0) for ip in sources[(i, j)]]
+            c.add(terms, -inf, 0.0)
+            for ip in sources[(i, j)]:
+                if ip >= 0:
+                    # Inherited config must actually have been installed.
+                    c.add([(z[(i, j, ip)], 1.0), (r[ip][j], -1.0)], -inf, 0.0)
+                # ... with no intervening reconfiguration on this plane.
+                for mid in range(ip + 1 if ip >= 0 else 0, i):
+                    c.add([(z[(i, j, ip)], 1.0), (r[mid][j], 1.0)], -inf, 1.0)
+            # (Eq.7-9) per-plane activity chaining (P2).
+            if i == 0:
+                c.add([(pe[i][j], 1.0)], 0.0, 0.0)
+            else:
+                c.add([(pe[i][j], 1.0), (pe[i - 1][j], -1.0)], 0.0, inf)
+                c.add(
+                    [
+                        (pe[i][j], 1.0),
+                        (xe[i - 1][j], -1.0),
+                        (u[i - 1][j], -big_m),
+                    ],
+                    -big_m,
+                    inf,
+                )
+                c.add(
+                    [
+                        (pe[i][j], 1.0),
+                        (re[i - 1][j], -1.0),
+                        (r[i - 1][j], -big_m),
+                    ],
+                    -big_m,
+                    inf,
+                )
+            c.add([(rs[i][j], 1.0), (pe[i][j], -1.0)], 0.0, inf)
+            # (Eq.10) step completion time covers active transmissions.
+            c.add(
+                [(se[i], 1.0), (xe[i][j], -1.0), (u[i][j], -big_m)],
+                -big_m,
+                inf,
+            )
+            # (Eq.11) P3 cross-step synchronization (chain mode only).
+            if mode is DependencyMode.CHAIN and i > 0:
+                c.add([(xs[i][j], 1.0), (se[i - 1], -1.0)], 0.0, inf)
+        c.add([(cct, 1.0), (se[i], -1.0)], 0.0, inf)
+        # Valid inequality: a step window cannot beat aggregate bandwidth.
+        if mode is DependencyMode.CHAIN:
+            if i == 0:
+                c.add([(se[i], 1.0)], volumes[i] / total_bw, inf)
+            else:
+                c.add(
+                    [(se[i], 1.0), (se[i - 1], -1.0)],
+                    volumes[i] / total_bw,
+                    inf,
+                )
+
+    # Aggregate-work lower bound on the objective.
+    c.add([(cct, 1.0)], sum(volumes) / total_bw, inf)
+    # Symmetry breaking: interchangeable planes take monotone first-step
+    # volumes (identical bandwidth and initial config only).
+    if fixed is None:
+        for j in range(n_planes - 1):
+            if (
+                bw[j] == bw[j + 1]
+                and initial[j] == initial[j + 1]
+                and n_steps > 0
+            ):
+                c.add([(d[0][j], 1.0), (d[0][j + 1], -1.0)], 0.0, inf)
+
+    objective = np.zeros(v.n)
+    objective[cct] = 1.0
+
+    from scipy.sparse import coo_matrix
+
+    a_mat = coo_matrix((c.vals, (c.rows, c.cols)), shape=(c.n, v.n)).tocsr()
+    res = None
+    for presolve in (True, False):  # HiGHS presolve occasionally errors
+        res = _scipy_milp(
+            c=objective,
+            constraints=[
+                LinearConstraint(a_mat, np.array(c.lb), np.array(c.ub))
+            ],
+            integrality=np.array(v.integrality),
+            bounds=Bounds(np.array(v.lb), np.array(v.ub)),
+            options={
+                "time_limit": time_limit,
+                "mip_rel_gap": mip_rel_gap,
+                "presolve": presolve,
+            },
+        )
+        if res.x is not None:
+            break
+    if res is None or res.x is None:
+        raise RuntimeError(
+            f"MILP solve failed for {pattern.name}: {res.message}"
+        )
+
+    splits: list[dict[int, float]] = []
+    for i in range(n_steps):
+        step_split: dict[int, float] = {}
+        for j in range(n_planes):
+            vol_mb = float(res.x[d[i][j]])
+            if vol_mb > 1e-9:
+                step_split[j] = vol_mb / _MB  # back to bytes
+        # Renormalize rounding drift so conservation is exact.
+        total = sum(step_split.values())
+        if total > 0:
+            scale = steps[i].volume / total
+            step_split = {jj: vol * scale for jj, vol in step_split.items()}
+        splits.append(step_split)
+
+    schedule = execute(fabric, pattern, Decisions(tuple(splits), mode=mode))
+    n_bin = int(np.sum(np.array(v.integrality) == 1))
+    return MilpResult(
+        schedule=schedule,
+        objective=float(res.fun) / _MS,
+        mip_gap=float(getattr(res, "mip_gap", 0.0) or 0.0),
+        status=int(res.status),
+        message=str(res.message),
+        n_binaries=n_bin,
+        n_constraints=c.n,
+    )
+
+
+def solve_milp(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    mode: DependencyMode = DependencyMode.CHAIN,
+    time_limit: float = 60.0,
+    mip_rel_gap: float = 1e-4,
+) -> MilpResult:
+    """Solve the paper's scheduling MILP and return a validated schedule."""
+    return _solve(fabric, pattern, mode, time_limit, mip_rel_gap, fixed=None)
+
+
+def derive_reconfigs(
+    fabric: OpticalFabric, pattern: Pattern, u: np.ndarray
+) -> np.ndarray:
+    """Lazy reconfiguration structure implied by serving sets ``u``.
+
+    A plane reconfigures (as early as possible) before its next served step
+    whose config differs from what it holds -- optimal for fixed ``u``,
+    since delaying a needed reconfiguration never helps and extra ones are
+    pure overhead.
+    """
+    n_steps, n_planes = u.shape
+    r = np.zeros_like(u)
+    config: list[int | None] = [
+        fabric.initial_config(j) for j in range(n_planes)
+    ]
+    for i in range(n_steps):
+        cfg = pattern.steps[i].config
+        for j in range(n_planes):
+            if u[i, j] and config[j] != cfg:
+                r[i, j] = 1
+                config[j] = cfg
+    return r
+
+
+def solve_fixed_structure(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    u: np.ndarray,
+    mode: DependencyMode = DependencyMode.CHAIN,
+    time_limit: float = 30.0,
+) -> Schedule | None:
+    """Exact LP over splits/timing for a fixed serving-set structure."""
+    if not np.all(u.sum(axis=1) >= 1):
+        return None  # some step has no server
+    r = derive_reconfigs(fabric, pattern, u)
+    try:
+        return _solve(
+            fabric,
+            pattern,
+            mode,
+            time_limit,
+            1e-9,
+            fixed={"u": u, "r": r},
+        ).schedule
+    except RuntimeError:
+        return None
+
+
+def _structure_of(schedule: Schedule) -> dict[str, np.ndarray]:
+    """Extract the (u, r) binary structure realized by a schedule."""
+    n_steps = schedule.pattern.n_steps
+    n_planes = schedule.fabric.n_planes
+    u = np.zeros((n_steps, n_planes), dtype=np.int64)
+    r = np.zeros((n_steps, n_planes), dtype=np.int64)
+    for a in schedule.activities:
+        if a.kind is Kind.XMIT and a.volume > 1e-9:
+            u[a.step, a.plane] = 1
+        elif a.kind is Kind.RECFG:
+            r[a.step, a.plane] = 1
+    return {"u": u, "r": r}
+
+
+def lp_polish(schedule: Schedule, time_limit: float = 30.0) -> Schedule:
+    """Optimal continuous splits for a schedule's discrete structure.
+
+    Fixes (u, r) to the given schedule's decisions and re-solves the exact
+    LP, recovering splits such as "serve partially, release the plane early
+    to reconfigure" that constructive heuristics cannot express.  Returns
+    whichever of (input, polished) has the lower CCT.
+    """
+    fixed = _structure_of(schedule)
+    polished = solve_fixed_structure(
+        schedule.fabric,
+        schedule.pattern,
+        fixed["u"],
+        mode=schedule.mode,
+        time_limit=time_limit,
+    )
+    if polished is None:
+        return schedule
+    return polished if polished.cct < schedule.cct else schedule

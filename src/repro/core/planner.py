@@ -1,0 +1,154 @@
+"""Map a training/serving step's collectives to SWOT schedule requests.
+
+This is the paper's Phase-1 profiling step, done statically from the
+architecture config + mesh + parallelism plan: every collective the jitted
+step will issue (DP gradient sync, TP activation all-reduces, MoE EP
+all-to-alls) becomes a ``CollectiveRequest`` that the shim schedules on
+the optical fabric before the job starts.
+
+Communicator -> optical fabric mapping: each rank of the relevant mesh
+axis is one optical endpoint (the ranks live on distinct hosts at pod
+scale); per-node volume is the algorithm-level buffer size.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.core.shim import CollectiveRequest
+from repro.models.common import param_count
+from repro.sharding.rules import MeshContext
+
+_BF16 = 2
+
+
+def _dp_gradient_requests(
+    cfg: ArchConfig, ctx: MeshContext, specs: Any
+) -> list[CollectiveRequest]:
+    """Gradient sync over the data axes (hierarchical when multi-pod)."""
+    bytes_total = param_count(specs) * _BF16
+    reqs = []
+    inner = ctx.mesh.shape["data"]
+    outer = ctx.mesh.shape.get("pod", 1)
+    if cfg.fsdp_params:
+        # FSDP: reduce-scatter grads + all-gather params per step.
+        if inner >= 2 and (inner & (inner - 1)) == 0:
+            reqs.append(
+                CollectiveRequest(
+                    "reduce_scatter", inner, bytes_total, "dp_grad_rs"
+                )
+            )
+            reqs.append(
+                CollectiveRequest(
+                    "all_gather", inner, bytes_total, "dp_param_ag"
+                )
+            )
+    else:
+        if inner >= 2 and (inner & (inner - 1)) == 0:
+            reqs.append(
+                CollectiveRequest(
+                    "rabenseifner_allreduce",
+                    inner,
+                    bytes_total,
+                    "dp_grad_allreduce",
+                )
+            )
+    if outer >= 2:
+        reqs.append(
+            CollectiveRequest(
+                "ring_allreduce",
+                outer,
+                bytes_total / max(inner, 1),
+                "pod_grad_allreduce",
+            )
+        )
+    return reqs
+
+
+def _tp_activation_requests(
+    cfg: ArchConfig, ctx: MeshContext, cell: ShapeCell
+) -> list[CollectiveRequest]:
+    tp = ctx.tp_size
+    if tp < 2 or tp & (tp - 1):
+        return []
+    if cell.kind in ("train", "prefill"):
+        tokens_local = (
+            max(cell.global_batch // max(ctx.dp_size, 1), 1) * cell.seq_len
+        )
+    else:  # decode: one token per sequence
+        tokens_local = max(cell.global_batch // max(ctx.dp_size, 1), 1)
+    act_bytes = tokens_local * cfg.d_model * _BF16
+    # Megatron TP: 2 all-reduces forward (+2 backward when training)
+    # per transformer layer.
+    per_layer = 4 if cell.kind == "train" else 2
+    n_attn_layers = (
+        cfg.n_layers
+        if cfg.family != "hybrid"
+        else cfg.n_layers // max(cfg.hybrid_period, 1)
+    )
+    if cfg.family == "ssm":
+        n_attn_layers = 0  # attention-free: TP collectives only on FFN/SSM
+    if n_attn_layers == 0:
+        return []
+    return [
+        CollectiveRequest(
+            "rabenseifner_allreduce",
+            tp,
+            act_bytes,
+            f"tp_act_allreduce_x{per_layer * n_attn_layers}",
+        )
+    ]
+
+
+def _moe_requests(
+    cfg: ArchConfig, ctx: MeshContext, cell: ShapeCell
+) -> list[CollectiveRequest]:
+    if not cfg.is_moe:
+        return []
+    ep = ctx.tp_size
+    if ep < 2:
+        return []
+    import math
+
+    tokens_local = (
+        cell.global_batch // max(ctx.dp_size, 1) * cell.seq_len
+        if cell.kind != "decode"
+        else max(cell.global_batch // max(ctx.dp_size, 1), 1)
+    )
+    if cfg.moe_token_slice and tokens_local % ep == 0:
+        tokens_local //= ep  # EP token slicing shrinks the dispatch
+    e_pad = math.ceil(cfg.n_experts / ep) * ep
+    capacity = max(
+        8, math.ceil(tokens_local * cfg.top_k * cfg.capacity_factor / e_pad)
+    )
+    buf_bytes = e_pad * capacity * cfg.d_model * _BF16
+    per_layer = 4 if cell.kind == "train" else 2  # fwd + bwd pairs
+    return [
+        CollectiveRequest(
+            "pairwise_alltoall",
+            ep,
+            buf_bytes,
+            f"moe_ep_alltoall_x{per_layer * cfg.n_layers}",
+        )
+    ]
+
+
+def profile_train_step(
+    cfg: ArchConfig, ctx: MeshContext, cell: ShapeCell, specs: Any
+) -> list[CollectiveRequest]:
+    """Every collective one optimizer step will issue (Phase-1 profile)."""
+    reqs: list[CollectiveRequest] = []
+    reqs += _dp_gradient_requests(cfg, ctx, specs)
+    reqs += _tp_activation_requests(cfg, ctx, cell)
+    reqs += _moe_requests(cfg, ctx, cell)
+    return reqs
+
+
+def profile_serve_step(
+    cfg: ArchConfig, ctx: MeshContext, cell: ShapeCell
+) -> list[CollectiveRequest]:
+    reqs: list[CollectiveRequest] = []
+    reqs += _tp_activation_requests(cfg, ctx, cell)
+    reqs += _moe_requests(cfg, ctx, cell)
+    return reqs

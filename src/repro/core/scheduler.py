@@ -1,0 +1,109 @@
+"""SWOT scheduler facade: exact MILP when tractable, greedy at scale."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.baselines import (
+    InfeasibleError,
+    ideal_cct,
+    one_shot,
+    strawman_icr,
+)
+from repro.core.fabric import OpticalFabric
+from repro.core.greedy import swot_greedy
+from repro.core.milp import solve_milp
+from repro.core.patterns import Pattern
+from repro.core.schedule import DependencyMode, Schedule
+
+# Above this many (step, plane) binaries the MILP hands over to the greedy
+# (+ LP-polished structure local search), which empirically dominates HiGHS
+# branch-and-cut beyond this size within any reasonable time limit.
+_MILP_BINARY_BUDGET = 70
+
+
+@dataclasses.dataclass(frozen=True)
+class SwotPlan:
+    """A scheduled collective plus the baselines it is compared against."""
+
+    pattern: Pattern
+    fabric: OpticalFabric
+    schedule: Schedule
+    method: str  # "milp" | "greedy"
+    cct: float
+    strawman_cct: float | None
+    one_shot_cct: float | None  # None when one-shot is infeasible
+    ideal_cct: float
+
+    @property
+    def vs_strawman(self) -> float | None:
+        if self.strawman_cct is None or self.strawman_cct == 0:
+            return None
+        return 1.0 - self.cct / self.strawman_cct
+
+    @property
+    def vs_one_shot(self) -> float | None:
+        if self.one_shot_cct is None or self.one_shot_cct == 0:
+            return None
+        return 1.0 - self.cct / self.one_shot_cct
+
+
+def swot_schedule(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    method: str = "auto",
+    mode: DependencyMode = DependencyMode.CHAIN,
+    milp_time_limit: float = 30.0,
+) -> tuple[Schedule, str]:
+    """Schedule ``pattern`` on ``fabric`` with SWOT overlap optimization."""
+    if method == "auto":
+        n_bin = 2 * pattern.n_steps * fabric.n_planes
+        method = "milp" if n_bin <= _MILP_BINARY_BUDGET else "greedy"
+    if method == "milp":
+        greedy_schedule = swot_greedy(fabric, pattern, mode=mode)
+        try:
+            milp_schedule = solve_milp(
+                fabric, pattern, mode=mode, time_limit=milp_time_limit
+            ).schedule
+        except RuntimeError:
+            return greedy_schedule, "greedy"  # solver hiccup: greedy+LP
+        # The greedy occasionally matches MILP under a solver time limit;
+        # keep whichever realized schedule is faster.
+        if greedy_schedule.cct < milp_schedule.cct:
+            return greedy_schedule, "greedy"
+        return milp_schedule, "milp"
+    if method == "greedy":
+        return swot_greedy(fabric, pattern, mode=mode), "greedy"
+    raise ValueError(f"unknown method {method!r}")
+
+
+def plan_collective(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    method: str = "auto",
+    mode: DependencyMode = DependencyMode.CHAIN,
+    one_shot_planes: int | None = None,
+    milp_time_limit: float = 30.0,
+) -> SwotPlan:
+    """Produce the full SWOT plan incl. baseline CCTs for one collective."""
+    schedule, used = swot_schedule(
+        fabric, pattern, method=method, mode=mode,
+        milp_time_limit=milp_time_limit,
+    )
+    strawman = strawman_icr(fabric, pattern)
+    try:
+        oneshot_cct: float | None = one_shot(
+            fabric, pattern, n_planes=one_shot_planes
+        ).cct
+    except InfeasibleError:
+        oneshot_cct = None
+    return SwotPlan(
+        pattern=pattern,
+        fabric=fabric,
+        schedule=schedule,
+        method=used,
+        cct=schedule.cct,
+        strawman_cct=strawman.cct,
+        one_shot_cct=oneshot_cct,
+        ideal_cct=ideal_cct(fabric, pattern),
+    )

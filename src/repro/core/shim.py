@@ -1,0 +1,166 @@
+"""The SWOT shim and optical controller (paper Section 3.1).
+
+The shim is the mediation layer between distributed processes and the
+optical fabric.  It runs in two phases:
+
+* **Phase 1 (pre-configuration)** -- every collective the workload will
+  issue is profiled as a ``CollectiveRequest`` (algorithm, communicator
+  size, message bytes).  ``SwotShim.install`` runs the SWOT scheduler once
+  per unique request signature and installs the resulting schedules both
+  locally and on the ``OpticalController``.
+* **Phase 2 (runtime)** -- ``SwotShim.intercept`` replaces the collective
+  call: the leader process looks up the installed schedule, triggers the
+  controller, and propagates the go-signal to followers; the call returns
+  the same semantics as the underlying collective (our JAX comms backend
+  computes the actual values) plus the modeled completion time.
+
+On real hardware the controller would issue OCS RPCs; here it advances a
+simulated clock so end-to-end drivers can report per-iteration optical
+timelines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+from repro.core.fabric import OpticalFabric
+from repro.core.patterns import get_pattern
+from repro.core.schedule import DependencyMode, Schedule
+from repro.core.scheduler import SwotPlan, plan_collective
+
+# Collectives whose steps carry no data dependency can use the beyond-paper
+# INDEPENDENT mode (DESIGN.md section 9).
+_INDEPENDENT_SAFE = frozenset({"pairwise_alltoall"})
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRequest:
+    """Profile of one collective call (the shim's interception key)."""
+
+    algorithm: str  # key into repro.core.patterns.ALGORITHMS
+    n_nodes: int  # communicator size (optical endpoints)
+    size: float  # per-node buffer bytes
+    tag: str = ""  # human-readable origin, e.g. "dp_grad_sync"
+
+    @property
+    def signature(self) -> tuple:
+        return (self.algorithm, self.n_nodes, round(self.size))
+
+
+@dataclasses.dataclass
+class _ControllerLog:
+    reconfigurations: int = 0
+    busy_seconds: float = 0.0
+
+
+class OpticalController:
+    """Programmable optical-path control (simulated).
+
+    Accepts installed schedules and, per triggered collective, replays the
+    schedule's reconfiguration events against a simulated clock.
+    """
+
+    def __init__(self, fabric: OpticalFabric) -> None:
+        self.fabric = fabric
+        self.clock = 0.0
+        self.log = _ControllerLog()
+        self._installed: dict[tuple, Schedule] = {}
+
+    def install(self, signature: tuple, schedule: Schedule) -> None:
+        self._installed[signature] = schedule
+
+    def trigger(self, signature: tuple) -> float:
+        """Execute one installed collective; returns its CCT."""
+        schedule = self._installed[signature]
+        self.log.reconfigurations += schedule.total_reconfigurations
+        self.log.busy_seconds += schedule.cct
+        self.clock += schedule.cct
+        return schedule.cct
+
+
+class SwotShim:
+    """Per-host mediation layer; preserves collective API semantics."""
+
+    def __init__(
+        self,
+        fabric: OpticalFabric,
+        controller: OpticalController | None = None,
+        method: str = "auto",
+        allow_independent: bool = False,
+        milp_time_limit: float = 60.0,
+    ) -> None:
+        self.fabric = fabric
+        self.controller = controller or OpticalController(fabric)
+        self.method = method
+        self.allow_independent = allow_independent
+        self.milp_time_limit = milp_time_limit
+        self._plans: "OrderedDict[tuple, SwotPlan]" = OrderedDict()
+        self.interceptions = 0
+        self.misses = 0
+
+    # -- Phase 1 -----------------------------------------------------------
+    def install(self, requests: list[CollectiveRequest]) -> None:
+        for req in requests:
+            self._plan_for(req)
+
+    def _plan_for(self, req: CollectiveRequest) -> SwotPlan:
+        sig = req.signature
+        if sig in self._plans:
+            return self._plans[sig]
+        mode = (
+            DependencyMode.INDEPENDENT
+            if self.allow_independent and req.algorithm in _INDEPENDENT_SAFE
+            else DependencyMode.CHAIN
+        )
+        pattern = get_pattern(req.algorithm, req.n_nodes, req.size)
+        fabric = self.fabric
+        if fabric.initial_configs is None:
+            fabric = fabric.prestaged(pattern.steps[0].config)
+        plan = plan_collective(
+            fabric,
+            pattern,
+            method=self.method,
+            mode=mode,
+            milp_time_limit=self.milp_time_limit,
+        )
+        self._plans[sig] = plan
+        self.controller.install(sig, plan.schedule)
+        return plan
+
+    # -- Phase 2 -----------------------------------------------------------
+    def intercept(self, req: CollectiveRequest) -> SwotPlan:
+        """Leader-side interception of one collective call.
+
+        Schedules are expected to be pre-installed (Phase 1); calls with no
+        installed schedule are planned on the fly (a "miss", counted --
+        production deployments want this to be zero).
+        """
+        self.interceptions += 1
+        sig = req.signature
+        if sig not in self._plans:
+            self.misses += 1
+        plan = self._plan_for(req)
+        self.controller.trigger(sig)
+        return plan
+
+    @property
+    def plans(self) -> list[SwotPlan]:
+        return list(self._plans.values())
+
+    def iteration_report(self) -> str:
+        lines = [
+            f"optical clock: {self.controller.clock * 1e6:.1f} us, "
+            f"{self.controller.log.reconfigurations} reconfigurations, "
+            f"{self.interceptions} collectives intercepted "
+            f"({self.misses} unplanned)"
+        ]
+        for sig, plan in self._plans.items():
+            gain = plan.vs_strawman
+            lines.append(
+                f"  {sig[0]} n={sig[1]} {sig[2] / 1e6:.2f}MB: "
+                f"cct={plan.cct * 1e6:.1f}us "
+                f"[{plan.method}] vs strawman "
+                f"{'-' if gain is None else f'{gain:+.1%}'}"
+            )
+        return "\n".join(lines)

@@ -1,0 +1,174 @@
+"""Pallas TPU flash attention: blocked online-softmax, causal/SWA, GQA.
+
+TPU-native tiling: grid (batch*q_heads, n_q_blocks, n_kv_blocks) with the
+KV dimension innermost (TPU executes it sequentially), carrying the
+online-softmax state (m, l, acc) in VMEM scratch across KV steps.  Block
+shapes default to 128/512 so the MXU sees 128-aligned dot dims and the
+working set (q block + kv block + accumulator) stays well inside the
+~16 MB VMEM budget:
+
+    qb*d + 2*kb*d (bf16) + qb*d (f32 acc) ~= 0.6 MB at qb=kb=512, d=128.
+
+GQA folds the query-head group into the grid and maps the KV block index
+back to the shared KV head (``bh // group``).
+
+Validated in interpret mode against `repro.kernels.ref.ref_attention`
+(CPU container; TPU is the target, not the runtime).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,  # (1, qb, d)
+    k_ref,  # (1, kb, d)
+    v_ref,  # (1, kb, d)
+    o_ref,  # (1, qb, d)
+    m_scr,  # (qb, 1) f32
+    l_scr,  # (qb, 1) f32
+    acc_scr,  # (qb, d) f32
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    q_block: int,
+    kv_block: int,
+    kv_len: int,
+    n_kv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (qb, d)
+    k = k_ref[0].astype(jnp.float32)  # (kb, d)
+    scores = jax.lax.dot_general(
+        q,
+        k,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale  # (qb, kb)
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 0
+    )
+    kv_pos = ki * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1
+    )
+    mask = kv_pos < kv_len
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= q_pos - kv_pos < window
+    scores = jnp.where(mask, scores, _NEG_INF)
+
+    m_prev = m_scr[...]  # (qb, 1)
+    l_prev = l_scr[...]
+    m_blk = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_blk)
+    p = jnp.exp(scores - m_new)  # (qb, kb)
+    correction = jnp.exp(m_prev - m_new)  # (qb, 1)
+    v = v_ref[0].astype(jnp.float32)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_scr[...] = acc_scr[...] * correction + pv
+    l_scr[...] = l_prev * correction + jnp.sum(p, axis=1, keepdims=True)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "window",
+        "q_block",
+        "kv_block",
+        "interpret",
+    ),
+)
+def flash_attention_bhsd(
+    q: jax.Array,  # (BHq, Sq, D)
+    k: jax.Array,  # (BHkv, Skv, D)
+    v: jax.Array,  # (BHkv, Skv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Head-major flash attention; group = BHq // BHkv."""
+    bhq, sq, d = q.shape
+    bhkv, skv, _ = k.shape
+    group = bhq // bhkv
+    scale = 1.0 / math.sqrt(d)
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    n_q = math.ceil(sq / q_block)
+    n_kv = math.ceil(skv / kv_block)
+    sq_pad, skv_pad = n_q * q_block, n_kv * kv_block
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0)))
+    if skv_pad != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0)))
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        q_block=q_block,
+        kv_block=kv_block,
+        kv_len=skv,
+        n_kv=n_kv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bhq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec(
+                (1, q_block, d), lambda bh, qi, ki: (bh, qi, 0)
+            ),
+            pl.BlockSpec(
+                (1, kv_block, d),
+                lambda bh, qi, ki, group=group: (bh // group, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, kv_block, d),
+                lambda bh, qi, ki, group=group: (bh // group, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, q_block, d), lambda bh, qi, ki: (bh, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

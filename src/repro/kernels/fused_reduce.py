@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused local combine for reduce-scatter steps.
+
+The compute inside the paper's collectives: at every reduce-scatter step a
+node adds the chunk received from its pairing peer into its partial
+buffer (paper Fig. 3).  Fused add + optional cast in one VMEM pass,
+tiled (8, 1024) to match the VPU lane layout, instead of separate
+convert/add HLOs touching HBM twice.
+
+Validated in interpret mode against `repro.kernels.ref.ref_reduce`.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK_ROWS = 8
+_BLOCK_COLS = 1024
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] = (a + b).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("out_dtype", "interpret")
+)
+def fused_reduce_flat(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Elementwise a + b with f32 accumulation over flattened buffers."""
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch: {a.shape} vs {b.shape}")
+    out_dtype = out_dtype or a.dtype
+    orig_shape = a.shape
+    n = math.prod(orig_shape)
+    block = _BLOCK_ROWS * _BLOCK_COLS
+    n_blocks = max(1, math.ceil(n / block))
+    n_pad = n_blocks * block
+    af = jnp.ravel(a)
+    bf = jnp.ravel(b)
+    if n_pad != n:
+        af = jnp.pad(af, (0, n_pad - n))
+        bf = jnp.pad(bf, (0, n_pad - n))
+    af = af.reshape(n_blocks * _BLOCK_ROWS, _BLOCK_COLS)
+    bf = bf.reshape(n_blocks * _BLOCK_ROWS, _BLOCK_COLS)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((_BLOCK_ROWS, _BLOCK_COLS), lambda i: (i, 0)),
+            pl.BlockSpec((_BLOCK_ROWS, _BLOCK_COLS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK_ROWS, _BLOCK_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(af.shape, out_dtype),
+        interpret=interpret,
+    )(af, bf)
+    return jnp.ravel(out)[:n].reshape(orig_shape)

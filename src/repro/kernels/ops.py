@@ -1,0 +1,115 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Model-facing shapes in, kernel-native shapes inside.  ``interpret=None``
+auto-selects: real lowering on TPU, interpret mode elsewhere (this CPU
+container validates kernel semantics; TPU is the deployment target).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.fused_reduce import fused_reduce_flat
+from repro.kernels.rmsnorm import rmsnorm_2d
+from repro.kernels.ssd_scan import ssd_scan_bhsp
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,  # (B, Skv, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Model-layout flash attention: (B, S, H, D) in and out."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    # Head-major fold: (B, S, H, D) -> (B*H, S, D); queries of one KV
+    # group stay adjacent so the kernel's bh // group indexing works.
+    qm = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    km = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    vm = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    out = flash_attention_bhsd(
+        qm,
+        km,
+        vm,
+        causal=causal,
+        window=window,
+        q_block=q_block,
+        kv_block=kv_block,
+        interpret=_auto_interpret(interpret),
+    )
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
+
+
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) post-softplus
+    a_log: jax.Array,  # (H,)
+    b: jax.Array,  # (B, S, N)
+    c: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Mamba2 SSD with the kernel's (BH, S, *) layout handled here."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+    dt32 = dt.astype(jnp.float32)
+    xdt = (x.astype(jnp.float32) * dt32[..., None]).transpose(0, 2, 1, 3)
+    xdt = xdt.reshape(bsz * h, s, p)
+    logd = (dt32 * a[None, None]).transpose(0, 2, 1).reshape(bsz * h, s, 1)
+    bb = jnp.broadcast_to(
+        b.astype(jnp.float32)[:, None], (bsz, h, s, n)
+    ).reshape(bsz * h, s, n)
+    cc = jnp.broadcast_to(
+        c.astype(jnp.float32)[:, None], (bsz, h, s, n)
+    ).reshape(bsz * h, s, n)
+    y = ssd_scan_bhsp(
+        xdt, logd, bb, cc, chunk=chunk, interpret=_auto_interpret(interpret)
+    )
+    return y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3).astype(x.dtype)
+
+
+def fused_reduce(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    return fused_reduce_flat(
+        a, b, out_dtype=out_dtype, interpret=_auto_interpret(interpret)
+    )
+
+
+def rmsnorm(
+    x: jax.Array,  # (..., D)
+    weight: jax.Array,  # (D,)
+    *,
+    eps: float = 1e-6,
+    offset: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    shape = x.shape
+    out = rmsnorm_2d(
+        x.reshape(-1, shape[-1]),
+        weight,
+        eps=eps,
+        offset=offset,
+        interpret=_auto_interpret(interpret),
+    )
+    return out.reshape(shape)

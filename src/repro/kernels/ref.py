@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(
+    q: jax.Array,  # (BHq, Sq, D)
+    k: jax.Array,  # (BHkv, Skv, D)
+    v: jax.Array,  # (BHkv, Skv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    bhq, sq, d = q.shape
+    bhkv, skv, _ = k.shape
+    group = bhq // bhkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    scores = jnp.einsum(
+        "bqd,bkd->bqk",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) / jnp.sqrt(jnp.float32(d))
+    q_pos = jnp.arange(sq)[:, None]
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= q_pos - kv_pos < window
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_ssd(
+    xdt: jax.Array,  # (BH, S, P)
+    logd: jax.Array,  # (BH, S, 1)
+    b: jax.Array,  # (BH, S, N)
+    c: jax.Array,  # (BH, S, N)
+) -> jax.Array:
+    """Sequential SSD recurrence on pre-scaled inputs."""
+    bh, s, p = xdt.shape
+    n = b.shape[-1]
+    state0 = jnp.zeros((bh, p, n), jnp.float32)
+
+    def step(state, inputs):
+        x_t, ld_t, b_t, c_t = inputs  # (BH,P), (BH,1), (BH,N), (BH,N)
+        decay = jnp.exp(ld_t.astype(jnp.float32))  # (BH, 1)
+        update = jnp.einsum(
+            "bp,bn->bpn", x_t.astype(jnp.float32), b_t.astype(jnp.float32)
+        )
+        state = state * decay[..., None] + update
+        y_t = jnp.einsum("bpn,bn->bp", state, c_t.astype(jnp.float32))
+        return state, y_t
+
+    xs = (
+        xdt.transpose(1, 0, 2),
+        logd.transpose(1, 0, 2),
+        b.transpose(1, 0, 2),
+        c.transpose(1, 0, 2),
+    )
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2).astype(xdt.dtype)
+
+
+def ref_reduce(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return (
+        a.astype(jnp.float32) + b.astype(jnp.float32)
+    ).astype(out_dtype)
+
+
+def ref_rmsnorm(
+    x: jax.Array,
+    weight: jax.Array,
+    *,
+    eps: float = 1e-6,
+    offset: bool = False,
+) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    out = normed * (1.0 + w) if offset else normed * w
+    return out.astype(x.dtype)

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid (batch*heads, n_chunks) with the chunk dimension innermost; the
+inter-chunk recurrent state (P x N) lives in VMEM scratch and is carried
+across chunk steps.  Within a chunk the dual ("attention-like") form runs
+on the MXU:
+
+    y_intra = ((C B^T) o decay_mask) @ (dt * x)
+    y_inter = (C exp(l)) @ S_prev
+    S_new   = exp(l_Q) S_prev + (B * exp(l_Q - l))^T @ (dt * x)
+
+Inputs are pre-scaled by the wrapper (`repro.kernels.ops.ssd_scan`):
+``xdt = x * dt`` (BH, S, P) and ``logd = dt * A`` (BH, S, 1).  Chunk size
+defaults to 128 so the (Q x Q) intra-chunk score tile and the (P x N)
+state both sit comfortably in VMEM.
+
+Validated in interpret mode against `repro.kernels.ref.ref_ssd`.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    xdt_ref,  # (1, Q, P)
+    logd_ref,  # (1, Q, 1)
+    b_ref,  # (1, Q, N)
+    c_ref,  # (1, Q, N)
+    y_ref,  # (1, Q, P)
+    state_scr,  # (P, N) f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xdt = xdt_ref[0].astype(jnp.float32)  # (Q, P)
+    logd = logd_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    b = b_ref[0].astype(jnp.float32)  # (Q, N)
+    c = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    cum = jnp.cumsum(logd)  # (Q,) l_t, non-increasing
+    total = cum[chunk - 1]
+
+    # Intra-chunk: scores[i, j] = (C_i . B_j) exp(l_i - l_j), j <= i.
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    exponent = cum[:, None] - cum[None, :]
+    ratio = jnp.exp(jnp.where(i_idx >= j_idx, exponent, -jnp.inf))
+    scores = cb * ratio
+    y = jax.lax.dot_general(
+        scores,
+        xdt,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Q, P)
+
+    # Inter-chunk: y += (C * exp(l)) @ S_prev^T  (state is (P, N)).
+    c_decayed = c * jnp.exp(cum)[:, None]  # (Q, N)
+    y = y + jax.lax.dot_general(
+        c_decayed,
+        state_scr[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # State update: S = exp(total) S_prev + (B exp(total - l))^T @ xdt.
+    b_decayed = b * jnp.exp(total - cum)[:, None]  # (Q, N)
+    outer = jax.lax.dot_general(
+        xdt,
+        b_decayed,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (P, N)
+    state_scr[...] = state_scr[...] * jnp.exp(total) + outer
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret")
+)
+def ssd_scan_bhsp(
+    xdt: jax.Array,  # (BH, S, P)  x pre-scaled by dt
+    logd: jax.Array,  # (BH, S, 1) per-step log decay (dt * A)
+    b: jax.Array,  # (BH, S, N)
+    c: jax.Array,  # (BH, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, p = xdt.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    n_chunks = math.ceil(s / chunk)
+    s_pad = n_chunks * chunk
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0))
+        xdt = jnp.pad(xdt, pad)
+        logd = jnp.pad(logd, pad)  # zero log-decay = no decay, harmless
+        b = jnp.pad(b, pad)
+        c = jnp.pad(c, pad)
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    spec = lambda width: pl.BlockSpec(
+        (1, chunk, width), lambda bh_i, ci: (bh_i, ci, 0)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, n_chunks),
+        in_specs=[spec(p), spec(1), spec(n), spec(n)],
+        out_specs=spec(p),
+        out_shape=jax.ShapeDtypeStruct((bh, s_pad, p), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xdt, logd, b, c)
+    return out[:, :s]

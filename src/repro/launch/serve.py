@@ -1,0 +1,65 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+
+Loads (or randomly initializes) a model, optionally restores a
+checkpoint produced by the trainer, and serves a batch of synthetic
+requests through the batched engine.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import ARCH_IDS, get_config, smoke_config
+from repro.models.lm import build_model
+from repro.serve.engine import Request, ServeEngine
+from repro.sharding.rules import single_device_context
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--arch", choices=ARCH_IDS, default="qwen2_1_5b")
+    parser.add_argument("--requests", type=int, default=4)
+    parser.add_argument("--max-new-tokens", type=int, default=12)
+    parser.add_argument("--max-len", type=int, default=256)
+    parser.add_argument("--ckpt-dir", default=None)
+    parser.add_argument("--full", action="store_true")
+    args = parser.parse_args()
+
+    cfg = get_config(args.arch) if args.full else smoke_config(args.arch)
+    ctx = single_device_context()
+    model = build_model(cfg, ctx)
+    if args.ckpt_dir:
+        from repro.train.checkpoint import restore_checkpoint
+
+        state, _ = restore_checkpoint(args.ckpt_dir, model)
+        params = state.params
+        print(f"restored checkpoint at step {int(state.step)}")
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+
+    engine = ServeEngine(model, params, max_len=args.max_len)
+    key = jax.random.PRNGKey(1)
+    requests = []
+    for i in range(args.requests):
+        key, sub = jax.random.split(key)
+        length = int(jax.random.randint(sub, (), 2, 9))
+        prompt = [
+            int(t)
+            for t in jax.random.randint(
+                sub, (length,), 1, cfg.vocab_size
+            )
+        ]
+        requests.append(
+            Request(prompt=prompt, max_new_tokens=args.max_new_tokens)
+        )
+    for i, completion in enumerate(engine.generate(requests)):
+        print(
+            f"request {i}: {len(completion.prompt)} prompt tokens -> "
+            f"{completion.tokens}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Shared model building blocks: param specs, norms, rope, activations.
+
+Models are *spec-first*: every module describes its parameters as a pytree
+of ``ParamSpec`` (shape + logical sharding axes + initializer).  Specs can
+be materialized (``init_params``), turned into ``ShapeDtypeStruct`` trees
+for allocation-free dry-runs (``abstract_params``), or mapped to
+``PartitionSpec`` trees by the sharding rules engine
+(`repro.sharding.rules`).  This keeps the 512-device dry-run honest: full
+production configs are never allocated on the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape, logical axes, initializer."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float | None = None  # stddev override; default 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"axes arity {self.axes} != shape arity {self.shape}"
+            )
+
+    @property
+    def fan_in(self) -> int:
+        return self.shape[0] if self.shape else 1
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "embed":
+            return (
+                jax.random.normal(key, self.shape, self.dtype)
+                * (self.scale if self.scale is not None else 1.0)
+            )
+        std = (
+            self.scale
+            if self.scale is not None
+            else 1.0 / math.sqrt(max(self.fan_in, 1))
+        )
+        return jax.random.normal(key, self.shape, self.dtype) * std
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree: Pytree, key: jax.Array) -> Pytree:
+    """Materialize a ParamSpec tree with per-leaf folded keys."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [s.materialize(k) for s, k in zip(leaves, keys)]
+    )
+
+
+def abstract_params(spec_tree: Pytree) -> Pytree:
+    """ShapeDtypeStruct tree (no allocation) for .lower()/dry-runs."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+def axes_tree(spec_tree: Pytree) -> Pytree:
+    """Logical-axes tree, same structure as the params."""
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree: Pytree, n: int, axis_name: str = "layers") -> Pytree:
+    """Prepend a stacking dimension (for scan-over-layers parameters)."""
+    return jax.tree.map(
+        lambda s: dataclasses.replace(
+            s, shape=(n, *s.shape), axes=(axis_name, *s.axes)
+        ),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+def param_count(spec_tree: Pytree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Numerics.
+
+
+def rms_norm(
+    x: jax.Array,
+    weight: jax.Array,
+    eps: float = 1e-6,
+    offset: bool = False,
+) -> jax.Array:
+    """RMSNorm in fp32; ``offset=True`` uses the Gemma (1 + w) convention."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    out = normed * (1.0 + w) if offset else normed * w
+    return out.astype(dtype)
+
+
+def layer_norm(
+    x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (out * weight + bias).astype(dtype)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def rope_frequencies(
+    head_dim: int, theta: float, positions: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embeddings at given positions (fp32)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freq  # (..., half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(
+    x: jax.Array, cos: jax.Array, sin: jax.Array
+) -> jax.Array:
+    """Rotate pairs (x1, x2) -> (x1 cos - x2 sin, x1 sin + x2 cos).
+
+    ``x``: (..., seq, heads, head_dim); cos/sin: (..., seq, half).
+    """
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(x.dtype)

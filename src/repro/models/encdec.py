@@ -1,0 +1,260 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings ``encoder_frames`` (B, n_audio_frames,
+d_model) in place of the mel-spectrogram conv stack.  The transformer
+backbone is faithful: pre-LayerNorm encoder (bidirectional) and decoder
+(causal self-attention + cross-attention to the encoder output), GELU
+MLPs, learned absolute positions (clamped beyond the table, so the
+assigned 32k decode cells remain well-defined).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
+from repro.models.attention import decode_attention
+from repro.models.common import ParamSpec, init_params
+from repro.models.lm import (
+    COMPUTE_DTYPE,
+    Model,
+    _embed_specs,
+    _logits,
+    _scan_stack,
+    _xent,
+)
+from repro.sharding.rules import MeshContext
+
+
+def _enc_layer_specs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": tfm.norm_specs(cfg),
+        "attn": tfm.attention_specs(cfg),
+        "ln2": tfm.norm_specs(cfg),
+        "mlp": tfm.mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_layer_specs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": tfm.norm_specs(cfg),
+        "self_attn": tfm.attention_specs(cfg),
+        "ln_x": tfm.norm_specs(cfg),
+        "cross_attn": tfm.attention_specs(cfg, cross=True),
+        "ln2": tfm.norm_specs(cfg),
+        "mlp": tfm.mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _positions_embed(table: jax.Array, positions: jax.Array) -> jax.Array:
+    idx = jnp.clip(positions, 0, table.shape[0] - 1)
+    return jnp.take(table, idx, axis=0).astype(COMPUTE_DTYPE)
+
+
+def _enc_layer(lp, x, cfg: ArchConfig):
+    h = tfm.norm_fwd(lp["ln1"], x, cfg)
+    q, k, v = tfm.attention_qkv(lp["attn"], h, h, cfg, None, use_rope=False)
+    ctx_out = tfm.attention_context(q, k, v, cfg, causal=False)
+    x = x + tfm.attention_out(lp["attn"], ctx_out)
+    h2 = tfm.norm_fwd(lp["ln2"], x, cfg)
+    return x + tfm.mlp_fwd(lp["mlp"], h2, cfg.act)
+
+
+def _dec_layer_full(lp, x, enc_out, cfg: ArchConfig):
+    """Training/prefill decoder layer; returns (x, (k, v, xk, xv))."""
+    h = tfm.norm_fwd(lp["ln1"], x, cfg)
+    q, k, v = tfm.attention_qkv(
+        lp["self_attn"], h, h, cfg, None, use_rope=False
+    )
+    ctx_out = tfm.attention_context(q, k, v, cfg, causal=True)
+    x = x + tfm.attention_out(lp["self_attn"], ctx_out)
+    hx = tfm.norm_fwd(lp["ln_x"], x, cfg)
+    qx, xk, xv = tfm.attention_qkv(
+        lp["cross_attn"], hx, enc_out, cfg, None, use_rope=False
+    )
+    ctx_x = tfm.attention_context(qx, xk, xv, cfg, causal=False)
+    x = x + tfm.attention_out(lp["cross_attn"], ctx_x)
+    h2 = tfm.norm_fwd(lp["ln2"], x, cfg)
+    x = x + tfm.mlp_fwd(lp["mlp"], h2, cfg.act)
+    return x, (k, v, xk, xv)
+
+
+def _dec_layer_decode(lp, x, lc, length, cfg: ArchConfig):
+    """One-token decoder layer with self-KV + cross-KV caches."""
+    h = tfm.norm_fwd(lp["ln1"], x, cfg)
+    q, k, v = tfm.attention_qkv(
+        lp["self_attn"], h, h, cfg, None, use_rope=False
+    )
+    bidx = jnp.arange(x.shape[0])
+    ck = lc["k"].at[bidx, length].set(k[:, 0].astype(lc["k"].dtype))
+    cv = lc["v"].at[bidx, length].set(v[:, 0].astype(lc["v"].dtype))
+    ctx_out = decode_attention(q, ck, cv, length + 1)
+    x = x + tfm.attention_out(lp["self_attn"], ctx_out)
+    hx = tfm.norm_fwd(lp["ln_x"], x, cfg)
+    qx = jnp.einsum(
+        "bsd,dhk->bshk", hx, lp["cross_attn"]["wq"].astype(hx.dtype)
+    )
+    if cfg.qkv_bias:
+        qx = qx + lp["cross_attn"]["bq"].astype(hx.dtype)
+    n_frames = lc["xk"].shape[1]
+    frames_len = jnp.full((x.shape[0],), n_frames, jnp.int32)
+    ctx_x = decode_attention(qx, lc["xk"], lc["xv"], frames_len)
+    x = x + tfm.attention_out(lp["cross_attn"], ctx_x)
+    h2 = tfm.norm_fwd(lp["ln2"], x, cfg)
+    x = x + tfm.mlp_fwd(lp["mlp"], h2, cfg.act)
+    return x, {"k": ck, "v": cv, "xk": lc["xk"], "xv": lc["xv"]}
+
+
+def build_encdec_model(cfg: ArchConfig, ctx: MeshContext) -> Model:
+    specs = dict(_embed_specs(cfg))
+    specs["pos_dec"] = ParamSpec(
+        (max(cfg.learned_pos, 8), cfg.d_model),
+        (None, "embed"),
+        init="embed",
+        scale=0.02,
+    )
+    specs["pos_enc"] = ParamSpec(
+        (cfg.n_audio_frames, cfg.d_model),
+        (None, "embed"),
+        init="embed",
+        scale=0.02,
+    )
+    specs["enc_layers"] = jax.tree.map(
+        lambda s: s,
+        _stack(_enc_layer_specs(cfg), cfg.n_encoder_layers),
+    )
+    specs["dec_layers"] = _stack(_dec_layer_specs(cfg), cfg.n_layers)
+    specs["enc_norm"] = tfm.norm_specs(cfg)
+    specs["final_norm"] = tfm.norm_specs(cfg)
+
+    def encode(params, frames):
+        x = frames.astype(COMPUTE_DTYPE)
+        x = x + _positions_embed(
+            params["pos_enc"], jnp.arange(x.shape[1])
+        )
+        x = ctx.constrain(x, ("batch", "seq_act", "embed"))
+
+        def body(lp, h):
+            return _enc_layer(lp, h, cfg), jnp.zeros((), jnp.float32)
+
+        x, _ = _scan_stack(
+            params["enc_layers"], x, body, cfg, cfg.n_encoder_layers
+        )
+        return tfm.norm_fwd(params["enc_norm"], x, cfg)
+
+    def _embed_dec(params, tokens, offset):
+        x = jnp.take(params["embedding"], tokens, axis=0).astype(
+            COMPUTE_DTYPE
+        )
+        pos = offset + jnp.arange(tokens.shape[1])
+        x = x + _positions_embed(params["pos_dec"], pos)
+        return ctx.constrain(x, ("batch", "seq_act", "embed"))
+
+    def loss_fn(params, batch):
+        enc_out = encode(params, batch["encoder_frames"])
+        x = _embed_dec(params, batch["tokens"], 0)
+
+        def body(lp, h):
+            h, _kv = _dec_layer_full(lp, h, enc_out, cfg)
+            return h, jnp.zeros((), jnp.float32)
+
+        x, _ = _scan_stack(params["dec_layers"], x, body, cfg, cfg.n_layers)
+        x = tfm.norm_fwd(params["final_norm"], x, cfg)
+        logits = _logits(params, x, cfg, ctx)
+        ce = _xent(logits, batch["targets"], cfg.vocab_size)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def cache_specs(batch: int, max_len: int):
+        hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        kv_axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        xkv_axes = ("layers", "batch", None, "kv_heads", "head_dim")
+        mk = lambda s, a: ParamSpec(s, a, init="zeros", dtype=COMPUTE_DTYPE)
+        return {
+            "k": mk((cfg.n_layers, batch, max_len, hkv, dh), kv_axes),
+            "v": mk((cfg.n_layers, batch, max_len, hkv, dh), kv_axes),
+            "xk": mk(
+                (cfg.n_layers, batch, cfg.n_audio_frames, hkv, dh), xkv_axes
+            ),
+            "xv": mk(
+                (cfg.n_layers, batch, cfg.n_audio_frames, hkv, dh), xkv_axes
+            ),
+            "length": ParamSpec(
+                (batch,), ("batch",), init="zeros", dtype=jnp.int32
+            ),
+        }
+
+    def prefill(params, batch):
+        enc_out = encode(params, batch["encoder_frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = _embed_dec(params, tokens, 0)
+
+        def scan_body(h, lp):
+            h, (k, v, xk, xv) = _dec_layer_full(lp, h, enc_out, cfg)
+            return h, (
+                k.astype(COMPUTE_DTYPE),
+                v.astype(COMPUTE_DTYPE),
+                xk.astype(COMPUTE_DTYPE),
+                xv.astype(COMPUTE_DTYPE),
+            )
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(
+            scan_body, x, params["dec_layers"]
+        )
+        x = tfm.norm_fwd(params["final_norm"], x, cfg)
+        logits = _logits(params, x[:, -1:], cfg, ctx)[:, 0]
+        cache = {
+            "k": ks,
+            "v": vs,
+            "xk": xks,
+            "xv": xvs,
+            "length": jnp.full((b,), s, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(params, cache, tokens):
+        length = cache["length"]
+        x = _embed_dec(params, tokens, length[:, None])
+
+        def body(h, args):
+            lp, lc = args
+            return _dec_layer_decode(lp, h, lc, length, cfg)
+
+        x, kv = jax.lax.scan(
+            body,
+            x,
+            (
+                params["dec_layers"],
+                {
+                    "k": cache["k"],
+                    "v": cache["v"],
+                    "xk": cache["xk"],
+                    "xv": cache["xv"],
+                },
+            ),
+        )
+        x = tfm.norm_fwd(params["final_norm"], x, cfg)
+        logits = _logits(params, x, cfg, ctx)[:, 0]
+        return logits, {**kv, "length": length + 1}
+
+    return Model(
+        cfg=cfg,
+        ctx=ctx,
+        specs=specs,
+        init=functools.partial(init_params, specs),
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        cache_specs=cache_specs,
+    )
+
+
+def _stack(spec: dict, n: int):
+    from repro.models.common import stack_specs
+
+    return stack_specs(spec, n)

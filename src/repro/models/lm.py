@@ -1,0 +1,808 @@
+"""Model assembly: embedding -> layer stacks -> head, for all families.
+
+``build_model(cfg, ctx)`` returns a ``Model`` bundle of pure functions:
+
+* ``loss_fn(params, batch)``      -- training loss (+ metrics dict)
+* ``prefill(params, batch)``      -- full-sequence forward, returns the
+                                     last-position logits and a KV/state
+                                     cache ready for decoding
+* ``decode_step(params, cache, tokens)`` -- one-token step
+* ``specs`` / ``cache_specs(batch, max_len)`` -- ParamSpec trees, enabling
+  allocation-free dry-runs and rule-driven sharding
+
+Families: dense / moe / vlm (early-fusion stub) share the decoder stack;
+ssm is a Mamba2 stack; hybrid (Zamba2) interleaves a *shared* attention
+block every ``hybrid_period`` Mamba2 layers; audio (Whisper) is an
+encoder-decoder with a precomputed-frame frontend stub.
+
+Layer stacks are scanned (``lax.scan`` over stacked params) so the HLO
+stays small at 36-48 layers; the roofline walker scales while-body costs
+by trip count (see `repro.analysis.hlo`).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models.attention import decode_attention
+from repro.models.common import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    stack_specs,
+)
+from repro.models.moe import MoeDims, moe_ffn, moe_param_specs
+from repro.sharding.rules import MeshContext
+
+COMPUTE_DTYPE = jnp.bfloat16
+Pytree = Any
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    ctx: MeshContext
+    specs: Pytree
+    init: Callable[[jax.Array], Pytree]
+    loss_fn: Callable[[Pytree, dict], tuple[jax.Array, dict]]
+    prefill: Callable[[Pytree, dict], tuple[jax.Array, Pytree]]
+    decode_step: Callable[
+        [Pytree, Pytree, jax.Array], tuple[jax.Array, Pytree]
+    ]
+    cache_specs: Callable[[int, int], Pytree]
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces.
+
+
+def _embed_specs(cfg: ArchConfig) -> dict[str, ParamSpec]:
+    v, d = cfg.padded_vocab, cfg.d_model
+    specs = {
+        "embedding": ParamSpec(
+            (v, d), ("vocab", "embed"), init="embed", scale=0.02
+        )
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((d, v), ("embed", "vocab"))
+    return specs
+
+
+def _final_norm_specs(cfg: ArchConfig) -> dict:
+    return tfm.norm_specs(cfg)
+
+
+def _embed(params, tokens: jax.Array, cfg: ArchConfig, ctx: MeshContext):
+    x = jnp.take(params["embedding"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, COMPUTE_DTYPE)
+    return ctx.constrain(x, ("batch", "seq_act", "embed"))
+
+
+def _fuse_image(x: jax.Array, batch: dict, cfg: ArchConfig) -> jax.Array:
+    """Early fusion: precomputed patch embeddings replace the first
+    ``n_image_patches`` positions (the modality-frontend stub)."""
+    if cfg.n_image_patches and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, img, (0, 0, 0))
+    return x
+
+
+def _logits(params, x: jax.Array, cfg: ArchConfig, ctx: MeshContext):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, params["embedding"].astype(x.dtype)
+        )
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, params["head"].astype(x.dtype)
+        )
+    return ctx.constrain(logits, ("batch", "seq_act", "vocab"))
+
+
+def _xent(
+    logits: jax.Array, targets: jax.Array, real_vocab: int
+) -> jax.Array:
+    """Mean cross-entropy over a (padded-)vocab-sharded logits tensor."""
+    v = logits.shape[-1]
+    logits32 = logits.astype(jnp.float32)
+    if real_vocab != v:
+        valid = jnp.arange(v) < real_vocab
+        logits32 = jnp.where(valid[None, None], logits32, -1e30)
+    lse = jax.nn.logsumexp(logits32, axis=-1)  # (B, S)
+    onehot = jax.nn.one_hot(targets, v, dtype=jnp.bfloat16)
+    true = jnp.einsum(
+        "bsv,bsv->bs",
+        onehot,
+        logits32.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.mean(lse - true)
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    return jax.checkpoint(fn)
+
+
+def _scan_stack(stacked_params, x, body, cfg: ArchConfig, n: int):
+    """Run ``body(layer_params, x) -> (x, aux_scalar)`` over a stack."""
+    if n == 0:
+        return x, jnp.zeros((), jnp.float32)
+    wrapped = _maybe_remat(body, cfg)
+    if cfg.scan_layers:
+
+        def scan_body(carry, lp):
+            h, aux = carry
+            h, a = wrapped(lp, h)
+            return (h, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), stacked_params
+        )
+        return x, aux
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(n):
+        lp = jax.tree.map(lambda p: p[i], stacked_params)
+        x, a = wrapped(lp, x)
+        aux = aux + a
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decoder (dense / moe / vlm) family.
+
+
+def _decoder_layer_specs(cfg: ArchConfig, ep_size: int) -> dict:
+    specs: dict = {
+        "ln1": tfm.norm_specs(cfg),
+        "attn": tfm.attention_specs(cfg),
+        "ln2": tfm.norm_specs(cfg),
+    }
+    if cfg.is_moe:
+        dims = _moe_dims(cfg, ep_size)
+        specs["moe"] = moe_param_specs(dims, cfg.fsdp_experts)
+        if cfg.n_shared_experts:
+            specs["shared"] = tfm.glu_specs(cfg.d_model, cfg.shared_d_ff)
+    else:
+        specs["ffn"] = tfm.glu_specs(cfg.d_model, cfg.d_ff)
+    return specs
+
+
+def _moe_dims(cfg: ArchConfig, ep_size: int) -> MoeDims:
+    return MoeDims.for_mesh(
+        cfg.n_experts,
+        cfg.top_k,
+        cfg.d_model,
+        cfg.moe_d_ff or cfg.d_ff,
+        ep_size,
+        cfg.capacity_factor,
+    )
+
+
+def _decoder_ffn(lp, h, cfg: ArchConfig, ctx: MeshContext):
+    """FFN half of a decoder layer; returns (out, aux_loss)."""
+    if cfg.is_moe:
+        dims = _moe_dims(cfg, ctx.tp_size)
+        y, aux, _drop = moe_ffn(
+            h,
+            lp["moe"],
+            dims,
+            mesh=ctx.mesh,
+            dp_axes=ctx.dp_axes,
+            ep_axis=ctx.tp_axis,
+            act_name=cfg.act,
+            fsdp_experts=cfg.fsdp_experts,
+            token_slice=cfg.moe_token_slice,
+            seq_sharded=cfg.moe_token_slice and cfg.sequence_parallel,
+        )
+        if cfg.n_shared_experts:
+            y = y + tfm.glu_fwd(lp["shared"], h, cfg.act)
+        return y, aux * cfg.aux_loss_coef
+    return tfm.glu_fwd(lp["ffn"], h, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _decoder_layer_full(lp, x, cfg: ArchConfig, ctx: MeshContext):
+    """Training/prefill decoder layer; returns (x, aux, (k, v))."""
+    h = tfm.norm_fwd(lp["ln1"], x, cfg)
+    s = x.shape[1]
+    q, k, v = tfm.attention_qkv(lp["attn"], h, h, cfg, jnp.arange(s))
+    ctx_out = tfm.attention_context(q, k, v, cfg, causal=True)
+    x = x + tfm.attention_out(lp["attn"], ctx_out)
+    h2 = tfm.norm_fwd(lp["ln2"], x, cfg)
+    y, aux = _decoder_ffn(lp, h2, cfg, ctx)
+    x = ctx.constrain(x + y, ("batch", "seq_act", "embed"))
+    return x, aux, (k, v)
+
+
+def _swa_cache_len(cfg: ArchConfig, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def _ring_pack(k: jax.Array, w: int) -> jax.Array:
+    """Pack the last ``w`` positions of (B, S, H, D) into ring order."""
+    s = k.shape[1]
+    if s <= w:
+        pad = w - s
+        return jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tail = k[:, -w:]
+    slots = (s - w + jnp.arange(w)) % w
+    return jnp.zeros_like(tail).at[:, slots].set(tail)
+
+
+def _decoder_layer_decode(
+    lp, x, cache, length, cfg: ArchConfig, ctx: MeshContext
+):
+    """One-token decoder layer; cache = {'k','v'} (B, Smax, Hkv, Dh)."""
+    h = tfm.norm_fwd(lp["ln1"], x, cfg)
+    pos = length[:, None]  # (B, 1) absolute positions
+    q, k, v = tfm.attention_qkv(lp["attn"], h, h, cfg, pos)
+    w = cache["k"].shape[1]
+    slot = length % w if cfg.sliding_window is not None else length
+    bidx = jnp.arange(x.shape[0])
+    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    eff_len = (
+        jnp.minimum(length + 1, w)
+        if cfg.sliding_window is not None
+        else length + 1
+    )
+    ctx_out = decode_attention(q, ck, cv, eff_len)
+    x = x + tfm.attention_out(lp["attn"], ctx_out)
+    h2 = tfm.norm_fwd(lp["ln2"], x, cfg)
+    y, _aux = _decoder_ffn(lp, h2, cfg, ctx)
+    return x + y, {"k": ck, "v": cv}
+
+
+def _decoder_specs(cfg: ArchConfig, ctx: MeshContext) -> Pytree:
+    specs = dict(_embed_specs(cfg))
+    specs["layers"] = stack_specs(
+        _decoder_layer_specs(cfg, ctx.tp_size), cfg.n_layers
+    )
+    specs["final_norm"] = _final_norm_specs(cfg)
+    return specs
+
+
+def _decoder_hidden(params, batch, cfg: ArchConfig, ctx: MeshContext):
+    x = _embed(params, batch["tokens"], cfg, ctx)
+    x = _fuse_image(x, batch, cfg)
+
+    def body(lp, h):
+        h, aux, _kv = _decoder_layer_full(lp, h, cfg, ctx)
+        return h, aux
+
+    x, aux = _scan_stack(params["layers"], x, body, cfg, cfg.n_layers)
+    x = tfm.norm_fwd(params["final_norm"], x, cfg)
+    return x, aux
+
+
+def _decoder_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    w = _swa_cache_len(cfg, max_len)
+    kv_axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {
+        "k": ParamSpec(
+            (cfg.n_layers, batch, w, hkv, dh),
+            kv_axes,
+            init="zeros",
+            dtype=COMPUTE_DTYPE,
+        ),
+        "v": ParamSpec(
+            (cfg.n_layers, batch, w, hkv, dh),
+            kv_axes,
+            init="zeros",
+            dtype=COMPUTE_DTYPE,
+        ),
+        "length": ParamSpec((batch,), ("batch",), init="zeros", dtype=jnp.int32),
+    }
+
+
+def _build_decoder_model(cfg: ArchConfig, ctx: MeshContext) -> Model:
+    specs = _decoder_specs(cfg, ctx)
+
+    def loss_fn(params, batch):
+        x, aux = _decoder_hidden(params, batch, cfg, ctx)
+        logits = _logits(params, x, cfg, ctx)
+        ce = _xent(logits, batch["targets"], cfg.vocab_size)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def prefill(params, batch):
+        x = _embed(params, batch["tokens"], cfg, ctx)
+        x = _fuse_image(x, batch, cfg)
+        s = batch["tokens"].shape[1]
+        w = _swa_cache_len(cfg, s)
+
+        def body(lp, h):
+            h, _aux, (k, v) = _decoder_layer_full(lp, h, cfg, ctx)
+            if cfg.sliding_window is not None:
+                k, v = _ring_pack(k, w), _ring_pack(v, w)
+            return h, (k.astype(COMPUTE_DTYPE), v.astype(COMPUTE_DTYPE))
+
+        if cfg.scan_layers and cfg.n_layers:
+
+            def scan_body(h, lp):
+                h, kv = body(lp, h)
+                return h, kv
+
+            x, (ks, vs) = jax.lax.scan(scan_body, x, params["layers"])
+        else:
+            ks, vs = [], []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda p: p[i], params["layers"])
+                x, (k, v) = body(lp, x)
+                ks.append(k)
+                vs.append(v)
+            hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+            b0 = batch["tokens"].shape[0]
+            empty = jnp.zeros((0, b0, w, hkv, dh), COMPUTE_DTYPE)
+            ks = jnp.stack(ks) if ks else empty
+            vs = jnp.stack(vs) if vs else empty
+        x = tfm.norm_fwd(params["final_norm"], x, cfg)
+        logits = _logits(params, x[:, -1:], cfg, ctx)[:, 0]
+        b = batch["tokens"].shape[0]
+        cache = {
+            "k": ks,
+            "v": vs,
+            "length": jnp.full((b,), s, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(params, cache, tokens):
+        x = _embed(params, tokens, cfg, ctx)
+        length = cache["length"]
+
+        def body(h, args):
+            lp, layer_cache = args
+            h, new_cache = _decoder_layer_decode(
+                lp, h, layer_cache, length, cfg, ctx
+            )
+            return h, new_cache
+
+        if cfg.n_layers == 0:
+            kv = {"k": cache["k"], "v": cache["v"]}
+        elif cfg.scan_layers:
+            x, kv = jax.lax.scan(
+                body,
+                x,
+                (params["layers"], {"k": cache["k"], "v": cache["v"]}),
+            )
+        else:
+            ks, vs = [], []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda p: p[i], params["layers"])
+                lc = {"k": cache["k"][i], "v": cache["v"][i]}
+                x, nc = _decoder_layer_decode(lp, x, lc, length, cfg, ctx)
+                ks.append(nc["k"])
+                vs.append(nc["v"])
+            kv = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+        x = tfm.norm_fwd(params["final_norm"], x, cfg)
+        logits = _logits(params, x, cfg, ctx)[:, 0]
+        new_cache = {
+            "k": kv["k"],
+            "v": kv["v"],
+            "length": length + 1,
+        }
+        return logits, new_cache
+
+    return Model(
+        cfg=cfg,
+        ctx=ctx,
+        specs=specs,
+        init=functools.partial(init_params, specs),
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        cache_specs=functools.partial(_decoder_cache_specs, cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (ssm) family.
+
+
+def _mamba_layer_specs(cfg: ArchConfig) -> dict:
+    return {
+        "ln": tfm.norm_specs(cfg),
+        "mamba": ssm_lib.mamba2_param_specs(
+            cfg.d_model,
+            cfg.d_inner,
+            cfg.n_ssm_heads,
+            cfg.ssm_state,
+            cfg.ssm_conv,
+        ),
+    }
+
+
+def _mamba_layer_full(lp, x, cfg: ArchConfig, ctx: MeshContext):
+    h = tfm.norm_fwd(lp["ln"], x, cfg)
+    y = ssm_lib.mamba2_forward(
+        h,
+        lp["mamba"],
+        n_heads=cfg.n_ssm_heads,
+        head_dim=cfg.ssm_head_dim,
+        d_state=cfg.ssm_state,
+        chunk=cfg.ssm_chunk,
+        norm_eps=cfg.norm_eps,
+    )
+    return ctx.constrain(x + y, ("batch", "seq_act", "embed"))
+
+
+def _mamba_layer_decode(lp, x, states, cfg: ArchConfig):
+    h = tfm.norm_fwd(lp["ln"], x, cfg)
+    y, conv_state, ssm_state = ssm_lib.mamba2_decode_step(
+        h,
+        lp["mamba"],
+        states["conv"],
+        states["ssm"],
+        n_heads=cfg.n_ssm_heads,
+        head_dim=cfg.ssm_head_dim,
+        d_state=cfg.ssm_state,
+        norm_eps=cfg.norm_eps,
+    )
+    return x + y, {"conv": conv_state, "ssm": ssm_state}
+
+
+def _mamba_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    del max_len  # recurrent state is O(1) in sequence length
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": ParamSpec(
+            (cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch),
+            ("layers", "batch", None, "ssm_conv_ch"),
+            init="zeros",
+            dtype=COMPUTE_DTYPE,
+        ),
+        "ssm": ParamSpec(
+            (
+                cfg.n_layers,
+                batch,
+                cfg.n_ssm_heads,
+                cfg.ssm_head_dim,
+                cfg.ssm_state,
+            ),
+            ("layers", "batch", "ssm_heads", None, "ssm_state"),
+            init="zeros",
+            dtype=jnp.float32,
+        ),
+        "length": ParamSpec((batch,), ("batch",), init="zeros", dtype=jnp.int32),
+    }
+
+
+def _build_mamba_model(cfg: ArchConfig, ctx: MeshContext) -> Model:
+    specs = dict(_embed_specs(cfg))
+    specs["layers"] = stack_specs(_mamba_layer_specs(cfg), cfg.n_layers)
+    specs["final_norm"] = _final_norm_specs(cfg)
+
+    def hidden(params, batch):
+        x = _embed(params, batch["tokens"], cfg, ctx)
+
+        def body(lp, h):
+            return _mamba_layer_full(lp, h, cfg, ctx), jnp.zeros(
+                (), jnp.float32
+            )
+
+        x, _ = _scan_stack(params["layers"], x, body, cfg, cfg.n_layers)
+        return tfm.norm_fwd(params["final_norm"], x, cfg)
+
+    def loss_fn(params, batch):
+        x = hidden(params, batch)
+        logits = _logits(params, x, cfg, ctx)
+        ce = _xent(logits, batch["targets"], cfg.vocab_size)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(params, batch):
+        # Recurrent prefill: run the chunked forward once per layer while
+        # collecting final states (scan over layers, states as ys).
+        x = _embed(params, batch["tokens"], cfg, ctx)
+        b, s = batch["tokens"].shape
+
+        def body(h, lp):
+            hn = tfm.norm_fwd(lp["ln"], h, cfg)
+            y, conv_state, ssm_state = ssm_lib.mamba2_forward(
+                hn,
+                lp["mamba"],
+                n_heads=cfg.n_ssm_heads,
+                head_dim=cfg.ssm_head_dim,
+                d_state=cfg.ssm_state,
+                chunk=cfg.ssm_chunk,
+                norm_eps=cfg.norm_eps,
+                return_states=True,
+            )
+            return h + y, (conv_state.astype(COMPUTE_DTYPE), ssm_state)
+
+        x, (conv_states, ssm_states) = jax.lax.scan(
+            body, x, params["layers"]
+        )
+        x = tfm.norm_fwd(params["final_norm"], x, cfg)
+        logits = _logits(params, x[:, -1:], cfg, ctx)[:, 0]
+        cache = {
+            "conv": conv_states,
+            "ssm": ssm_states,
+            "length": jnp.full((b,), s, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(params, cache, tokens):
+        x = _embed(params, tokens, cfg, ctx)
+
+        def body(h, args):
+            lp, st = args
+            h, new_st = _mamba_layer_decode(lp, h, st, cfg)
+            return h, new_st
+
+        x, states = jax.lax.scan(
+            body,
+            x,
+            (params["layers"], {"conv": cache["conv"], "ssm": cache["ssm"]}),
+        )
+        x = tfm.norm_fwd(params["final_norm"], x, cfg)
+        logits = _logits(params, x, cfg, ctx)[:, 0]
+        return logits, {
+            "conv": states["conv"],
+            "ssm": states["ssm"],
+            "length": cache["length"] + 1,
+        }
+
+    return Model(
+        cfg=cfg,
+        ctx=ctx,
+        specs=specs,
+        init=functools.partial(init_params, specs),
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        cache_specs=functools.partial(_mamba_cache_specs, cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 (hybrid) family: Mamba2 stack + one *shared* attention block.
+
+
+def _hybrid_layout(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_groups, trailing): groups of ``period`` mamba layers + shared
+    attention block, then ``trailing`` mamba layers."""
+    period = cfg.hybrid_period
+    n_groups = cfg.n_layers // period
+    trailing = cfg.n_layers - n_groups * period
+    return n_groups, trailing
+
+
+def _build_hybrid_model(cfg: ArchConfig, ctx: MeshContext) -> Model:
+    n_groups, trailing = _hybrid_layout(cfg)
+    period = cfg.hybrid_period
+    specs = dict(_embed_specs(cfg))
+    specs["groups"] = stack_specs(
+        stack_specs(_mamba_layer_specs(cfg), period, axis_name="layers"),
+        n_groups,
+        axis_name="groups",
+    )
+    specs["trailing"] = stack_specs(_mamba_layer_specs(cfg), trailing)
+    specs["shared"] = {
+        "ln1": tfm.norm_specs(cfg),
+        "attn": tfm.attention_specs(cfg),
+        "ln2": tfm.norm_specs(cfg),
+        "ffn": tfm.glu_specs(cfg.d_model, cfg.d_ff),
+    }
+    specs["final_norm"] = _final_norm_specs(cfg)
+
+    def shared_full(sp, x):
+        h = tfm.norm_fwd(sp["ln1"], x, cfg)
+        s = x.shape[1]
+        q, k, v = tfm.attention_qkv(sp["attn"], h, h, cfg, jnp.arange(s))
+        ctx_out = tfm.attention_context(q, k, v, cfg, causal=True)
+        x = x + tfm.attention_out(sp["attn"], ctx_out)
+        h2 = tfm.norm_fwd(sp["ln2"], x, cfg)
+        x = x + tfm.glu_fwd(sp["ffn"], h2, cfg.act)
+        return ctx.constrain(x, ("batch", "seq_act", "embed")), (k, v)
+
+    def hidden(params, batch):
+        x = _embed(params, batch["tokens"], cfg, ctx)
+
+        def mamba_body(lp, h):
+            return _mamba_layer_full(lp, h, cfg, ctx), jnp.zeros(
+                (), jnp.float32
+            )
+
+        def group_body(h, gp):
+            h, _ = _scan_stack(gp, h, mamba_body, cfg, period)
+            h, _kv = shared_full(params["shared"], h)
+            return h, None
+
+        if n_groups:
+            x, _ = jax.lax.scan(group_body, x, params["groups"])
+        x, _ = _scan_stack(
+            params["trailing"], x, mamba_body, cfg, trailing
+        )
+        return tfm.norm_fwd(params["final_norm"], x, cfg)
+
+    def loss_fn(params, batch):
+        x = hidden(params, batch)
+        logits = _logits(params, x, cfg, ctx)
+        ce = _xent(logits, batch["targets"], cfg.vocab_size)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def cache_specs(batch: int, max_len: int):
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        n_mamba = cfg.n_layers
+        hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        return {
+            "conv": ParamSpec(
+                (n_mamba, batch, cfg.ssm_conv - 1, conv_ch),
+                ("layers", "batch", None, "ssm_conv_ch"),
+                init="zeros",
+                dtype=COMPUTE_DTYPE,
+            ),
+            "ssm": ParamSpec(
+                (
+                    n_mamba,
+                    batch,
+                    cfg.n_ssm_heads,
+                    cfg.ssm_head_dim,
+                    cfg.ssm_state,
+                ),
+                ("layers", "batch", "ssm_heads", None, "ssm_state"),
+                init="zeros",
+                dtype=jnp.float32,
+            ),
+            "shared_k": ParamSpec(
+                (n_groups, batch, max_len, hkv, dh),
+                ("groups", "batch", "kv_seq", "kv_heads", "head_dim"),
+                init="zeros",
+                dtype=COMPUTE_DTYPE,
+            ),
+            "shared_v": ParamSpec(
+                (n_groups, batch, max_len, hkv, dh),
+                ("groups", "batch", "kv_seq", "kv_heads", "head_dim"),
+                init="zeros",
+                dtype=COMPUTE_DTYPE,
+            ),
+            "length": ParamSpec(
+                (batch,), ("batch",), init="zeros", dtype=jnp.int32
+            ),
+        }
+
+    def prefill(params, batch):
+        # Hybrid prefill runs unscanned over groups (few of them) so each
+        # mamba layer's states and each shared invocation's KV are captured.
+        b, s = batch["tokens"].shape
+        x = _embed(params, batch["tokens"], cfg, ctx)
+        conv_states, ssm_states, sk, sv = [], [], [], []
+
+        def mamba_prefill(lp, h):
+            hn = tfm.norm_fwd(lp["ln"], h, cfg)
+            y, conv_state, ssm_state = ssm_lib.mamba2_forward(
+                hn,
+                lp["mamba"],
+                n_heads=cfg.n_ssm_heads,
+                head_dim=cfg.ssm_head_dim,
+                d_state=cfg.ssm_state,
+                chunk=cfg.ssm_chunk,
+                norm_eps=cfg.norm_eps,
+                return_states=True,
+            )
+            return h + y, conv_state, ssm_state
+
+        def run_mamba(stack, n, h):
+            for i in range(n):
+                lp = jax.tree.map(lambda p: p[i], stack)
+                h, cs, ss = mamba_prefill(lp, h)
+                conv_states.append(cs.astype(COMPUTE_DTYPE))
+                ssm_states.append(ss)
+            return h
+
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda p: p[g], params["groups"])
+            x = run_mamba(gp, period, x)
+            x, (k, v) = shared_full(params["shared"], x)
+            sk.append(k.astype(COMPUTE_DTYPE))
+            sv.append(v.astype(COMPUTE_DTYPE))
+        x = run_mamba(params["trailing"], trailing, x)
+        x = tfm.norm_fwd(params["final_norm"], x, cfg)
+        logits = _logits(params, x[:, -1:], cfg, ctx)[:, 0]
+        cache = {
+            "conv": jnp.stack(conv_states),
+            "ssm": jnp.stack(ssm_states),
+            "shared_k": jnp.stack(sk) if sk else jnp.zeros((0,)),
+            "shared_v": jnp.stack(sv) if sv else jnp.zeros((0,)),
+            "length": jnp.full((b,), s, jnp.int32),
+        }
+        return logits, cache
+
+    def shared_decode(sp, x, ck, cv, length):
+        h = tfm.norm_fwd(sp["ln1"], x, cfg)
+        pos = length[:, None]
+        q, k, v = tfm.attention_qkv(sp["attn"], h, h, cfg, pos)
+        bidx = jnp.arange(x.shape[0])
+        ck = ck.at[bidx, length].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[bidx, length].set(v[:, 0].astype(cv.dtype))
+        ctx_out = decode_attention(q, ck, cv, length + 1)
+        x = x + tfm.attention_out(sp["attn"], ctx_out)
+        h2 = tfm.norm_fwd(sp["ln2"], x, cfg)
+        x = x + tfm.glu_fwd(sp["ffn"], h2, cfg.act)
+        return x, ck, cv
+
+    def decode_step(params, cache, tokens):
+        x = _embed(params, tokens, cfg, ctx)
+        length = cache["length"]
+        new_conv, new_ssm, new_sk, new_sv = [], [], [], []
+        li = 0
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda p: p[g], params["groups"])
+            for i in range(period):
+                lp = jax.tree.map(lambda p: p[i], gp)
+                st = {"conv": cache["conv"][li], "ssm": cache["ssm"][li]}
+                x, ns = _mamba_layer_decode(lp, x, st, cfg)
+                new_conv.append(ns["conv"])
+                new_ssm.append(ns["ssm"])
+                li += 1
+            x, ck, cv = shared_decode(
+                params["shared"],
+                x,
+                cache["shared_k"][g],
+                cache["shared_v"][g],
+                length,
+            )
+            new_sk.append(ck)
+            new_sv.append(cv)
+        for i in range(trailing):
+            lp = jax.tree.map(lambda p: p[i], params["trailing"])
+            st = {"conv": cache["conv"][li], "ssm": cache["ssm"][li]}
+            x, ns = _mamba_layer_decode(lp, x, st, cfg)
+            new_conv.append(ns["conv"])
+            new_ssm.append(ns["ssm"])
+            li += 1
+        x = tfm.norm_fwd(params["final_norm"], x, cfg)
+        logits = _logits(params, x, cfg, ctx)[:, 0]
+        cache = {
+            "conv": jnp.stack(new_conv),
+            "ssm": jnp.stack(new_ssm),
+            "shared_k": jnp.stack(new_sk) if new_sk else cache["shared_k"],
+            "shared_v": jnp.stack(new_sv) if new_sv else cache["shared_v"],
+            "length": length + 1,
+        }
+        return logits, cache
+
+    return Model(
+        cfg=cfg,
+        ctx=ctx,
+        specs=specs,
+        init=functools.partial(init_params, specs),
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        cache_specs=cache_specs,
+    )
+
+
+def build_model(cfg: ArchConfig, ctx: MeshContext) -> Model:
+    if cfg.sequence_parallel:
+        # SP: residual stream sharded over the model axis between blocks
+        # (GSPMD inserts the all-gather/reduce-scatter pairs).
+        ctx = ctx.with_rules(seq_act=("model",))
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _build_decoder_model(cfg, ctx)
+    if cfg.family == "ssm":
+        return _build_mamba_model(cfg, ctx)
+    if cfg.family == "hybrid":
+        return _build_hybrid_model(cfg, ctx)
+    if cfg.family == "audio":
+        from repro.models.encdec import build_encdec_model
+
+        return build_encdec_model(cfg, ctx)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,295 @@
+"""Mixture-of-Experts with expert parallelism via shard_map + all_to_all.
+
+Capacity-based dropped-token dispatch (Switch/GShard style), laid out for
+TPU expert parallelism:
+
+1. per-device router: top-k experts per token, gates renormalized;
+2. tokens packed into a capacity buffer (E, C, D) by scatter-add;
+3. ``lax.all_to_all`` over the EP mesh axis exchanges the buffer so each
+   device holds the tokens destined for its local experts -- this is
+   exactly the Pairwise/Bruck-schedulable all-to-all that the SWOT
+   planner (`repro.core.planner`) feeds to the optical scheduler;
+4. local expert FFNs (optionally FSDP: expert weights sharded over the
+   data axis and all-gathered per layer);
+5. the inverse all_to_all returns expert outputs, combined with gates.
+
+Expert count is padded up to a multiple of the EP axis size (padded
+experts are masked out of routing); the padding overhead is reported by
+``padded_experts``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamSpec, activation
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeDims:
+    n_experts: int  # real experts
+    n_experts_padded: int  # padded to a multiple of the EP axis size
+    top_k: int
+    d_model: int
+    d_ff: int
+    capacity_factor: float
+
+    @classmethod
+    def for_mesh(
+        cls,
+        n_experts: int,
+        top_k: int,
+        d_model: int,
+        d_ff: int,
+        ep_size: int,
+        capacity_factor: float = 1.25,
+    ) -> "MoeDims":
+        padded = math.ceil(n_experts / ep_size) * ep_size
+        return cls(
+            n_experts=n_experts,
+            n_experts_padded=padded,
+            top_k=top_k,
+            d_model=d_model,
+            d_ff=d_ff,
+            capacity_factor=capacity_factor,
+        )
+
+
+def moe_param_specs(dims: MoeDims, fsdp_experts: bool) -> dict[str, Any]:
+    e, d, f = dims.n_experts_padded, dims.d_model, dims.d_ff
+    ffn_axis = "expert_ffn_fsdp" if fsdp_experts else "expert_ffn"
+    return {
+        "router": ParamSpec((d, e), ("embed", "experts_router")),
+        "w_gate": ParamSpec((e, d, f), ("experts", "embed", ffn_axis)),
+        "w_up": ParamSpec((e, d, f), ("experts", "embed", ffn_axis)),
+        "w_down": ParamSpec((e, f, d), ("experts", ffn_axis, "embed")),
+    }
+
+
+def _dispatch_indices(
+    logits: jax.Array,  # (T, E) fp32, padded experts already masked
+    top_k: int,
+    capacity: int,
+):
+    """Top-k routing with per-expert capacity positions.
+
+    Returns (expert_ids, gates, positions, keep) each shaped (T*k,).
+    """
+    t, e = logits.shape
+    top_logits, top_idx = jax.lax.top_k(logits, top_k)  # (T, k)
+    gates = jax.nn.softmax(top_logits, axis=-1)
+    e_flat = top_idx.reshape(-1)
+    g_flat = gates.reshape(-1)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)  # (T*k, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(ranks, e_flat[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    return e_flat, g_flat, pos, keep
+
+
+def _local_moe(
+    x: jax.Array,  # (T, D) local tokens, compute dtype
+    router: jax.Array,  # (D, E)
+    w_gate: jax.Array,  # (E_loc, D, F) local experts
+    w_up: jax.Array,
+    w_down: jax.Array,  # (E_loc, F, D)
+    dims: MoeDims,
+    act_name: str,
+    ep_axis: str | None,
+    fsdp_axis: str | None,
+):
+    """Per-device MoE body (runs inside shard_map)."""
+    t, d = x.shape
+    e = dims.n_experts_padded
+    act = activation(act_name)
+    capacity = max(
+        8, math.ceil(t * dims.top_k * dims.capacity_factor / e)
+    )
+
+    logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))
+    if dims.n_experts != e:
+        pad_mask = jnp.arange(e) < dims.n_experts
+        logits = jnp.where(pad_mask[None], logits, -1e30)
+    e_flat, g_flat, pos, keep = _dispatch_indices(
+        logits, dims.top_k, capacity
+    )
+    t_flat = jnp.repeat(jnp.arange(t), dims.top_k)
+
+    # Load-balance auxiliary loss (Switch-style) and drop statistics.
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    token_frac = (
+        jax.ops.segment_sum(
+            jnp.where(keep, 1.0, 0.0), e_flat, num_segments=e
+        )
+        / jnp.maximum(t * dims.top_k, 1)
+    )
+    aux_loss = dims.n_experts * jnp.sum(token_frac * jnp.mean(probs, axis=0))
+    drop_frac = 1.0 - jnp.mean(jnp.where(keep, 1.0, 0.0))
+
+    # Scatter tokens into the capacity buffer (E, C, D).
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    upd = jnp.where(keep[:, None], x[t_flat], 0).astype(x.dtype)
+    buf = buf.at[e_flat, pos].add(upd, mode="drop")
+
+    if ep_axis is not None:
+        # (E, C, D) -> (E_loc, ep*C, D): every device receives the slices
+        # destined for its local experts from all EP peers.
+        buf = jax.lax.all_to_all(
+            buf, ep_axis, split_axis=0, concat_axis=1, tiled=True
+        )
+
+    # Expert matmuls run in the activations' compute dtype (bf16); cast
+    # BEFORE the FSDP gather so the per-layer weight collective moves
+    # half the bytes of the stored fp32 master weights.
+    w_gate = w_gate.astype(x.dtype)
+    w_up = w_up.astype(x.dtype)
+    w_down = w_down.astype(x.dtype)
+    if fsdp_axis is not None:
+        w_gate = jax.lax.all_gather(
+            w_gate, fsdp_axis, axis=2, tiled=True
+        )
+        w_up = jax.lax.all_gather(w_up, fsdp_axis, axis=2, tiled=True)
+        w_down = jax.lax.all_gather(w_down, fsdp_axis, axis=1, tiled=True)
+
+    h = act(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", buf, w_up
+    )
+    out = jnp.einsum("ecf,efd->ecd", h, w_down)
+
+    if ep_axis is not None:
+        out = jax.lax.all_to_all(
+            out, ep_axis, split_axis=1, concat_axis=0, tiled=True
+        )
+
+    # Combine expert outputs back to token order, weighted by gates.
+    gathered = out[e_flat, pos]  # (T*k, D)
+    weights = jnp.where(keep, g_flat, 0.0).astype(out.dtype)
+    y = jax.ops.segment_sum(
+        gathered * weights[:, None], t_flat, num_segments=t
+    )
+    return y.astype(x.dtype), aux_loss, drop_frac
+
+
+def moe_ffn(
+    x: jax.Array,  # (B, S, D) global view
+    params: dict[str, jax.Array],
+    dims: MoeDims,
+    *,
+    mesh: jax.sharding.Mesh,
+    dp_axes: tuple[str, ...],
+    ep_axis: str,
+    act_name: str = "silu",
+    fsdp_experts: bool = False,
+    token_slice: bool = False,
+    seq_sharded: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Expert-parallel MoE FFN: returns (y, aux_loss, drop_frac).
+
+    ``token_slice`` (beyond-baseline Perf lever): activations are
+    replicated over the EP/model axis, so by default every EP rank
+    redundantly routes and dispatches the full dp-local token set (~ep x
+    wasted dispatch FLOPs and ep x oversized all_to_all buffers).  With
+    slicing, each EP rank dispatches only its 1/ep slice of the tokens
+    and the combined outputs are re-assembled with one all_gather.
+
+    ``seq_sharded`` (sequence-parallel fusion): consume the residual
+    stream already sharded over the EP axis on the sequence dim -- the
+    SP shard IS the token slice, so neither the input all-gather nor the
+    output re-assembly collective is needed at all.
+    """
+    b, s, d = x.shape
+    ep_size = mesh.shape[ep_axis]
+    ep = ep_axis if ep_size > 1 else None
+    seq_sharded = seq_sharded and ep is not None and s % ep_size == 0
+    fsdp_axis = None
+    expert_ffn_spec: str | None = None
+    if fsdp_experts:
+        # Expert FFN dim sharded over the (flattened) dp axes.
+        fsdp_axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        expert_ffn_spec = fsdp_axis
+
+    dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    x_spec = P(dp_spec, ep_axis if seq_sharded else None, None)
+    expert_spec = P(ep_axis if ep_size > 1 else None, None, expert_ffn_spec)
+    down_spec = P(ep_axis if ep_size > 1 else None, expert_ffn_spec, None)
+
+    def body(xb, router, w_gate, w_up, w_down):
+        xt = xb.reshape(-1, d)
+        t_full = xt.shape[0]
+        sliced = (
+            not seq_sharded
+            and token_slice
+            and ep is not None
+            and t_full % ep_size == 0
+        )
+        if sliced:
+            rank = jax.lax.axis_index(ep_axis)
+            t_loc = t_full // ep_size
+            xt = jax.lax.dynamic_slice_in_dim(xt, rank * t_loc, t_loc)
+        y, aux, drop = _local_moe(
+            xt,
+            router,
+            w_gate,
+            w_up,
+            w_down,
+            dims,
+            act_name,
+            ep,
+            fsdp_axis if fsdp_experts else None,
+        )
+        if sliced:
+            # Rank-ordered slices reassemble with one all_gather.
+            y = jax.lax.all_gather(y, ep_axis, axis=0, tiled=True)
+        # Average the scalar diagnostics over the data axes (plus the EP
+        # axis when token slices differ per rank).
+        stat_axes = dp_axes + (
+            (ep_axis,) if (sliced or seq_sharded) else ()
+        )
+        aux = jax.lax.pmean(aux, stat_axes)
+        drop = jax.lax.pmean(drop, stat_axes)
+        return y.reshape(xb.shape), aux, drop
+
+    # check_vma=False: every device in a data row holds identical tokens
+    # (x replicated over the model axis), so y/aux/drop are replicated over
+    # 'model' by construction -- but the static varying-axes checker cannot
+    # see through all_to_all.  The redundant per-row dispatch compute this
+    # implies is a recorded Perf lever (EP token slicing, EXPERIMENTS.md).
+    y, aux, drop = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(x_spec, P(), expert_spec, expert_spec, down_spec),
+        out_specs=(x_spec, P(), P()),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+    return y, aux, drop
+
+
+def moe_reference(
+    x: jax.Array,  # (T, D)
+    params: dict[str, jax.Array],
+    dims: MoeDims,
+    act_name: str = "silu",
+) -> jax.Array:
+    """Dense single-device oracle: loops experts, no capacity drops."""
+    act = activation(act_name)
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    if dims.n_experts != dims.n_experts_padded:
+        mask = jnp.arange(dims.n_experts_padded) < dims.n_experts
+        logits = jnp.where(mask[None], logits, -1e30)
+    top_logits, top_idx = jax.lax.top_k(logits, dims.top_k)
+    gates = jax.nn.softmax(top_logits, axis=-1)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for e in range(dims.n_experts):
+        h = act(x @ params["w_gate"][e]) * (x @ params["w_up"][e])
+        out = (h @ params["w_down"][e]).astype(jnp.float32)
+        weight = jnp.sum(
+            jnp.where(top_idx == e, gates, 0.0), axis=-1
+        )  # (T,)
+        y += out * weight[:, None]
+    return y.astype(x.dtype)

@@ -1,0 +1,285 @@
+"""Mamba2 (state-space duality) blocks: chunked SSD scan + decode recurrence.
+
+The SSD recurrence per head (state S in R^{P x N}, head dim P, state N):
+
+    S_t = a_t * S_{t-1} + dt_t * x_t (x) B_t        a_t = exp(dt_t * A)
+    y_t = C_t . S_t + D * x_t
+
+``ssd_chunked`` evaluates it in the dual chunked form (intra-chunk
+quadratic attention-like term on the MXU + inter-chunk linear recurrence
+carried by ``lax.scan``), which is the TPU-native adaptation of the
+paper's GPU kernel; ``ssd_reference`` is the sequential oracle.  The
+Pallas kernel variant is `repro.kernels.ssd_scan`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, rms_norm
+
+
+def ssd_reference(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (post-softplus)
+    a_log: jax.Array,  # (H,) log of -A
+    b: jax.Array,  # (B, S, N)   (single group)
+    c: jax.Array,  # (B, S, N)
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential SSD oracle: returns (y (B,S,H,P), final_state)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+    state0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * a[None])  # (B, H)
+        update = jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], bt
+        )
+        state = state * decay[..., None, None] + update
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, yt
+
+    xs = (
+        x.astype(jnp.float32).transpose(1, 0, 2, 3),
+        dt.astype(jnp.float32).transpose(1, 0, 2),
+        b.astype(jnp.float32).transpose(1, 0, 2),
+        c.astype(jnp.float32).transpose(1, 0, 2),
+    )
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    a_log: jax.Array,  # (H,)
+    b: jax.Array,  # (B, S, N)
+    c: jax.Array,  # (B, S, N)
+    chunk: int = 128,
+    init_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD (state-space dual form): (y, final_state)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    s_pad = x.shape[1]
+    nc = s_pad // chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+
+    log_decay = dtf * a[None, None, None]  # (B, nc, Q, H), <= 0
+    cum = jnp.cumsum(log_decay, axis=2)  # l_t within chunk
+    total = cum[:, :, -1]  # (B, nc, H): full-chunk decay
+
+    # Intra-chunk dual form: scores[i, j] = (C_i . B_j) exp(l_i - l_j) dt_j.
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+    cb = jnp.einsum("bgin,bgjn->bgij", cf, bf)  # (B, nc, Q, Q)
+    # Per-head decay ratio exp(l_i - l_j) with axes (B, nc, H, i, j); the
+    # exponent is masked *before* exp so acausal entries cannot overflow.
+    l_h = cum.transpose(0, 1, 3, 2)  # (B, nc, H, Q)
+    exponent = l_h[..., :, None] - l_h[..., None, :]
+    ratio = jnp.exp(
+        jnp.where(causal[None, None, None], exponent, -jnp.inf)
+    )
+    scores = cb[:, :, None] * ratio
+    xdt = xf * dtf[..., None]  # (B, nc, Q, H, P)
+    y_intra = jnp.einsum("bghij,bgjhp->bgihp", scores, xdt)
+
+    # Chunk summaries: state contribution and input decay for the carry.
+    chunk_state = jnp.einsum(
+        "bgjn,bgjhp,bgjh->bghpn",
+        bf,
+        xdt,
+        jnp.exp(total[:, :, None, :] - cum),
+    )
+
+    state0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def carry_fn(state, inputs):
+        chunk_st, tot = inputs  # (B,H,P,N), (B,H)
+        out_state = state  # state entering this chunk
+        new_state = state * jnp.exp(tot)[..., None, None] + chunk_st
+        return new_state, out_state
+
+    final, entry_states = jax.lax.scan(
+        carry_fn,
+        state0,
+        (
+            chunk_state.transpose(1, 0, 2, 3, 4),
+            total.transpose(1, 0, 2),
+        ),
+    )
+    entry_states = entry_states.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    y_inter = jnp.einsum(
+        "bgin,bghpn,bgih->bgihp",
+        cf,
+        entry_states,
+        jnp.exp(cum),
+    )
+    y = (y_intra + y_inter).reshape(bsz, s_pad, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def causal_conv1d(
+    x: jax.Array,  # (B, S, C)
+    weight: jax.Array,  # (W, C) depthwise
+    bias: jax.Array | None = None,
+    state: jax.Array | None = None,  # (B, W-1, C) left context
+) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv; returns (y, new_state)."""
+    w = weight.shape[0]
+    weight = weight.astype(x.dtype)
+    left = (
+        jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+        if state is None
+        else state.astype(x.dtype)
+    )
+    xp = jnp.concatenate([left, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * weight[i][None, None]
+        for i in range(w)
+    )
+    if bias is not None:
+        y = y + bias.astype(x.dtype)[None, None]
+    new_state = xp[:, -(w - 1) :] if w > 1 else left
+    return y, new_state
+
+
+def mamba2_param_specs(
+    d_model: int,
+    d_inner: int,
+    n_heads: int,
+    d_state: int,
+    d_conv: int,
+) -> dict[str, ParamSpec]:
+    conv_ch = d_inner + 2 * d_state
+    return {
+        "w_zx": ParamSpec(
+            (d_model, 2 * d_inner), ("embed", "ssm_inner2")
+        ),
+        "w_bc": ParamSpec((d_model, 2 * d_state), ("embed", None)),
+        "w_dt": ParamSpec((d_model, n_heads), ("embed", "ssm_heads")),
+        "dt_bias": ParamSpec((n_heads,), ("ssm_heads",), init="zeros"),
+        "a_log": ParamSpec((n_heads,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamSpec((n_heads,), ("ssm_heads",), init="ones"),
+        "conv_w": ParamSpec((d_conv, conv_ch), (None, "ssm_conv_ch")),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_conv_ch",), init="zeros"),
+        "norm_w": ParamSpec((d_inner,), ("ssm_inner",), init="ones"),
+        "w_out": ParamSpec((d_inner, d_model), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(x, params, d_inner, d_state):
+    zx = x @ params["w_zx"].astype(x.dtype)
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = x @ params["w_bc"].astype(x.dtype)
+    dt_raw = x @ params["w_dt"].astype(x.dtype)
+    return z, xin, bc, dt_raw
+
+
+def mamba2_forward(
+    x: jax.Array,  # (B, S, d_model)
+    params: dict[str, jax.Array],
+    *,
+    n_heads: int,
+    head_dim: int,
+    d_state: int,
+    chunk: int = 128,
+    norm_eps: float = 1e-6,
+    return_states: bool = False,
+):
+    """Full-sequence Mamba2 block (training / prefill).
+
+    Returns ``y`` or, with ``return_states``, ``(y, conv_state,
+    ssm_state)`` for handoff to the decode recurrence.
+    """
+    bsz, s, _ = x.shape
+    d_inner = n_heads * head_dim
+    z, xin, bc, dt_raw = _split_proj(x, params, d_inner, d_state)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, conv_state = causal_conv1d(
+        conv_in, params["conv_w"], params["conv_b"]
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :d_inner]
+    b, c = jnp.split(conv_out[..., d_inner:], 2, axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None]
+    )
+    xh = xin.reshape(bsz, s, n_heads, head_dim)
+    y, ssm_state = ssd_chunked(
+        xh, dt, params["a_log"], b, c, chunk=chunk
+    )
+    y = y + xh * params["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], eps=norm_eps)
+    out = y @ params["w_out"].astype(x.dtype)
+    if return_states:
+        return out, conv_state, ssm_state
+    return out
+
+
+def mamba2_decode_step(
+    x: jax.Array,  # (B, 1, d_model)
+    params: dict[str, jax.Array],
+    conv_state: jax.Array,  # (B, W-1, conv_ch)
+    ssm_state: jax.Array,  # (B, H, P, N) fp32
+    *,
+    n_heads: int,
+    head_dim: int,
+    d_state: int,
+    norm_eps: float = 1e-6,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token recurrence: returns (y, conv_state, ssm_state)."""
+    bsz = x.shape[0]
+    d_inner = n_heads * head_dim
+    z, xin, bc, dt_raw = _split_proj(x, params, d_inner, d_state)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, conv_state = causal_conv1d(
+        conv_in, params["conv_w"], params["conv_b"], state=conv_state
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :d_inner]
+    b, c = jnp.split(conv_out[..., d_inner:], 2, axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None]
+    )  # (B, 1, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[:, 0] * a[None])  # (B, H)
+    xh = xin.reshape(bsz, n_heads, head_dim).astype(jnp.float32)
+    update = jnp.einsum(
+        "bhp,bn->bhpn", xh * dt[:, 0, :, None], b[:, 0].astype(jnp.float32)
+    )
+    ssm_state = ssm_state * decay[..., None, None] + update
+    y = jnp.einsum(
+        "bhpn,bn->bhp", ssm_state, c[:, 0].astype(jnp.float32)
+    )
+    y = y + xh * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], eps=norm_eps)
+    return y @ params["w_out"].astype(x.dtype), conv_state, ssm_state

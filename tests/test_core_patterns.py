@@ -1,0 +1,117 @@
+"""Tests for the CC-algorithm pattern library (paper Section 2.1.2)."""
+
+import math
+
+import pytest
+
+from repro.core import patterns
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64])
+def test_rabenseifner_structure(n):
+    size = 40e6
+    pat = patterns.rabenseifner_allreduce(n, size)
+    pat.validate()
+    log = int(math.log2(n))
+    assert pat.n_steps == 2 * log
+    assert pat.n_distinct_configs == log
+    # Volumes halve each reduce-scatter step and mirror in the all-gather.
+    for t in range(log):
+        assert pat.steps[t].volume == pytest.approx(size / 2 ** (t + 1))
+        assert pat.steps[2 * log - 1 - t].volume == pytest.approx(
+            size / 2 ** (t + 1)
+        )
+    # XOR pairings are involutions (pairwise exchanges).
+    for step in pat.steps:
+        for x, peer in enumerate(step.perm):
+            assert step.perm[peer] == x
+
+
+def test_rabenseifner_fig3_example():
+    """Paper Fig. 3: 8 nodes, 40 MB => step volumes 20/10/5 | 5/10/20 MB."""
+    pat = patterns.rabenseifner_allreduce(8, 40e6)
+    assert [s.volume / 1e6 for s in pat.steps] == pytest.approx(
+        [20, 10, 5, 5, 10, 20]
+    )
+    assert [s.config for s in pat.steps] == [0, 1, 2, 2, 1, 0]
+    # Step 1 pairing from the paper: i XOR 1.
+    assert pat.steps[0].perm == (1, 0, 3, 2, 5, 4, 7, 6)
+    # Step 3 pairing: i XOR 4.
+    assert pat.steps[2].perm == (4, 5, 6, 7, 0, 1, 2, 3)
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 8, 32])
+def test_pairwise_structure(n):
+    size = 8e6
+    pat = patterns.pairwise_alltoall(n, size)
+    pat.validate()
+    assert pat.n_steps == n - 1
+    assert pat.n_distinct_configs == n - 1  # every step a fresh config
+    assert all(s.volume == pytest.approx(size / n) for s in pat.steps)
+    # Step k pairs i with i+k (mod n).
+    for k, step in enumerate(pat.steps, start=1):
+        assert step.perm == tuple((i + k) % n for i in range(n))
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 32, 33, 100])
+def test_bruck_structure(n):
+    size = 8e6
+    pat = patterns.bruck_alltoall(n, size)
+    pat.validate()
+    assert pat.n_steps <= math.ceil(math.log2(n))
+    # Every destination offset is forwarded once per set bit: total volume
+    # equals sum over offsets of popcount(offset) blocks.
+    expected_blocks = sum(bin(o).count("1") for o in range(1, n))
+    assert pat.total_volume == pytest.approx(expected_blocks * size / n)
+
+
+def test_bruck_has_fewer_steps_but_more_volume_than_pairwise():
+    """Paper Section 4.2.1: Bruck has higher total data volume but fewer
+    phases (fewer reconfiguration opportunities)."""
+    size = 8e6
+    bruck = patterns.bruck_alltoall(32, size)
+    pairwise = patterns.pairwise_alltoall(32, size)
+    assert bruck.n_steps < pairwise.n_steps
+    assert bruck.total_volume > pairwise.total_volume
+
+
+@pytest.mark.parametrize("n", [2, 3, 8])
+def test_ring_structure(n):
+    size = 10e6
+    pat = patterns.ring_allreduce(n, size)
+    pat.validate()
+    assert pat.n_steps == 2 * (n - 1)
+    assert pat.n_distinct_configs == 1  # the one-shot-friendly case
+    assert pat.total_volume == pytest.approx(2 * (n - 1) * size / n)
+
+
+def test_reduce_scatter_allgather_compose_to_rabenseifner():
+    rs = patterns.reduce_scatter(16, 32e6)
+    ag = patterns.all_gather(16, 32e6)
+    full = patterns.rabenseifner_allreduce(16, 32e6)
+    assert rs.steps + ag.steps == full.steps
+
+
+def test_nonpower_of_two_rejected():
+    with pytest.raises(ValueError):
+        patterns.rabenseifner_allreduce(6, 1e6)
+
+
+def test_get_pattern_registry():
+    pat = patterns.get_pattern("pairwise_alltoall", 4, 1e6)
+    assert pat.name == "pairwise_alltoall"
+    with pytest.raises(KeyError):
+        patterns.get_pattern("nope", 4, 1e6)
+
+
+def test_config_id_consistency_rejected():
+    bad = patterns.Pattern(
+        "bad",
+        2,
+        (
+            patterns.Step(config=0, volume=1.0, perm=(1, 0)),
+            patterns.Step(config=0, volume=1.0, perm=(0, 1)),
+        ),
+    )
+    with pytest.raises(ValueError, match="two different permutations"):
+        bad.validate()

@@ -1,0 +1,62 @@
+"""Tests for the SWOT shim / optical controller coordination layer."""
+
+import pytest
+
+from repro.core import (
+    CollectiveRequest,
+    OpticalFabric,
+    SwotShim,
+)
+
+
+def test_phase1_install_then_phase2_intercept_no_misses():
+    shim = SwotShim(OpticalFabric(16, 4))
+    reqs = [
+        CollectiveRequest("rabenseifner_allreduce", 16, 25e6, "dp_grad"),
+        CollectiveRequest("pairwise_alltoall", 16, 8e6, "moe_dispatch"),
+    ]
+    shim.install(reqs)  # Phase 1: pre-configuration
+    for _ in range(3):  # Phase 2: three training iterations
+        for r in reqs:
+            plan = shim.intercept(r)
+            assert plan.cct > 0
+    assert shim.interceptions == 6
+    assert shim.misses == 0
+    # The controller clock advanced by 3 iterations of both collectives.
+    expected = 3 * sum(p.cct for p in shim.plans)
+    assert shim.controller.clock == pytest.approx(expected)
+
+
+def test_unplanned_collective_counts_as_miss_but_still_works():
+    shim = SwotShim(OpticalFabric(8, 2))
+    plan = shim.intercept(
+        CollectiveRequest("bruck_alltoall", 8, 4e6, "surprise")
+    )
+    assert shim.misses == 1
+    assert plan.cct > 0
+
+
+def test_schedule_cache_dedupes_identical_signatures():
+    shim = SwotShim(OpticalFabric(8, 2))
+    a = CollectiveRequest("pairwise_alltoall", 8, 1e6, "x")
+    b = CollectiveRequest("pairwise_alltoall", 8, 1e6, "y")  # same signature
+    shim.install([a, b])
+    assert len(shim.plans) == 1
+
+
+def test_independent_mode_opt_in():
+    fabric = OpticalFabric(8, 4)
+    base = SwotShim(fabric)
+    fast = SwotShim(fabric, allow_independent=True)
+    req = CollectiveRequest("pairwise_alltoall", 8, 16e6, "a2a")
+    base_plan = base.intercept(req)
+    fast_plan = fast.intercept(req)
+    assert fast_plan.cct <= base_plan.cct * (1 + 1e-9)
+
+
+def test_iteration_report_mentions_collectives():
+    shim = SwotShim(OpticalFabric(8, 2))
+    shim.intercept(CollectiveRequest("rabenseifner_allreduce", 8, 2e6, "g"))
+    report = shim.iteration_report()
+    assert "rabenseifner_allreduce" in report
+    assert "reconfigurations" in report

@@ -1,0 +1,160 @@
+"""Pallas kernels vs pure-jnp oracles, interpret mode, shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "b,s,hq,hkv,d,causal,window",
+        [
+            (1, 128, 2, 2, 32, True, None),
+            (2, 96, 4, 2, 16, True, None),  # GQA + ragged blocks
+            (1, 64, 4, 1, 32, True, None),  # MQA
+            (1, 128, 2, 2, 16, True, 48),  # sliding window
+            (1, 80, 2, 2, 16, False, None),  # bidirectional
+        ],
+    )
+    def test_matches_oracle(self, b, s, hq, hkv, d, causal, window, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
+        k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+        v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+        out = ops.flash_attention(
+            q, k, v, causal=causal, window=window,
+            q_block=32, kv_block=32, interpret=True,
+        )
+        qm = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+        km = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+        vm = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+        expect = ref.ref_attention(qm, km, vm, causal=causal, window=window)
+        expect = expect.reshape(b, hq, s, d).transpose(0, 2, 1, 3)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(expect, np.float32),
+            rtol=tol,
+            atol=tol,
+        )
+
+    def test_matches_model_attention(self):
+        """Kernel path == the model's blocked-attention path."""
+        from repro.models.attention import blocked_attention
+
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (2, 64, 4, 16))
+        k = jax.random.normal(ks[1], (2, 64, 2, 16))
+        v = jax.random.normal(ks[2], (2, 64, 2, 16))
+        kernel_out = ops.flash_attention(
+            q, k, v, q_block=32, kv_block=32, interpret=True
+        )
+        model_out = blocked_attention(q, k, v, q_block=32, kv_block=32)
+        np.testing.assert_allclose(
+            np.asarray(kernel_out), np.asarray(model_out), atol=2e-5
+        )
+
+
+class TestSsdScan:
+    @pytest.mark.parametrize("chunk", [16, 32, 128])
+    @pytest.mark.parametrize("s", [64, 100])
+    def test_matches_oracle(self, chunk, s):
+        b, h, p, n = 2, 3, 8, 16
+        ks = jax.random.split(jax.random.PRNGKey(2), 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a_log = jax.random.normal(ks[2], (h,)) * 0.5
+        bb = jax.random.normal(ks[3], (b, s, n))
+        cc = jax.random.normal(ks[4], (b, s, n))
+        out = ops.ssd_scan(x, dt, a_log, bb, cc, chunk=chunk, interpret=True)
+        # Oracle on pre-scaled head-major inputs.
+        a = -jnp.exp(a_log)
+        xdt = (x * dt[..., None]).transpose(0, 2, 1, 3).reshape(b * h, s, p)
+        logd = (dt * a[None, None]).transpose(0, 2, 1).reshape(b * h, s, 1)
+        bbm = jnp.broadcast_to(bb[:, None], (b, h, s, n)).reshape(b * h, s, n)
+        ccm = jnp.broadcast_to(cc[:, None], (b, h, s, n)).reshape(b * h, s, n)
+        expect = ref.ref_ssd(xdt, logd, bbm, ccm)
+        expect = expect.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), atol=3e-4
+        )
+
+    def test_matches_model_ssd(self):
+        """Kernel path == the model's chunked SSD (same y)."""
+        from repro.models.ssm import ssd_chunked
+
+        b, s, h, p, n = 1, 48, 2, 8, 16
+        ks = jax.random.split(jax.random.PRNGKey(3), 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a_log = jax.random.normal(ks[2], (h,)) * 0.5
+        bb = jax.random.normal(ks[3], (b, s, n))
+        cc = jax.random.normal(ks[4], (b, s, n))
+        kernel_y = ops.ssd_scan(
+            x, dt, a_log, bb, cc, chunk=16, interpret=True
+        )
+        model_y, _ = ssd_chunked(x, dt, a_log, bb, cc, chunk=16)
+        np.testing.assert_allclose(
+            np.asarray(kernel_y), np.asarray(model_y), atol=3e-4
+        )
+
+
+class TestFusedReduce:
+    @pytest.mark.parametrize(
+        "shape", [(17,), (128, 64), (3, 5, 7), (8192,), (100000,)]
+    )
+    @pytest.mark.parametrize(
+        "dtype,out_dtype",
+        [
+            (jnp.float32, None),
+            (jnp.bfloat16, None),
+            (jnp.bfloat16, jnp.float32),
+        ],
+    )
+    def test_matches_oracle(self, shape, dtype, out_dtype):
+        ka, kb = jax.random.split(jax.random.PRNGKey(4))
+        a = jax.random.normal(ka, shape, dtype)
+        b = jax.random.normal(kb, shape, dtype)
+        out = ops.fused_reduce(a, b, out_dtype=out_dtype, interpret=True)
+        expect = ref.ref_reduce(a, b, out_dtype=out_dtype)
+        assert out.dtype == expect.dtype
+        assert out.shape == expect.shape
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(expect, np.float32),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+
+class TestRmsnorm:
+    @pytest.mark.parametrize("t,d", [(7, 64), (300, 128), (1024, 48)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("offset", [False, True])
+    def test_matches_oracle(self, t, d, dtype, offset):
+        kx, kw = jax.random.split(jax.random.PRNGKey(5))
+        x = jax.random.normal(kx, (t, d), dtype)
+        w = jax.random.normal(kw, (d,), jnp.float32)
+        out = ops.rmsnorm(x, w, offset=offset, interpret=True)
+        expect = ref.ref_rmsnorm(x, w, offset=offset)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(expect, np.float32),
+            rtol=tol,
+            atol=tol,
+        )
+
+    def test_matches_model_norm(self):
+        from repro.models.common import rms_norm
+
+        x = jax.random.normal(jax.random.PRNGKey(6), (33, 96))
+        w = jax.random.normal(jax.random.PRNGKey(7), (96,))
+        out = ops.rmsnorm(x, w, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(rms_norm(x, w)), atol=1e-5
+        )

@@ -1,0 +1,153 @@
+"""The paper's quantitative and qualitative claims, as assertions.
+
+Every claim from the paper's abstract / Sections 2.2, 4.2 that our
+simulator can evaluate is pinned here; EXPERIMENTS.md references these.
+"""
+
+import pytest
+
+from repro.core import (
+    FIG5_LINK_BANDWIDTH,
+    InfeasibleError,
+    OpticalFabric,
+    get_pattern,
+    ideal_cct,
+    one_shot,
+    plan_collective,
+    prestage_for,
+    rabenseifner_allreduce,
+    strawman_icr,
+    swot_greedy,
+)
+
+
+def _plan(algorithm, n, size_mb, planes=4, oneshot_planes=None):
+    pattern = get_pattern(algorithm, n, size_mb * 1e6)
+    fabric = prestage_for(OpticalFabric(n, planes), pattern)
+    return plan_collective(
+        fabric,
+        pattern,
+        one_shot_planes=oneshot_planes or max(planes, pattern.n_distinct_configs),
+        milp_time_limit=10.0,
+    )
+
+
+class TestSection22Motivation:
+    """Fig. 5: naive 1500 us -> SWOT 1200 us (20%)."""
+
+    def test_exact_published_ccts(self):
+        pattern = rabenseifner_allreduce(8, 40e6)
+        fabric = prestage_for(
+            OpticalFabric(
+                8, 2, bandwidth=FIG5_LINK_BANDWIDTH, t_recfg=200e-6
+            ),
+            pattern,
+        )
+        assert strawman_icr(fabric, pattern).cct == pytest.approx(1500e-6)
+        swot = swot_greedy(fabric, pattern)
+        assert swot.cct == pytest.approx(1200e-6)
+        assert ideal_cct(fabric, pattern) == pytest.approx(700e-6)
+
+    def test_reconfig_share_of_naive_cct(self):
+        """Paper: reconfiguration accounts for 53.3% of naive CCT...
+        (800/1500); our lockstep model realizes exactly that split."""
+        pattern = rabenseifner_allreduce(8, 40e6)
+        fabric = prestage_for(
+            OpticalFabric(
+                8, 2, bandwidth=FIG5_LINK_BANDWIDTH, t_recfg=200e-6
+            ),
+            pattern,
+        )
+        sched = strawman_icr(fabric, pattern)
+        recfg_time = 4 * 200e-6  # 4 lockstep pauses
+        assert recfg_time / sched.cct == pytest.approx(0.533, abs=0.01)
+
+
+class TestSection42CollectiveEfficiency:
+    """Fig. 7 claims at the paper's 32-node / 4-OCS setup."""
+
+    def test_swot_vs_oneshot_reduction_ranges_at_large_sizes(self):
+        # Paper ranges: 30.5-71.0% (Rabenseifner), 25.0-71.3% (pairwise,
+        # 5 nodes), 38.8-74.1% (Bruck).
+        for algorithm, n, hi in (
+            ("rabenseifner_allreduce", 32, 0.71),
+            ("pairwise_alltoall", 5, 0.713),
+            ("bruck_alltoall", 32, 0.741),
+        ):
+            plan = _plan(algorithm, n, 409.6)
+            red = plan.vs_one_shot
+            assert red is not None
+            assert 0.25 <= red <= hi + 0.03, (algorithm, red)
+
+    def test_oneshot_competitive_for_small_messages(self):
+        """Paper: below ~6.4 MB one-shot rivals or beats ICR schemes."""
+        plan = _plan("rabenseifner_allreduce", 32, 3.2)
+        assert plan.one_shot_cct < plan.cct
+
+    def test_strawman_gap_narrows_with_size(self):
+        small = _plan("rabenseifner_allreduce", 32, 1.6)
+        large = _plan("rabenseifner_allreduce", 32, 409.6)
+        assert small.vs_strawman > large.vs_strawman
+
+    def test_swot_never_loses_to_strawman(self):
+        for algorithm, n in (
+            ("rabenseifner_allreduce", 32),
+            ("pairwise_alltoall", 5),
+            ("bruck_alltoall", 32),
+        ):
+            for size in (0.8, 12.8, 409.6):
+                plan = _plan(algorithm, n, size)
+                assert plan.cct <= plan.strawman_cct * (1 + 1e-9)
+
+    def test_swot_above_ideal_due_to_reconfig_reserve(self):
+        """Paper: a gap to ideal remains (reconfiguration reserve)."""
+        plan = _plan("rabenseifner_allreduce", 32, 40.0)
+        assert plan.cct > plan.ideal_cct
+
+    def test_bruck_fewer_phases_lower_strawman_gains(self):
+        """Paper: Bruck's few phases restrict reconfiguration overlap."""
+        bruck = _plan("bruck_alltoall", 32, 409.6)
+        raben = _plan("rabenseifner_allreduce", 32, 25.6)
+        assert bruck.vs_strawman < raben.vs_strawman
+
+
+class TestSection42Scalability:
+    """Fig. 8: 4-OCS feasibility walls + gains grow with cluster size."""
+
+    def test_oneshot_feasibility_walls(self):
+        ok = rabenseifner_allreduce(16, 40e6)
+        one_shot(prestage_for(OpticalFabric(16, 4), ok), ok)
+        for algorithm, n in (
+            ("rabenseifner_allreduce", 32),
+            ("pairwise_alltoall", 6),
+        ):
+            pattern = get_pattern(algorithm, n, 40e6)
+            with pytest.raises(InfeasibleError):
+                one_shot(
+                    prestage_for(OpticalFabric(n, 4), pattern), pattern
+                )
+
+    def test_gain_grows_with_cluster_size(self):
+        gains = []
+        for n in (64, 512):
+            pattern = get_pattern("rabenseifner_allreduce", n, 40e6)
+            fabric = prestage_for(OpticalFabric(n, 4), pattern)
+            swot = swot_greedy(fabric, pattern)
+            straw = strawman_icr(fabric, pattern)
+            gains.append(1 - swot.cct / straw.cct)
+        assert gains[1] > gains[0]
+        # Paper: 14.5% at 64 nodes, 35.2% at 512; ours is a stronger
+        # scheduler so we require at least the paper's numbers.
+        assert gains[0] >= 0.145
+        assert gains[1] >= 0.352
+
+    def test_pairwise_gain_grows(self):
+        gains = {}
+        for n in (5, 10):
+            pattern = get_pattern("pairwise_alltoall", n, 40e6)
+            fabric = prestage_for(OpticalFabric(n, 4), pattern)
+            swot = swot_greedy(fabric, pattern)
+            straw = strawman_icr(fabric, pattern)
+            gains[n] = 1 - swot.cct / straw.cct
+        assert gains[10] > gains[5]
+        assert gains[5] >= 0.20  # paper: 20.0% at 5 nodes

@@ -1,0 +1,116 @@
+"""Mamba2 SSD: chunked dual form vs sequential oracle + decode recurrence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.common import init_params
+from repro.models.ssm import (
+    causal_conv1d,
+    mamba2_decode_step,
+    mamba2_forward,
+    mamba2_param_specs,
+    ssd_chunked,
+    ssd_reference,
+)
+
+
+def _inputs(key, b, s, h, p, n):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jax.random.normal(ks[2], (h,)) * 0.5
+    bb = jax.random.normal(ks[3], (b, s, n))
+    cc = jax.random.normal(ks[4], (b, s, n))
+    return x, dt, a_log, bb, cc
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 37, 128])
+def test_chunked_matches_sequential(chunk):
+    x, dt, a_log, b, c = _inputs(jax.random.PRNGKey(0), 2, 37, 3, 8, 16)
+    y_ref, st_ref = ssd_reference(x, dt, a_log, b, c)
+    y, st = ssd_chunked(x, dt, a_log, b, c, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.integers(min_value=1, max_value=50),
+    h=st.sampled_from([1, 3]),
+    chunk=st.sampled_from([4, 8, 32]),
+)
+def test_chunked_property(s, h, chunk):
+    x, dt, a_log, b, c = _inputs(jax.random.PRNGKey(9), 1, s, h, 4, 8)
+    y_ref, st_ref = ssd_reference(x, dt, a_log, b, c)
+    y, st = ssd_chunked(x, dt, a_log, b, c, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), atol=3e-4)
+
+
+def test_initial_state_carryover():
+    """Splitting a sequence across two chunked calls == one call."""
+    x, dt, a_log, b, c = _inputs(jax.random.PRNGKey(1), 1, 32, 2, 4, 8)
+    y_full, st_full = ssd_chunked(x, dt, a_log, b, c, chunk=8)
+    y1, st1 = ssd_chunked(
+        x[:, :16], dt[:, :16], a_log, b[:, :16], c[:, :16], chunk=8
+    )
+    y2, st2 = ssd_chunked(
+        x[:, 16:],
+        dt[:, 16:],
+        a_log,
+        b[:, 16:],
+        c[:, 16:],
+        chunk=8,
+        init_state=st1,
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], axis=1)),
+        np.asarray(y_full),
+        atol=2e-4,
+    )
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full), atol=2e-4)
+
+
+def test_causal_conv_state_continuation():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 20, 6))
+    w = jax.random.normal(jax.random.PRNGKey(3), (4, 6))
+    bias = jax.random.normal(jax.random.PRNGKey(4), (6,))
+    y_full, _ = causal_conv1d(x, w, bias)
+    y1, st = causal_conv1d(x[:, :11], w, bias)
+    y2, _ = causal_conv1d(x[:, 11:], w, bias, state=st)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], axis=1)),
+        np.asarray(y_full),
+        atol=1e-5,
+    )
+
+
+def test_block_forward_decode_equivalence():
+    d_model, n_heads, head_dim, d_state = 32, 4, 8, 16
+    specs = mamba2_param_specs(
+        d_model, n_heads * head_dim, n_heads, d_state, 4
+    )
+    params = init_params(specs, jax.random.PRNGKey(5))
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 12, d_model))
+    y_full = mamba2_forward(
+        x, params, n_heads=n_heads, head_dim=head_dim, d_state=d_state,
+        chunk=4,
+    )
+    conv_state = jnp.zeros((2, 3, n_heads * head_dim + 2 * d_state))
+    ssm_state = jnp.zeros((2, n_heads, head_dim, d_state))
+    ys = []
+    for t in range(12):
+        y_t, conv_state, ssm_state = mamba2_decode_step(
+            x[:, t : t + 1], params, conv_state, ssm_state,
+            n_heads=n_heads, head_dim=head_dim, d_state=d_state,
+        )
+        ys.append(y_t)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, axis=1)),
+        np.asarray(y_full),
+        atol=2e-4,
+    )

@@ -1,0 +1,201 @@
+"""Training substrate: loop, checkpoint/restart, failure injection,
+elastic re-mesh, grad accumulation, data pipeline resumability."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCell
+from repro.configs.registry import smoke_config
+from repro.data.pipeline import SyntheticPipeline, shard_batch
+from repro.models.lm import build_model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, lr_at
+from repro.sharding.rules import single_device_context
+from repro.train.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.ft import FailurePlan, run_with_restarts
+from repro.train.loop import Trainer, init_train_state
+
+CTX = single_device_context()
+CELL = ShapeCell("tiny", "train", 32, 4)
+OPT = AdamWConfig(peak_lr=1e-3, warmup_steps=2, total_steps=50)
+
+
+def _trainer(name="qwen3_4b", grad_accum=1):
+    cfg = smoke_config(name)
+    model = build_model(cfg, CTX)
+    return Trainer(model=model, cell=CELL, opt_cfg=OPT, grad_accum=grad_accum)
+
+
+def _params_digest(state):
+    return {
+        "/".join(map(str, path)): np.asarray(leaf, np.float32).sum()
+        for path, leaf in jax.tree_util.tree_leaves_with_path(state.params)
+    }
+
+
+class TestLoop:
+    def test_loss_decreases(self):
+        trainer = _trainer()
+        state = init_train_state(trainer.model, jax.random.PRNGKey(0))
+        pipe = SyntheticPipeline(trainer.model.cfg, CELL, seed=1)
+        state, history = trainer.run(state, pipe, n_steps=30, log_every=1)
+        losses = [h["loss"] for h in history]
+        assert losses[-1] < losses[0], losses
+        assert int(state.step) == 30
+
+    def test_grad_accum_matches_full_batch(self):
+        from repro.train.loop import make_grad_fn
+
+        trainer = _trainer()
+        model = trainer.model
+        params = init_train_state(model, jax.random.PRNGKey(0)).params
+        pipe = SyntheticPipeline(model.cfg, CELL, seed=2)
+        batch = shard_batch(next(pipe), CTX)
+        with jax.set_mesh(CTX.mesh):
+            l1, _, g1 = jax.jit(make_grad_fn(model, 1))(params, batch)
+            l4, _, g4 = jax.jit(make_grad_fn(model, 4))(params, batch)
+        np.testing.assert_allclose(float(l1), float(l4), rtol=1e-3)
+        # Per-leaf relative L2 difference bounded by bf16 rounding noise.
+        for (path, a), b in zip(
+            jax.tree_util.tree_leaves_with_path(g1), jax.tree.leaves(g4)
+        ):
+            a = np.asarray(a, np.float32)
+            b = np.asarray(b, np.float32)
+            denom = np.linalg.norm(a) + 1e-8
+            rel = np.linalg.norm(a - b) / denom
+            assert rel < 3e-2, (path, rel)
+
+
+class TestOptim:
+    def test_lr_schedule(self):
+        cfg = AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=100)
+        assert float(lr_at(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+        assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(
+            cfg.min_lr_ratio, abs=1e-6
+        )
+
+    def test_clipping(self):
+        params = {"w": jnp.ones((4,))}
+        opt = adamw_init(params)
+        huge = {"w": jnp.full((4,), 1e6)}
+        _, _, metrics = adamw_update(
+            huge, opt, params, AdamWConfig(clip_norm=1.0)
+        )
+        assert float(metrics["grad_norm"]) > 1e5  # norm reported pre-clip
+
+
+class TestDataPipeline:
+    def test_deterministic_and_resumable(self):
+        cfg = smoke_config("qwen3_4b")
+        p1 = SyntheticPipeline(cfg, CELL, seed=7)
+        batches = [next(p1) for _ in range(4)]
+        state = p1.state()
+        more = [next(p1) for _ in range(2)]
+        p2 = SyntheticPipeline(cfg, CELL)
+        p2.restore(state)
+        resumed = [next(p2) for _ in range(2)]
+        for a, b in zip(more, resumed):
+            np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        # And a fresh pipeline reproduces from the start.
+        p3 = SyntheticPipeline(cfg, CELL, seed=7)
+        np.testing.assert_array_equal(
+            batches[0]["tokens"], next(p3)["tokens"]
+        )
+
+
+class TestCheckpointRestart:
+    def test_atomic_roundtrip(self, tmp_path):
+        trainer = _trainer()
+        state = init_train_state(trainer.model, jax.random.PRNGKey(0))
+        pipe = SyntheticPipeline(trainer.model.cfg, CELL, seed=3)
+        state = dataclasses.replace(state, step=jnp.asarray(7, jnp.int32))
+        save_checkpoint(str(tmp_path), state, pipe.state())
+        assert latest_step(str(tmp_path)) == 7
+        restored, data_state = restore_checkpoint(
+            str(tmp_path), trainer.model
+        )
+        assert int(restored.step) == 7
+        assert data_state == pipe.state()
+        for k, v in _params_digest(state).items():
+            np.testing.assert_allclose(v, _params_digest(restored)[k])
+
+    def test_failure_injection_bitwise_recovery(self, tmp_path):
+        """Interrupted run == uninterrupted run, bitwise."""
+        target = 12
+
+        # Uninterrupted reference.
+        ref_trainer = _trainer()
+        ref_trainer.checkpoint_every = 4
+        ref_state, restarts = run_with_restarts(
+            ref_trainer,
+            lambda: SyntheticPipeline(ref_trainer.model.cfg, CELL, seed=5),
+            str(tmp_path / "ref"),
+            target_steps=target,
+        )
+        assert restarts == 0
+
+        # Run with two injected failures.
+        ft_trainer = _trainer()
+        ft_trainer.checkpoint_every = 4
+        ft_state, restarts = run_with_restarts(
+            ft_trainer,
+            lambda: SyntheticPipeline(ft_trainer.model.cfg, CELL, seed=5),
+            str(tmp_path / "ft"),
+            target_steps=target,
+            failure_plan=FailurePlan(at_steps=(5, 9)),
+        )
+        assert restarts == 2
+        assert int(ft_state.step) == target
+        ref_d, ft_d = _params_digest(ref_state), _params_digest(ft_state)
+        for k in ref_d:
+            np.testing.assert_array_equal(ref_d[k], ft_d[k])
+
+
+class TestElastic:
+    def test_restore_onto_different_mesh(self, tmp_path):
+        """Checkpoint from one mesh restores onto another (re-shard)."""
+        trainer = _trainer()
+        state = init_train_state(trainer.model, jax.random.PRNGKey(1))
+        pipe = SyntheticPipeline(trainer.model.cfg, CELL, seed=4)
+        save_checkpoint(str(tmp_path), state, pipe.state())
+        # "New" mesh: same devices, different context object; at scale
+        # this is the (fewer-hosts) recovery mesh.
+        from repro.sharding.rules import single_device_context
+
+        ctx2 = single_device_context()
+        model2 = build_model(trainer.model.cfg, ctx2)
+        restored, _ = restore_checkpoint(str(tmp_path), model2)
+        # Training continues on the new mesh.
+        t2 = Trainer(model=model2, cell=CELL, opt_cfg=OPT)
+        state2, history = t2.run(restored, pipe, n_steps=2, log_every=1)
+        assert int(state2.step) == 2
+        assert np.isfinite(history[-1]["loss"])
+
+
+class TestServe:
+    def test_batched_generation(self):
+        from repro.serve.engine import Request, ServeEngine
+
+        cfg = smoke_config("qwen2_1_5b")
+        model = build_model(cfg, CTX)
+        params = model.init(jax.random.PRNGKey(0))
+        engine = ServeEngine(model, params, max_len=64)
+        reqs = [
+            Request(prompt=[5, 6, 7], max_new_tokens=4),
+            Request(prompt=[9, 10], max_new_tokens=6),
+        ]
+        outs = engine.generate(reqs)
+        assert len(outs) == 2
+        assert len(outs[0].tokens) == 4
+        assert len(outs[1].tokens) == 6
+        assert all(
+            0 <= t < cfg.padded_vocab for o in outs for t in o.tokens
+        )
