@@ -1,0 +1,104 @@
+"""Multi-tenant fabric arbitration sweep: tenants x planes x t_recfg.
+
+Replays Poisson traces of model-config-derived collectives through the
+``repro.runtime`` arbiter and reports, per cell:
+
+* mean realized CCT and mean/p95 queueing delay per job,
+* mean plane utilization over the replay makespan,
+* mean slowdown vs the whole-fabric solo CCT of the same collective.
+
+The degenerate 1-tenant cell doubles as a regression anchor: with one job
+in flight at a time the arbiter must realize exactly the serial
+scheduler's CCT (asserted in tests/test_runtime.py; here it shows up as
+slowdown 1.00x for hot circuits).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs.registry import get_config
+from repro.core import OpticalFabric
+from repro.runtime import arch_request_mix, poisson_trace, replay
+
+# Tenant pool: one training job per architecture family (dense, MoE).
+_TENANT_ARCHS = ("qwen3_4b", "gemma_2b", "qwen2_moe_a2_7b", "qwen2_1_5b")
+
+_N_NODES = 8
+# Modest message scale keeps every cell sub-second of sim *and* wall time.
+_TOKENS_PER_STEP = 16_384
+_SIZE_SCALE = 1 / 256  # shrink analytic DP-sync sizes to benchmark scale
+
+
+def _tenant_mixes(n_tenants: int):
+    tenants = []
+    for name in _TENANT_ARCHS[:n_tenants]:
+        mix = arch_request_mix(
+            get_config(name),
+            n_nodes=_N_NODES,
+            tokens_per_step=_TOKENS_PER_STEP,
+        )
+        mix = [
+            type(r)(r.algorithm, r.n_nodes, r.size * _SIZE_SCALE, r.tag)
+            for r in mix
+        ]
+        tenants.append((name, mix))
+    return tenants
+
+
+def run(quick: bool = False) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    t_wall = time.perf_counter()
+    if quick:
+        cells = [(2, 4, 200e-6)]
+        rate, horizon = 30.0, 0.25
+    else:
+        cells = [
+            (n_tenants, n_planes, t_recfg)
+            for n_tenants in (1, 2, 4)
+            for n_planes in (2, 4, 8)
+            for t_recfg in (50e-6, 200e-6)
+        ]
+        rate, horizon = 30.0, 0.5
+    for n_tenants, n_planes, t_recfg in cells:
+        fabric = OpticalFabric(_N_NODES, n_planes, t_recfg=t_recfg)
+        trace = poisson_trace(
+            _tenant_mixes(n_tenants),
+            rate=rate,
+            horizon=horizon,
+            seed=7,
+        )
+        report = replay(trace, fabric, method="greedy")
+        cell = (
+            f"mt_t{n_tenants}_p{n_planes}_r{t_recfg * 1e6:.0f}us"
+        )
+        rows.append(
+            (
+                f"{cell}_cct",
+                report.mean_cct * 1e6,
+                f"{len(report.completed)}jobs "
+                f"util={report.utilization:.2f} "
+                f"slowdown={report.mean_slowdown():.2f}x",
+            )
+        )
+        rows.append(
+            (
+                f"{cell}_queue",
+                report.mean_queueing_delay * 1e6,
+                f"p95={report.p95_queueing_delay * 1e6:.1f}us "
+                f"replans={report.stats.replans}",
+            )
+        )
+    rows.append(
+        (
+            "multi_tenant_wall_time",
+            (time.perf_counter() - t_wall) * 1e6,
+            "bench runtime",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, note in run():
+        print(f"{name},{us:.1f},{note}")

@@ -9,6 +9,12 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
 * kernel_bench     -- Pallas kernel microbenches (interpret mode)
 * swot_ladder      -- optical scheduling modes on a real step's
                       collectives (EXPERIMENTS.md section 4.1)
+* multi_tenant_bench -- concurrent collectives on a shared fabric
+                      (tenants x planes x t_recfg sweep)
+
+Usage: ``python benchmarks/run.py [module-substring] [--quick]``.
+``--quick`` runs a single-cell smoke sweep per module that supports it
+(CI uses this).
 """
 
 import sys
@@ -20,6 +26,7 @@ def main() -> None:
         fig7_cct_vs_msgsize,
         fig8_scalability,
         kernel_bench,
+        multi_tenant_bench,
         scheduler_bench,
         swot_ladder,
     )
@@ -31,13 +38,28 @@ def main() -> None:
         scheduler_bench,
         kernel_bench,
         swot_ladder,
+        multi_tenant_bench,
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = [a for a in sys.argv[1:]]
+    quick = "--quick" in args
+    args = [a for a in args if a != "--quick"]
+    only = args[0] if args else None
     print("name,us_per_call,derived")
     for module in modules:
         if only and only not in module.__name__:
             continue
-        for name, us, note in module.run():
+        if quick:
+            import inspect
+
+            if "quick" in inspect.signature(module.run).parameters:
+                rows = module.run(quick=True)
+            elif only or module is fig5_motivation:
+                rows = module.run()  # cheap (or explicitly requested)
+            else:
+                continue  # no quick mode: skipped in CI smoke runs
+        else:
+            rows = module.run()
+        for name, us, note in rows:
             print(f"{name},{us:.1f},{note}", flush=True)
 
 

@@ -26,14 +26,14 @@ from repro.core import (
 )
 from repro.core.planner import profile_train_step
 from repro.models.lm import _decoder_specs
-from repro.sharding.rules import MeshContext
+from repro.sharding.rules import MeshContext, abstract_mesh_compat
 
 
 def run() -> list[tuple[str, float, str]]:
     cfg = get_config("qwen2_moe_a2_7b").replace(
         moe_token_slice=True, sequence_parallel=True
     )
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh_compat((16, 16), ("data", "model"))
     ctx = MeshContext(mesh=mesh, dp_axes=("data",))
     cell = shape_cell("train_4k")
     specs = _decoder_specs(cfg, ctx)

@@ -16,13 +16,13 @@ from repro.configs.registry import get_config
 from repro.core import OpticalFabric, SwotShim, TPU_V5E_LINK_BANDWIDTH
 from repro.core.planner import profile_train_step
 from repro.models.lm import _decoder_specs  # spec-only; no allocation
-from repro.sharding.rules import MeshContext
+from repro.sharding.rules import MeshContext, abstract_mesh_compat
 
 
 def main() -> None:
     cfg = get_config("qwen2_moe_a2_7b")
     # AbstractMesh: the planner only needs mesh *shapes*; no devices.
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh_compat((16, 16), ("data", "model"))
     ctx = MeshContext(mesh=mesh, dp_axes=("data",))
     specs = _decoder_specs(cfg, ctx)
     cell = shape_cell("train_4k")

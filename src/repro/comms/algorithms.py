@@ -31,7 +31,10 @@ from repro.core.patterns import (
 
 
 def _axis_size(axis: str) -> int:
-    return lax.axis_size(axis)
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    # Older JAX: the bound axis size is on the env frame via psum of 1.
+    return lax.psum(1, axis)
 
 
 def _rotation_perm(n: int, shift: int) -> list[tuple[int, int]]:

@@ -65,7 +65,9 @@ def compressed_all_reduce(
         error'  = (x + error) - dequantize(send)
         result  = ring-sum of dequantized payloads / N
     """
-    n = lax.axis_size(axis)
+    from repro.comms.algorithms import _axis_size
+
+    n = _axis_size(axis)
     if error is None:
         error = jnp.zeros_like(x)
     target = x + error

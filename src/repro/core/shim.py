@@ -14,20 +14,26 @@ optical fabric.  It runs in two phases:
   the same semantics as the underlying collective (our JAX comms backend
   computes the actual values) plus the modeled completion time.
 
-On real hardware the controller would issue OCS RPCs; here it advances a
-simulated clock so end-to-end drivers can report per-iteration optical
-timelines.
+On real hardware the controller would issue OCS RPCs; here it either
+advances a serial simulated clock (single-tenant, the degenerate case) or
+routes the trigger through the multi-tenant runtime
+(``repro.runtime.FabricArbiter``), which arbitrates plane leases between
+concurrent collectives -- see DESIGN.md section 10.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
+from typing import TYPE_CHECKING
 
 from repro.core.fabric import OpticalFabric
 from repro.core.patterns import get_pattern
 from repro.core.schedule import DependencyMode, Schedule
 from repro.core.scheduler import SwotPlan, plan_collective
+
+if TYPE_CHECKING:  # avoid core <-> runtime import cycle at runtime
+    from repro.runtime.arbiter import FabricArbiter
 
 # Collectives whose steps carry no data dependency can use the beyond-paper
 # INDEPENDENT mode (DESIGN.md section 9).
@@ -57,12 +63,24 @@ class _ControllerLog:
 class OpticalController:
     """Programmable optical-path control (simulated).
 
-    Accepts installed schedules and, per triggered collective, replays the
-    schedule's reconfiguration events against a simulated clock.
+    Accepts installed schedules and, per triggered collective, either
+
+    * **serial path** (no ``runtime``): replays the schedule's events
+      against a scalar clock -- one collective at a time owns the whole
+      fabric (the degenerate single-tenant case), or
+    * **runtime path**: submits the collective to a
+      ``repro.runtime.FabricArbiter`` and runs its event engine until the
+      job completes; the realized CCT then reflects plane contention,
+      queueing, and lease resizes from any other in-flight collectives.
     """
 
-    def __init__(self, fabric: OpticalFabric) -> None:
+    def __init__(
+        self,
+        fabric: OpticalFabric,
+        runtime: "FabricArbiter | None" = None,
+    ) -> None:
         self.fabric = fabric
+        self.runtime = runtime
         self.clock = 0.0
         self.log = _ControllerLog()
         self._installed: dict[tuple, Schedule] = {}
@@ -70,13 +88,48 @@ class OpticalController:
     def install(self, signature: tuple, schedule: Schedule) -> None:
         self._installed[signature] = schedule
 
-    def trigger(self, signature: tuple) -> float:
-        """Execute one installed collective; returns its CCT."""
+    def uninstall(self, signature: tuple) -> None:
+        self._installed.pop(signature, None)
+
+    def trigger(
+        self,
+        signature: tuple,
+        priority: int = 0,
+        method: str | None = None,
+        allow_independent: bool | None = None,
+    ) -> float:
+        """Execute one installed collective; returns its realized CCT.
+
+        On the runtime path ``method``/``allow_independent`` are passed
+        through to the arbiter so the shim's planning preferences apply
+        to the in-fabric (re-)planning too, not just the installed
+        reference schedule.
+        """
         schedule = self._installed[signature]
-        self.log.reconfigurations += schedule.total_reconfigurations
-        self.log.busy_seconds += schedule.cct
-        self.clock += schedule.cct
-        return schedule.cct
+        if self.runtime is None:
+            self.log.reconfigurations += schedule.total_reconfigurations
+            self.log.busy_seconds += schedule.cct
+            self.clock += schedule.cct
+            return schedule.cct
+        algorithm, n_nodes, size = signature
+        recfg_before = self.runtime.stats.reconfigurations
+        record = self.runtime.run_collective(
+            CollectiveRequest(algorithm, n_nodes, float(size)),
+            priority=priority,
+            method=method,
+            allow_independent=allow_independent,
+        )
+        if record.rejected:
+            raise RuntimeError(
+                f"fabric arbiter rejected collective {signature} "
+                "(admission queue full)"
+            )
+        self.log.reconfigurations += (
+            self.runtime.stats.reconfigurations - recfg_before
+        )
+        self.log.busy_seconds += record.cct
+        self.clock = self.runtime.engine.now
+        return record.cct
 
 
 class SwotShim:
@@ -89,15 +142,22 @@ class SwotShim:
         method: str = "auto",
         allow_independent: bool = False,
         milp_time_limit: float = 60.0,
+        plan_cache_capacity: int | None = None,
     ) -> None:
+        if plan_cache_capacity is not None and plan_cache_capacity < 1:
+            raise ValueError("plan_cache_capacity must be >= 1")
         self.fabric = fabric
         self.controller = controller or OpticalController(fabric)
         self.method = method
         self.allow_independent = allow_independent
         self.milp_time_limit = milp_time_limit
+        # LRU plan cache: unbounded by default; long-running multi-tenant
+        # replays set a capacity so unique signatures don't grow forever.
+        self.plan_cache_capacity = plan_cache_capacity
         self._plans: "OrderedDict[tuple, SwotPlan]" = OrderedDict()
         self.interceptions = 0
         self.misses = 0
+        self.evictions = 0
 
     # -- Phase 1 -----------------------------------------------------------
     def install(self, requests: list[CollectiveRequest]) -> None:
@@ -107,6 +167,7 @@ class SwotShim:
     def _plan_for(self, req: CollectiveRequest) -> SwotPlan:
         sig = req.signature
         if sig in self._plans:
+            self._plans.move_to_end(sig)  # LRU touch
             return self._plans[sig]
         mode = (
             DependencyMode.INDEPENDENT
@@ -126,6 +187,13 @@ class SwotShim:
         )
         self._plans[sig] = plan
         self.controller.install(sig, plan.schedule)
+        if (
+            self.plan_cache_capacity is not None
+            and len(self._plans) > self.plan_cache_capacity
+        ):
+            evicted_sig, _ = self._plans.popitem(last=False)
+            self.controller.uninstall(evicted_sig)
+            self.evictions += 1
         return plan
 
     # -- Phase 2 -----------------------------------------------------------
@@ -141,7 +209,11 @@ class SwotShim:
         if sig not in self._plans:
             self.misses += 1
         plan = self._plan_for(req)
-        self.controller.trigger(sig)
+        self.controller.trigger(
+            sig,
+            method=self.method,
+            allow_independent=self.allow_independent,
+        )
         return plan
 
     @property

@@ -49,7 +49,7 @@ from repro.launch.mesh import production_context
 from repro.models.common import is_spec
 from repro.models.lm import build_model
 from repro.optim.adamw import AdamWConfig, adamw_init
-from repro.sharding.rules import MeshContext, param_partition_specs
+from repro.sharding.rules import MeshContext, param_partition_specs, set_mesh_compat
 
 ARTIFACT_DIR = os.path.join("artifacts", "dryrun")
 
@@ -132,13 +132,15 @@ def run_cell(
     chips = ctx.mesh.size
     t0 = time.time()
     step_fn, inputs, model = _step_and_inputs(cfg, ctx, cell)
-    with jax.set_mesh(ctx.mesh):
+    with set_mesh_compat(ctx.mesh):
         lowered = jax.jit(step_fn, donate_argnums=(0,)).lower(*inputs)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # older JAX: one dict per device
+            cost = cost[0] if cost else {}
         summary = analyze_hlo_text(compiled.as_text())
     model_flops = model_flops_for(cfg, cell, model.specs)
     roof = roofline_from_summary(

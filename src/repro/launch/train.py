@@ -83,10 +83,10 @@ def main() -> None:
     if shim is not None:
         # Plan against the production mesh shapes (AbstractMesh: the
         # planner reads shapes only), independent of the local run mesh.
-        from repro.sharding.rules import MeshContext
+        from repro.sharding.rules import MeshContext, abstract_mesh_compat
 
         plan_ctx = MeshContext(
-            mesh=jax.sharding.AbstractMesh((16, 16), ("data", "model")),
+            mesh=abstract_mesh_compat((16, 16), ("data", "model")),
             dp_axes=("data",),
         )
         report = trainer.plan_optics(plan_ctx)

@@ -27,6 +27,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.sharding.rules import shard_map_compat
 
 from repro.models.common import ParamSpec, activation
 
@@ -260,7 +261,7 @@ def moe_ffn(
     # 'model' by construction -- but the static varying-axes checker cannot
     # see through all_to_all.  The redundant per-row dispatch compute this
     # implies is a recorded Perf lever (EP token slicing, EXPERIMENTS.md).
-    y, aux, drop = jax.shard_map(
+    y, aux, drop = shard_map_compat(
         body,
         mesh=mesh,
         in_specs=(x_spec, P(), expert_spec, expert_spec, down_spec),

@@ -1,0 +1,44 @@
+"""Concurrent multi-tenant optical runtime.
+
+The core scheduler (``repro.core``) answers "what is the best schedule for
+ONE collective that owns the whole fabric".  This package makes the fabric
+a *shared, arbitrated resource*:
+
+* ``engine``   -- deterministic event-driven simulation (event heap,
+  simulated time).
+* ``arbiter``  -- admits concurrent ``CollectiveRequest`` streams, leases
+  subsets of OCS planes to in-flight collectives, re-plans a collective
+  via the greedy scheduler when its lease shrinks or grows, and applies
+  priorities + backpressure through an admission queue.
+* ``workload`` -- multi-job trace generation (Poisson arrivals, per-job
+  algorithm/size mixes derived from the model configs) and replay with
+  per-job CCT / queueing-delay / plane-utilization statistics.
+
+See DESIGN.md section 10 for the full model.
+"""
+
+from repro.runtime.arbiter import (
+    ArbiterStats,
+    FabricArbiter,
+    JobRecord,
+)
+from repro.runtime.engine import SimEngine
+from repro.runtime.workload import (
+    JobSpec,
+    ReplayReport,
+    arch_request_mix,
+    poisson_trace,
+    replay,
+)
+
+__all__ = [
+    "ArbiterStats",
+    "FabricArbiter",
+    "JobRecord",
+    "JobSpec",
+    "ReplayReport",
+    "SimEngine",
+    "arch_request_mix",
+    "poisson_trace",
+    "replay",
+]

@@ -1,0 +1,514 @@
+"""Fabric arbiter: plane leases for concurrent collectives.
+
+The serial path (``OpticalController.trigger``) models one collective at a
+time owning every OCS plane.  The arbiter makes the fabric a shared
+resource with an event-driven execution model:
+
+* **Admission** -- ``submit`` enqueues a ``CollectiveRequest``; a job is
+  admitted when at least ``min_planes`` planes are free.  The admission
+  queue is priority-ordered (higher ``priority`` first, FIFO within a
+  priority); an optional ``max_queue_depth`` applies backpressure by
+  rejecting submissions once the queue is full.
+* **Leases** -- an admitted job receives an exclusive lease on a subset
+  of planes (all free planes when nothing else is waiting, otherwise its
+  fair share).  No plane is ever owned by two in-flight collectives;
+  ``assert_invariants`` checks this partition property.
+* **Planning** -- the job's remaining steps are scheduled on a
+  *sub-fabric* (its leased planes only) by the existing SWOT scheduler,
+  so every single-collective optimization (reconfiguration-communication
+  overlap, water-filling splits, LP polish) applies unchanged.  With a
+  full-fabric lease this degenerates to exactly the serial plan.
+* **Re-planning** -- lease changes take effect at step boundaries (a
+  plane cannot be revoked mid-transmission): a job asked to shrink
+  releases planes and re-plans its remaining steps on the smaller
+  sub-fabric; freed planes are granted to waiting jobs or offered to
+  running ones (grow), which likewise absorb them at their next boundary.
+  INDEPENDENT-mode jobs have no step barrier, so they resize only at
+  completion.
+
+Physical OCS state is tracked across jobs: a plane's installed
+permutation is tagged by ``(algorithm, n_nodes)`` -- the namespace within
+which config ids denote identical port maps -- so a follow-up job running
+the *same* algorithm at the same communicator size reuses installed
+circuits, while any other job pays the reconfiguration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+
+from repro.core.fabric import OpticalFabric
+from repro.core.patterns import Pattern, get_pattern
+from repro.core.schedule import DependencyMode, Kind, Schedule
+from repro.core.scheduler import swot_schedule
+from repro.core.shim import _INDEPENDENT_SAFE, CollectiveRequest
+from repro.runtime.engine import SimEngine
+
+_EPS = 1e-12
+
+# Namespace within which OCS config ids denote identical permutations.
+ConfigKey = tuple[str, int]  # (algorithm, n_nodes)
+
+
+@dataclasses.dataclass
+class JobRecord:
+    """Per-job outcome statistics."""
+
+    job_id: int
+    tag: str
+    algorithm: str
+    n_nodes: int
+    size: float
+    priority: int
+    arrival: float
+    start: float | None = None  # admission (lease grant) time
+    finish: float | None = None
+    replans: int = 0
+    planes_min: int = 0
+    planes_max: int = 0
+    rejected: bool = False
+
+    @property
+    def queueing_delay(self) -> float | None:
+        return None if self.start is None else self.start - self.arrival
+
+    @property
+    def cct(self) -> float | None:
+        if self.finish is None or self.start is None:
+            return None
+        return self.finish - self.start
+
+    @property
+    def response_time(self) -> float | None:
+        return None if self.finish is None else self.finish - self.arrival
+
+
+@dataclasses.dataclass
+class ArbiterStats:
+    """Aggregate fabric statistics."""
+
+    admitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    replans: int = 0
+    reconfigurations: int = 0
+    plane_busy: dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def utilization(self, makespan: float, n_planes: int) -> float:
+        """Mean fraction of [0, makespan] planes spent transmitting or
+        reconfiguring."""
+        if makespan <= 0:
+            return 0.0
+        busy = sum(self.plane_busy.get(j, 0.0) for j in range(n_planes))
+        return busy / (makespan * n_planes)
+
+
+@dataclasses.dataclass
+class _Job:
+    job_id: int
+    req: CollectiveRequest
+    pattern: Pattern
+    priority: int
+    mode: DependencyMode
+    record: JobRecord
+    method: str = "greedy"
+    planes: tuple[int, ...] = ()
+    step_idx: int = 0
+    plan: Schedule | None = None
+    plan_base_step: int = 0
+    plan_t0: float = 0.0
+    boundaries: tuple[float, ...] = ()
+    target_planes: int = 0
+    pending_planes: tuple[int, ...] = ()
+    planned: bool = False
+
+    @property
+    def key(self) -> ConfigKey:
+        return (self.req.algorithm, self.req.n_nodes)
+
+
+class FabricArbiter:
+    """Admits concurrent collectives and leases OCS planes to them."""
+
+    def __init__(
+        self,
+        engine: SimEngine,
+        fabric: OpticalFabric,
+        *,
+        min_planes: int = 1,
+        max_queue_depth: int | None = None,
+        method: str = "greedy",
+        allow_independent: bool = False,
+        rebalance: bool = True,
+    ) -> None:
+        if min_planes < 1 or min_planes > fabric.n_planes:
+            raise ValueError(
+                f"min_planes must be in [1, {fabric.n_planes}], "
+                f"got {min_planes}"
+            )
+        self.engine = engine
+        self.fabric = fabric
+        self.min_planes = min_planes
+        self.max_queue_depth = max_queue_depth
+        self.method = method
+        self.allow_independent = allow_independent
+        self.rebalance = rebalance
+        self.stats = ArbiterStats()
+        self.records: dict[int, JobRecord] = {}
+        self._free: set[int] = set(range(fabric.n_planes))
+        # Physical OCS state: (config-namespace key, config id) per plane.
+        self._plane_state: dict[int, tuple[ConfigKey, int] | None] = {
+            j: None for j in range(fabric.n_planes)
+        }
+        self._plane_free_at: dict[int, float] = {
+            j: 0.0 for j in range(fabric.n_planes)
+        }
+        self._running: dict[int, _Job] = {}
+        self._waiting: list[tuple[int, int, _Job]] = []  # (-prio, seq, job)
+        self._ids = itertools.count()
+        self._wait_seq = itertools.count()
+
+    # -- physical prestaging ------------------------------------------------
+    def prestage(self, req: CollectiveRequest) -> None:
+        """Install ``req``'s first-step config on every plane (Fig. 5 setup).
+
+        Mirrors ``OpticalFabric.prestaged`` for the serial path: the first
+        admitted job of the same (algorithm, communicator) starts with hot
+        circuits instead of paying a cold reconfiguration per plane.
+        """
+        pattern = get_pattern(req.algorithm, req.n_nodes, req.size)
+        key: ConfigKey = (req.algorithm, req.n_nodes)
+        for j in range(self.fabric.n_planes):
+            self._plane_state[j] = (key, pattern.steps[0].config)
+
+    # -- admission ----------------------------------------------------------
+    def submit(
+        self,
+        req: CollectiveRequest,
+        priority: int = 0,
+        method: str | None = None,
+        allow_independent: bool | None = None,
+    ) -> JobRecord:
+        """Submit one collective; returns its (live) ``JobRecord``.
+
+        The record's ``rejected`` flag is set when backpressure drops the
+        job; otherwise the job is admitted now or queued.  ``method`` /
+        ``allow_independent`` override the arbiter defaults per job (the
+        shim passes its own planning preferences through).
+        """
+        job_id = next(self._ids)
+        independent_ok = (
+            self.allow_independent
+            if allow_independent is None
+            else allow_independent
+        )
+        mode = (
+            DependencyMode.INDEPENDENT
+            if independent_ok and req.algorithm in _INDEPENDENT_SAFE
+            else DependencyMode.CHAIN
+        )
+        record = JobRecord(
+            job_id=job_id,
+            tag=req.tag or req.algorithm,
+            algorithm=req.algorithm,
+            n_nodes=req.n_nodes,
+            size=req.size,
+            priority=priority,
+            arrival=self.engine.now,
+        )
+        self.records[job_id] = record
+        job = _Job(
+            job_id=job_id,
+            req=req,
+            pattern=get_pattern(req.algorithm, req.n_nodes, req.size),
+            priority=priority,
+            mode=mode,
+            record=record,
+            method=method or self.method,
+        )
+        if (
+            self.max_queue_depth is not None
+            and len(self._waiting) >= self.max_queue_depth
+        ):
+            record.rejected = True
+            self.stats.rejected += 1
+            return record
+        heapq.heappush(
+            self._waiting, (-priority, next(self._wait_seq), job)
+        )
+        # _drain_queue admits the job now or, if the fabric is full,
+        # requests shrinks from over-share running jobs.
+        self._drain_queue()
+        return record
+
+    def run_collective(
+        self,
+        req: CollectiveRequest,
+        priority: int = 0,
+        method: str | None = None,
+        allow_independent: bool | None = None,
+    ) -> JobRecord:
+        """Submit ``req`` and run the engine until it completes (or is
+        rejected).  The synchronous entry point used by the shim."""
+        record = self.submit(
+            req,
+            priority=priority,
+            method=method,
+            allow_independent=allow_independent,
+        )
+        if record.rejected:
+            return record
+        while record.finish is None and self.engine.step():
+            pass
+        if record.finish is None:
+            raise RuntimeError(
+                f"job {record.job_id} never completed (deadlocked queue?)"
+            )
+        return record
+
+    # -- fair-share policy --------------------------------------------------
+    def _fair_share(self, extra_claimants: int = 0) -> int:
+        n_claimants = (
+            len(self._running) + len(self._waiting) + extra_claimants
+        )
+        if n_claimants == 0:
+            return self.fabric.n_planes
+        return max(self.min_planes, self.fabric.n_planes // n_claimants)
+
+    def _drain_queue(self) -> None:
+        while self._waiting and len(self._free) >= self.min_planes:
+            _, _, job = heapq.heappop(self._waiting)
+            # All free planes when nothing else waits; fair share otherwise
+            # (+1 claimant: the job being granted is in neither set here).
+            want = (
+                len(self._free)
+                if not self._waiting
+                else self._fair_share(extra_claimants=1)
+            )
+            grant = tuple(sorted(self._free))[: max(want, self.min_planes)]
+            self._grant(job, grant)
+        if self._waiting:
+            self._request_shrinks()
+        elif self._free and self.rebalance and self._running:
+            self._offer_grow()
+
+    def _request_shrinks(self) -> None:
+        """Ask over-share running jobs to release planes at their next
+        step boundary (lazy revocation; nothing happens mid-transmission)."""
+        share = self._fair_share()
+        for job in sorted(self._running.values(), key=lambda j: j.job_id):
+            target = max(self.min_planes, share)
+            if len(job.planes) > target:
+                job.target_planes = target
+
+    def _offer_grow(self) -> None:
+        """Reserve all free planes for the running job with the smallest
+        lease; it absorbs them (and re-plans) at its next step boundary."""
+        job = min(
+            self._running.values(), key=lambda j: (len(j.planes), j.job_id)
+        )
+        extra = tuple(sorted(self._free))
+        self._free.clear()
+        job.pending_planes = tuple(sorted(job.pending_planes + extra))
+        job.target_planes = len(job.planes) + len(job.pending_planes)
+
+    # -- lease lifecycle ----------------------------------------------------
+    def _grant(self, job: _Job, planes: tuple[int, ...]) -> None:
+        now = self.engine.now
+        self._free.difference_update(planes)
+        job.planes = tuple(sorted(planes))
+        job.target_planes = len(job.planes)
+        job.record.start = now
+        job.record.planes_min = len(job.planes)
+        job.record.planes_max = len(job.planes)
+        self._running[job.job_id] = job
+        self.stats.admitted += 1
+        self._plan(job)
+
+    def _sub_fabric(self, job: _Job) -> OpticalFabric:
+        scales = None
+        if self.fabric.plane_bandwidth_scale is not None:
+            scales = tuple(
+                self.fabric.plane_bandwidth_scale[p] for p in job.planes
+            )
+        initial = tuple(
+            state[1]
+            if (state := self._plane_state[p]) is not None
+            and state[0] == job.key
+            else None
+            for p in job.planes
+        )
+        return OpticalFabric(
+            n_nodes=self.fabric.n_nodes,
+            n_planes=len(job.planes),
+            bandwidth=self.fabric.bandwidth,
+            t_recfg=self.fabric.t_recfg,
+            plane_bandwidth_scale=scales,
+            initial_configs=initial,
+        )
+
+    def _plan(self, job: _Job) -> None:
+        """(Re)schedule ``job``'s remaining steps on its current lease."""
+        now = self.engine.now
+        remaining = job.pattern.steps[job.step_idx :]
+        assert remaining, "planning a finished job"
+        sub_pattern = Pattern(
+            job.pattern.name, job.pattern.n_nodes, tuple(remaining)
+        )
+        schedule, _method = swot_schedule(
+            self._sub_fabric(job),
+            sub_pattern,
+            method=job.method,
+            mode=job.mode,
+        )
+        t0 = max(
+            [now] + [self._plane_free_at[p] for p in job.planes]
+        )
+        job.plan = schedule
+        job.plan_base_step = job.step_idx
+        job.plan_t0 = t0
+        if job.planned:  # only lease-change re-plans count
+            self.stats.replans += 1
+            job.record.replans += 1
+        job.planned = True
+        if job.mode is DependencyMode.INDEPENDENT:
+            # No cross-step barrier: the collective is one atomic segment.
+            job.boundaries = (t0 + schedule.cct,)
+        else:
+            ends: list[float] = []
+            prev = t0
+            for i in range(sub_pattern.n_steps):
+                try:
+                    _, end = schedule.step_window(i)
+                    prev = t0 + end
+                except ValueError:
+                    pass  # zero-volume step: shares the previous boundary
+                ends.append(prev)
+            job.boundaries = tuple(ends)
+        self._schedule_boundary(job)
+
+    def _schedule_boundary(self, job: _Job) -> None:
+        k = job.step_idx - job.plan_base_step
+        if job.mode is DependencyMode.INDEPENDENT:
+            k = 0
+        self.engine.at(
+            job.boundaries[k], lambda job=job: self._on_boundary(job)
+        )
+
+    def _on_boundary(self, job: _Job) -> None:
+        now = self.engine.now
+        if job.mode is DependencyMode.INDEPENDENT:
+            job.step_idx = job.pattern.n_steps
+        else:
+            job.step_idx += 1
+        if job.step_idx >= job.pattern.n_steps:
+            self._complete(job)
+            return
+        wants_resize = (
+            job.target_planes != len(job.planes) or job.pending_planes
+        )
+        if wants_resize:
+            self._apply_resize(job, now)
+        else:
+            self._schedule_boundary(job)
+
+    # -- plan surgery -------------------------------------------------------
+    def _cut_plan(self, job: _Job, cutoff: float) -> None:
+        """Retire ``job``'s plan at ``cutoff``: account activities that
+        (already) ran, update physical plane state, discard the rest.
+
+        An in-flight reconfiguration (start < cutoff <= end) completes --
+        optics cannot abort a mirror move halfway -- so the plane's config
+        becomes its target and the plane stays busy until its end.
+        """
+        assert job.plan is not None
+        sub_fabric = job.plan.fabric
+        rel_cutoff = cutoff - job.plan_t0  # plan times are plan-relative
+        for j, p in enumerate(job.planes):
+            config = sub_fabric.initial_config(j)
+            free_at = self._plane_free_at[p]
+            busy = 0.0
+            recfgs = 0
+            for a in sorted(
+                (a for a in job.plan.activities if a.plane == j),
+                key=lambda a: (a.start, a.end),
+            ):
+                if a.start >= rel_cutoff - _EPS:
+                    continue  # never started: the re-plan supersedes it
+                if a.kind is Kind.RECFG:
+                    config = a.config
+                    recfgs += 1
+                busy += a.duration
+                free_at = max(free_at, job.plan_t0 + a.end)
+            if config is not None:
+                self._plane_state[p] = (job.key, config)
+            self._plane_free_at[p] = max(free_at, cutoff)
+            self.stats.plane_busy[p] = (
+                self.stats.plane_busy.get(p, 0.0) + busy
+            )
+            self.stats.reconfigurations += recfgs
+        job.plan = None
+
+    def _apply_resize(self, job: _Job, now: float) -> None:
+        self._cut_plan(job, now)
+        # Absorb reserved grow planes first, then shrink to target.
+        lease = sorted(job.planes + job.pending_planes)
+        job.pending_planes = ()
+        if job.target_planes < len(lease):
+            n_release = len(lease) - max(job.target_planes, self.min_planes)
+            # Release the soonest-free planes (deterministic: ties by id).
+            by_free = sorted(
+                lease, key=lambda p: (self._plane_free_at[p], p)
+            )
+            for p in by_free[:n_release]:
+                lease.remove(p)
+                self._free.add(p)
+        job.planes = tuple(sorted(lease))
+        job.target_planes = len(job.planes)
+        job.record.planes_min = min(job.record.planes_min, len(job.planes))
+        job.record.planes_max = max(job.record.planes_max, len(job.planes))
+        self._plan(job)
+        self._drain_queue()
+
+    def _complete(self, job: _Job) -> None:
+        now = self.engine.now
+        self._cut_plan(job, now)  # every activity started strictly before now
+        job.record.finish = now
+        self.stats.completed += 1
+        del self._running[job.job_id]
+        self._free.update(job.planes)
+        self._free.update(job.pending_planes)
+        job.planes = ()
+        job.pending_planes = ()
+        self._drain_queue()
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def running_jobs(self) -> tuple[int, ...]:
+        return tuple(sorted(self._running))
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._waiting)
+
+    def assert_invariants(self) -> None:
+        """Every plane is free XOR leased/reserved by exactly one job."""
+        owned: dict[int, int] = {}
+        for job in self._running.values():
+            for p in job.planes + job.pending_planes:
+                if p in owned:
+                    raise AssertionError(
+                        f"plane {p} owned by jobs {owned[p]} and "
+                        f"{job.job_id}"
+                    )
+                owned[p] = job.job_id
+        overlap = self._free & set(owned)
+        if overlap:
+            raise AssertionError(f"planes {overlap} both free and leased")
+        missing = (
+            set(range(self.fabric.n_planes)) - self._free - set(owned)
+        )
+        if missing:
+            raise AssertionError(f"planes {missing} unaccounted for")

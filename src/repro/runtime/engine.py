@@ -1,0 +1,117 @@
+"""Deterministic event-driven simulation engine.
+
+A minimal discrete-event core: a binary heap of ``(time, seq, callback)``
+entries plus a simulated clock.  Two properties matter for the runtime
+layer built on top:
+
+* **Determinism** -- events at equal times fire in scheduling order
+  (``seq`` is a monotone tie-breaker), so replays of the same trace
+  produce bit-identical timelines on any machine.
+* **Cancellation** -- ``EventHandle.cancel`` is O(1): cancelled entries
+  stay in the heap and are skipped on pop (lazy deletion).  The arbiter
+  itself applies lease changes lazily *at* already-scheduled boundaries
+  and never cancels; the facility is for consumers that schedule
+  speculative timeouts/watchdogs.
+
+Simulated time is in seconds, matching ``OpticalFabric`` units.  There is
+no wall-clock coupling anywhere: ``run`` drains the heap synchronously.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable
+
+
+@dataclasses.dataclass(order=True)
+class _Entry:
+    time: float
+    seq: int
+    fn: Callable[[], Any] = dataclasses.field(compare=False)
+    cancelled: bool = dataclasses.field(default=False, compare=False)
+
+
+class EventHandle:
+    """Opaque handle returned by ``SimEngine.at``; supports ``cancel()``."""
+
+    __slots__ = ("_entry",)
+
+    def __init__(self, entry: _Entry) -> None:
+        self._entry = entry
+
+    def cancel(self) -> None:
+        self._entry.cancelled = True
+
+    @property
+    def cancelled(self) -> bool:
+        return self._entry.cancelled
+
+    @property
+    def time(self) -> float:
+        return self._entry.time
+
+
+class SimEngine:
+    """Event heap + simulated clock."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+        self._heap: list[_Entry] = []
+        self._seq = 0
+        self.events_fired = 0
+
+    def at(self, time: float, fn: Callable[[], Any]) -> EventHandle:
+        """Schedule ``fn`` to run at absolute simulated ``time``."""
+        if time < self.now - 1e-12:
+            raise ValueError(
+                f"cannot schedule event at {time} before now={self.now}"
+            )
+        entry = _Entry(time=max(time, self.now), seq=self._seq, fn=fn)
+        self._seq += 1
+        heapq.heappush(self._heap, entry)
+        return EventHandle(entry)
+
+    def after(self, delay: float, fn: Callable[[], Any]) -> EventHandle:
+        """Schedule ``fn`` to run ``delay`` seconds from now."""
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        return self.at(self.now + delay, fn)
+
+    @property
+    def pending(self) -> int:
+        return sum(1 for e in self._heap if not e.cancelled)
+
+    def run(self, until: float | None = None) -> float:
+        """Drain events (up to and including time ``until``); returns now.
+
+        With ``until=None`` runs until the heap is empty.  The clock never
+        moves backwards and, when ``until`` is given, stops exactly there
+        even if no event fires at that instant.
+        """
+        while self._heap:
+            entry = self._heap[0]
+            if entry.cancelled:
+                heapq.heappop(self._heap)
+                continue
+            if until is not None and entry.time > until:
+                break
+            heapq.heappop(self._heap)
+            self.now = max(self.now, entry.time)
+            self.events_fired += 1
+            entry.fn()
+        if until is not None:
+            self.now = max(self.now, until)
+        return self.now
+
+    def step(self) -> bool:
+        """Fire the single next pending event; False when heap is empty."""
+        while self._heap:
+            entry = heapq.heappop(self._heap)
+            if entry.cancelled:
+                continue
+            self.now = max(self.now, entry.time)
+            self.events_fired += 1
+            entry.fn()
+            return True
+        return False

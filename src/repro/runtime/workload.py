@@ -1,0 +1,261 @@
+"""Multi-job workload traces for the shared optical fabric.
+
+Generates per-tenant collective-request streams from the model configs in
+``repro.configs`` (each tenant is "a training job for architecture X"),
+schedules their arrivals as a Poisson process, and replays the merged
+trace through a ``FabricArbiter`` to produce per-job CCT / queueing-delay
+/ plane-utilization statistics.
+
+Everything here is pure-Python and deterministic for a fixed seed: sizes
+are derived analytically from ``ArchConfig`` dimensions (no jax import),
+arrivals from ``random.Random(seed)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Iterable, Sequence
+
+from repro.configs.base import ArchConfig
+from repro.core.fabric import OpticalFabric
+from repro.core.patterns import get_pattern
+from repro.core.scheduler import swot_schedule
+from repro.core.shim import CollectiveRequest
+from repro.runtime.arbiter import ArbiterStats, FabricArbiter, JobRecord
+from repro.runtime.engine import SimEngine
+
+_BF16 = 2
+
+
+def _approx_param_bytes(cfg: ArchConfig) -> float:
+    """Analytic parameter-byte estimate (bf16) from config dimensions."""
+    d = cfg.d_model
+    head = cfg.resolved_head_dim
+    attn = d * (cfg.n_heads * head + 2 * cfg.n_kv_heads * head) + (
+        cfg.n_heads * head
+    ) * d
+    dense_ffn = 3 * d * cfg.d_ff if cfg.act == "silu" else 2 * d * cfg.d_ff
+    per_layer = attn + dense_ffn
+    if cfg.is_moe:
+        per_layer += cfg.n_experts * 3 * d * cfg.moe_d_ff
+    total = cfg.n_layers * per_layer + cfg.vocab_size * d
+    return float(total) * _BF16
+
+
+def arch_request_mix(
+    cfg: ArchConfig,
+    *,
+    n_nodes: int = 8,
+    tokens_per_step: int = 65_536,
+    tag_prefix: str = "",
+) -> list[CollectiveRequest]:
+    """The collectives one training iteration of ``cfg`` issues on the
+    optical fabric (the workload-side analogue of the Phase-1 profile).
+
+    Sizes are analytic (``ArchConfig`` arithmetic only): DP gradient sync
+    moves the full parameter bytes, TP activation sync one activation
+    buffer, MoE expert-parallel dispatch one capacity-shaped buffer.
+    """
+    prefix = tag_prefix or cfg.name
+    reqs = [
+        CollectiveRequest(
+            "rabenseifner_allreduce",
+            n_nodes,
+            _approx_param_bytes(cfg),
+            f"{prefix}:dp_grad_sync",
+        ),
+        CollectiveRequest(
+            "all_gather",
+            n_nodes,
+            tokens_per_step * cfg.d_model * _BF16,
+            f"{prefix}:tp_act_sync",
+        ),
+    ]
+    if cfg.is_moe:
+        capacity_tokens = int(
+            tokens_per_step * cfg.top_k * cfg.capacity_factor
+        )
+        reqs.append(
+            CollectiveRequest(
+                "pairwise_alltoall",
+                n_nodes,
+                capacity_tokens * cfg.d_model * _BF16,
+                f"{prefix}:moe_ep_alltoall",
+            )
+        )
+    return reqs
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One arrival in a multi-tenant trace."""
+
+    arrival: float
+    request: CollectiveRequest
+    priority: int = 0
+    tenant: str = ""
+
+
+def poisson_trace(
+    tenants: Sequence[tuple[str, Sequence[CollectiveRequest]]],
+    *,
+    rate: float,
+    horizon: float,
+    seed: int = 0,
+    priorities: dict[str, int] | None = None,
+) -> list[JobSpec]:
+    """Poisson arrivals per tenant, merged and sorted.
+
+    ``tenants`` maps a tenant name to its request mix (e.g. from
+    ``arch_request_mix``); each tenant issues collectives independently
+    at ``rate`` arrivals/second over ``[0, horizon)``, cycling through
+    its mix (a training loop issues its collectives in a fixed order).
+    """
+    if rate <= 0 or horizon <= 0:
+        raise ValueError("rate and horizon must be positive")
+    rng = random.Random(seed)
+    trace: list[JobSpec] = []
+    for name, mix in tenants:
+        if not mix:
+            raise ValueError(f"tenant {name!r} has an empty request mix")
+        t = 0.0
+        i = 0
+        while True:
+            t += rng.expovariate(rate)
+            if t >= horizon:
+                break
+            trace.append(
+                JobSpec(
+                    arrival=t,
+                    request=mix[i % len(mix)],
+                    priority=(priorities or {}).get(name, 0),
+                    tenant=name,
+                )
+            )
+            i += 1
+    trace.sort(key=lambda s: (s.arrival, s.tenant, s.request.tag))
+    return trace
+
+
+@dataclasses.dataclass
+class ReplayReport:
+    """Outcome of replaying one trace on one fabric."""
+
+    fabric: OpticalFabric
+    records: list[JobRecord]
+    stats: ArbiterStats
+    makespan: float
+    solo_cct: dict[tuple, float]  # signature -> whole-fabric solo CCT
+
+    @property
+    def completed(self) -> list[JobRecord]:
+        return [r for r in self.records if r.finish is not None]
+
+    @property
+    def mean_cct(self) -> float:
+        done = self.completed
+        return sum(r.cct for r in done) / len(done) if done else 0.0
+
+    @property
+    def mean_queueing_delay(self) -> float:
+        done = [r for r in self.records if r.start is not None]
+        if not done:
+            return 0.0
+        return sum(r.queueing_delay for r in done) / len(done)
+
+    @property
+    def p95_queueing_delay(self) -> float:
+        delays = sorted(
+            r.queueing_delay
+            for r in self.records
+            if r.start is not None
+        )
+        if not delays:
+            return 0.0
+        return delays[min(len(delays) - 1, int(0.95 * len(delays)))]
+
+    @property
+    def utilization(self) -> float:
+        return self.stats.utilization(self.makespan, self.fabric.n_planes)
+
+    def mean_slowdown(self) -> float:
+        """Mean realized-CCT / solo whole-fabric CCT over completed jobs."""
+        ratios = [
+            r.cct / solo
+            for r in self.completed
+            if (solo := self.solo_cct.get((r.algorithm, r.n_nodes, round(r.size)), 0.0)) > 0
+        ]
+        return sum(ratios) / len(ratios) if ratios else 0.0
+
+    def summary(self) -> str:
+        lines = [
+            f"{len(self.completed)}/{len(self.records)} jobs completed, "
+            f"{self.stats.rejected} rejected, makespan "
+            f"{self.makespan * 1e3:.2f} ms",
+            f"mean CCT {self.mean_cct * 1e6:.1f} us, mean queueing "
+            f"{self.mean_queueing_delay * 1e6:.1f} us (p95 "
+            f"{self.p95_queueing_delay * 1e6:.1f} us)",
+            f"plane utilization {self.utilization:.1%}, mean slowdown vs "
+            f"solo {self.mean_slowdown():.2f}x, {self.stats.replans} "
+            f"re-plans",
+        ]
+        return "\n".join(lines)
+
+
+def replay(
+    trace: Iterable[JobSpec],
+    fabric: OpticalFabric,
+    *,
+    min_planes: int = 1,
+    max_queue_depth: int | None = None,
+    method: str = "greedy",
+    allow_independent: bool = False,
+    rebalance: bool = True,
+) -> ReplayReport:
+    """Replay ``trace`` through a fresh engine + arbiter; returns stats."""
+    engine = SimEngine()
+    arbiter = FabricArbiter(
+        engine,
+        fabric,
+        min_planes=min_planes,
+        max_queue_depth=max_queue_depth,
+        method=method,
+        allow_independent=allow_independent,
+        rebalance=rebalance,
+    )
+    specs = sorted(trace, key=lambda s: s.arrival)
+    records: list[JobRecord] = []
+
+    def make_submit(spec: JobSpec):
+        def fire() -> None:
+            records.append(arbiter.submit(spec.request, spec.priority))
+
+        return fire
+
+    for spec in specs:
+        engine.at(spec.arrival, make_submit(spec))
+    engine.run()
+    arbiter.assert_invariants()
+
+    solo: dict[tuple, float] = {}
+    for spec in specs:
+        sig = spec.request.signature
+        if sig not in solo:
+            pattern = get_pattern(
+                spec.request.algorithm, spec.request.n_nodes, spec.request.size
+            )
+            ref_fabric = fabric
+            if ref_fabric.initial_configs is None:
+                ref_fabric = ref_fabric.prestaged(pattern.steps[0].config)
+            schedule, _ = swot_schedule(
+                ref_fabric, pattern, method=method
+            )
+            solo[sig] = schedule.cct
+    return ReplayReport(
+        fabric=fabric,
+        records=records,
+        stats=arbiter.stats,
+        makespan=engine.now,
+        solo_cct=solo,
+    )

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import Model
+from repro.sharding.rules import set_mesh_compat
 
 
 @dataclasses.dataclass
@@ -61,7 +62,7 @@ class ServeEngine:
                 (tokens.shape[0], cfg.n_audio_frames, cfg.d_model),
                 jnp.bfloat16,
             )
-        with jax.set_mesh(self.model.ctx.mesh):
+        with set_mesh_compat(self.model.ctx.mesh):
             logits, cache = self._prefill(self.params, batch)
             cache = self._grow(cache, tokens.shape[0])
             max_new = max(r.max_new_tokens for r in requests)

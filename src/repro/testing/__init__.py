@@ -1,0 +1,1 @@
+"""Test-support utilities (no third-party test deps required)."""

@@ -1,0 +1,164 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+The container this repo targets does not ship ``hypothesis`` and installing
+packages is off-limits, so property tests would otherwise fail at
+collection.  ``tests/conftest.py`` registers this module under the
+``hypothesis`` / ``hypothesis.strategies`` names **only when the real
+package is absent**; with hypothesis installed it is never imported.
+
+Semantics: ``@given`` draws ``settings.max_examples`` examples from the
+supplied strategies with a *fixed* seed (examples are reproducible across
+runs and machines) and calls the test once per example.  No shrinking, no
+example database -- a failing example's repr is attached to the assertion
+instead.
+
+Only the strategy surface the test-suite uses is implemented: integers,
+floats, booleans, sampled_from, lists, and @composite.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+
+_DEFAULT_MAX_EXAMPLES = 100
+_SEED = 0xC0FFEE
+
+
+class Strategy:
+    """A value generator: ``draw(rng)`` yields one example."""
+
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw = draw_fn
+        self.label = label
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._draw(rng)), f"{self.label}.map")
+
+    def filter(self, pred, max_tries: int = 1000):
+        def drawer(rng):
+            for _ in range(max_tries):
+                value = self._draw(rng)
+                if pred(value):
+                    return value
+            raise ValueError(f"filter on {self.label} found no example")
+
+        return Strategy(drawer, f"{self.label}.filter")
+
+    def __repr__(self):
+        return f"<stub {self.label}>"
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 16) -> Strategy:
+    return Strategy(
+        lambda rng: rng.randint(min_value, max_value),
+        f"integers({min_value},{max_value})",
+    )
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+) -> Strategy:
+    del allow_nan, allow_infinity  # stub never generates them
+    return Strategy(
+        lambda rng: rng.uniform(min_value, max_value),
+        f"floats({min_value},{max_value})",
+    )
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5, "booleans")
+
+
+def sampled_from(elements) -> Strategy:
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return Strategy(lambda rng: rng.choice(pool), "sampled_from")
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def drawer(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return Strategy(drawer, f"lists[{elements.label}]")
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value, "just")
+
+
+def one_of(*strategies: Strategy) -> Strategy:
+    pool = list(strategies)
+    return Strategy(lambda rng: rng.choice(pool).draw(rng), "one_of")
+
+
+def composite(fn):
+    """``@st.composite``: ``fn(draw, *args)`` becomes a strategy factory."""
+
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        return Strategy(
+            lambda rng: fn(lambda strat: strat.draw(rng), *args, **kwargs),
+            f"composite:{fn.__name__}",
+        )
+
+    return factory
+
+
+class settings:
+    """Decorator recording example-count knobs for ``@given``."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_settings = self
+        return fn
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def runner(*caller_args, **caller_kwargs):
+            # Resolve at call time: @settings sits *above* @given in the
+            # usual idiom, so it decorates the runner, not fn.
+            conf = getattr(runner, "_stub_settings", None) or getattr(
+                fn, "_stub_settings", None
+            )
+            n_examples = conf.max_examples if conf else _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(_SEED)
+            for i in itertools.count():
+                if i >= n_examples:
+                    break
+                args = tuple(s.draw(rng) for s in arg_strategies)
+                kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*caller_args, *args, **caller_kwargs, **kwargs)
+                except BaseException as exc:
+                    raise AssertionError(
+                        f"property falsified on example {i}: "
+                        f"args={args!r} kwargs={kwargs!r}"
+                    ) from exc
+
+        # Hide strategy-supplied parameters from pytest's fixture
+        # resolution (like real hypothesis does): positional strategies
+        # fill the rightmost parameters, keyword strategies their names.
+        params = list(inspect.signature(fn).parameters.values())
+        if arg_strategies:
+            params = params[: -len(arg_strategies)]
+        params = [p for p in params if p.name not in kw_strategies]
+        runner.__signature__ = inspect.Signature(params)
+        del runner.__wrapped__
+        return runner
+
+    return decorate

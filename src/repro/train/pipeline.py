@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding.rules import shard_map_compat
+
 Pytree = object
 
 
@@ -73,7 +75,7 @@ def gpipe_forward(
         outputs = lax.psum(outputs, axis)
         return outputs
 
-    return jax.shard_map(
+    return shard_map_compat(
         body,
         mesh=mesh,
         in_specs=(

@@ -18,6 +18,11 @@ def _compile_text(fn, *args):
     return compiled, compiled.as_text()
 
 
+def _cost_analysis(compiled):
+    cost = compiled.cost_analysis()
+    return cost[0] if isinstance(cost, list) else cost  # old JAX: per-device list
+
+
 def test_dot_flops_match_cost_analysis_loop_free():
     def f(x, w):
         return jnp.tanh(x @ w)
@@ -26,7 +31,7 @@ def test_dot_flops_match_cost_analysis_loop_free():
     w = jax.ShapeDtypeStruct((256, 512), jnp.float32)
     compiled, text = _compile_text(f, x, w)
     summary = analyze_hlo_text(text)
-    xla_flops = compiled.cost_analysis()["flops"]
+    xla_flops = _cost_analysis(compiled)["flops"]
     # Dot flops dominate; the walker must agree within 5%.
     assert summary.flops == pytest.approx(xla_flops, rel=0.05)
 
@@ -50,7 +55,7 @@ def test_scan_flops_scale_with_trip_count():
         _, text_s = _compile_text(run_scan, x, ws)
         cu, _ = _compile_text(run_unrolled, x, ws)
         summary = analyze_hlo_text(text_s)
-        unrolled_flops = cu.cost_analysis()["flops"]
+        unrolled_flops = _cost_analysis(cu)["flops"]
         # The walker recovers the trip count that cost_analysis drops.
         assert summary.flops == pytest.approx(unrolled_flops, rel=0.10), (
             n_layers,
@@ -88,9 +93,9 @@ _COLLECTIVE_SCRIPT = textwrap.dedent(
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P, NamedSharding
     from repro.analysis.hlo import analyze_hlo_text
+    from repro.sharding.rules import make_mesh_compat, set_mesh_compat
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
 
     def step(w, x):
         y = jnp.einsum("bd,df->bf", x, w)
@@ -98,7 +103,7 @@ _COLLECTIVE_SCRIPT = textwrap.dedent(
 
     w = jax.ShapeDtypeStruct((256, 512), jnp.float32)
     x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         compiled = jax.jit(step,
             in_shardings=(NamedSharding(mesh, P(None, "model")),
                           NamedSharding(mesh, P("data", None))),
@@ -121,7 +126,7 @@ _COLLECTIVE_SCRIPT = textwrap.dedent(
     for n in (2, 6):
         ws = jax.ShapeDtypeStruct((n, 256, 256), jnp.float32)
         x2 = jax.ShapeDtypeStruct((32, 256), jnp.float32)
-        with jax.set_mesh(mesh):
+        with set_mesh_compat(mesh):
             c = jax.jit(layered,
                 in_shardings=(NamedSharding(mesh, P("data", None)),
                               NamedSharding(mesh, P(None, None, "model"))),

@@ -7,12 +7,17 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding.rules import DEFAULT_RULES, MeshContext, fsdp_spec
+from repro.sharding.rules import (
+    DEFAULT_RULES,
+    MeshContext,
+    abstract_mesh_compat,
+    fsdp_spec,
+)
 
 
 def _ctx(shape=(16, 16), axes=("data", "model"), dp=("data",)):
     return MeshContext(
-        mesh=jax.sharding.AbstractMesh(shape, axes), dp_axes=dp
+        mesh=abstract_mesh_compat(shape, axes), dp_axes=dp
     )
 
 
