@@ -1,0 +1,100 @@
+"""Batched scenario-sweep benchmark: array IR vs per-instance object path.
+
+Builds a 64-instance sweep (8 message sizes x 8 reconfiguration delays) of
+strawman-ICR decisions for Rabenseifner AllReduce on 8 nodes x 4 planes,
+then evaluates it two ways:
+
+* per instance through the *historical* object pipeline
+  (`repro.core.simulator.execute` building ``PlaneActivity`` objects,
+  validated with the interpreted ``validate_object`` oracle -- NOT the
+  IR-routed ``Schedule.validate``, so the baseline carries none of the
+  refactor's own conversion overhead), and
+* in ONE `repro.core.ir.batch_evaluate` pass over the padded array set.
+
+Reports wall-clock per instance for both plus the speedup; per-instance
+CCTs must agree within 1e-9 (asserted here, not just in tests).  This is
+the acceptance gate for the IR refactor: the batched pass must be >= 5x
+faster than the object path.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    BatchInstance,
+    OpticalFabric,
+    batch_evaluate,
+    rabenseifner_allreduce,
+    strawman_instance,
+)
+from repro.core.schedule import validate_object
+from repro.core.simulator import execute
+
+
+def _object_path_cct(inst: BatchInstance) -> float:
+    """The pre-IR per-instance pipeline: build objects, validate, read CCT."""
+    schedule = execute(
+        inst.fabric, inst.pattern, inst.decisions, validate=False
+    )
+    validate_object(schedule)
+    return schedule.cct
+
+_N_NODES = 8
+_N_PLANES = 4
+_SIZES = tuple(2**i * 1e6 for i in range(8))  # 1 .. 128 MB
+_RECFGS = tuple(25e-6 * 2**i for i in range(8))  # 25 us .. 3.2 ms
+
+
+def _instances() -> list[BatchInstance]:
+    return [
+        strawman_instance(
+            OpticalFabric(_N_NODES, _N_PLANES, t_recfg=t_recfg),
+            rabenseifner_allreduce(_N_NODES, size),
+            prestage=True,
+        )
+        for size in _SIZES
+        for t_recfg in _RECFGS
+    ]
+
+
+def run(quick: bool = False) -> list[tuple[str, float, str]]:
+    del quick  # the 64-cell sweep IS the CI smoke test
+    instances = _instances()
+    n = len(instances)
+    # Best-of-3 on both sides: one-shot timings are too noisy for a CI
+    # gate (first-call numpy warm-up, scheduler jitter).
+    t_object = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        object_cct = np.array([_object_path_cct(i) for i in instances])
+        t_object = min(t_object, time.perf_counter() - t0)
+    t_batch = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        result = batch_evaluate(instances)
+        t_batch = min(t_batch, time.perf_counter() - t0)
+    err = float(np.max(np.abs(result.cct - object_cct)))
+    assert err <= 1e-9, f"batched CCT diverges from object path by {err}"
+    speedup = t_object / t_batch
+    assert speedup >= 5.0, (
+        f"batched IR sweep only {speedup:.1f}x faster than the "
+        "per-instance object path (acceptance gate is >= 5x)"
+    )
+    return [
+        (
+            "ir_sweep_object_path",
+            t_object * 1e6 / n,
+            f"{n} instances total={t_object * 1e3:.1f}ms",
+        ),
+        (
+            "ir_sweep_batched",
+            t_batch * 1e6 / n,
+            f"speedup={speedup:.1f}x max_cct_err={err:.1e}",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, note in run():
+        print(f"{name},{us:.1f},{note}")

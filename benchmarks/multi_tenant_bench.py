@@ -18,7 +18,13 @@ from __future__ import annotations
 import time
 
 from repro.configs.registry import get_config
-from repro.core import OpticalFabric
+from repro.core import (
+    BatchInstance,
+    OpticalFabric,
+    batch_evaluate,
+    get_pattern,
+    strawman_instance,
+)
 from repro.runtime import arch_request_mix, poisson_trace, replay
 
 # Tenant pool: one training job per architecture family (dense, MoE).
@@ -60,7 +66,29 @@ def run(quick: bool = False) -> list[tuple[str, float, str]]:
             for t_recfg in (50e-6, 200e-6)
         ]
         rate, horizon = 30.0, 0.5
-    for n_tenants, n_planes, t_recfg in cells:
+    # Whole-sweep lockstep-ICR reference: every (cell, collective
+    # signature) pair becomes one row of a single batched IR evaluation.
+    ref_keys: list[tuple[int, tuple]] = []
+    ref_instances: list[BatchInstance] = []
+    for idx, (n_tenants, n_planes, t_recfg) in enumerate(cells):
+        base = OpticalFabric(_N_NODES, n_planes, t_recfg=t_recfg)
+        seen = set()
+        for _name, mix in _tenant_mixes(n_tenants):
+            for req in mix:
+                if req.signature in seen:
+                    continue
+                seen.add(req.signature)
+                pattern = get_pattern(req.algorithm, req.n_nodes, req.size)
+                ref_keys.append((idx, req.signature))
+                ref_instances.append(
+                    strawman_instance(base, pattern, prestage=True)
+                )
+    ref_ccts = batch_evaluate(ref_instances).cct
+    straw_by_cell: dict[int, list[float]] = {}
+    for (idx, _sig), cct in zip(ref_keys, ref_ccts):
+        straw_by_cell.setdefault(idx, []).append(float(cct))
+
+    for idx, (n_tenants, n_planes, t_recfg) in enumerate(cells):
         fabric = OpticalFabric(_N_NODES, n_planes, t_recfg=t_recfg)
         trace = poisson_trace(
             _tenant_mixes(n_tenants),
@@ -72,13 +100,16 @@ def run(quick: bool = False) -> list[tuple[str, float, str]]:
         cell = (
             f"mt_t{n_tenants}_p{n_planes}_r{t_recfg * 1e6:.0f}us"
         )
+        straw_ref = straw_by_cell[idx]
+        mean_straw = sum(straw_ref) / len(straw_ref)
         rows.append(
             (
                 f"{cell}_cct",
                 report.mean_cct * 1e6,
                 f"{len(report.completed)}jobs "
                 f"util={report.utilization:.2f} "
-                f"slowdown={report.mean_slowdown():.2f}x",
+                f"slowdown={report.mean_slowdown():.2f}x "
+                f"straw_ref={mean_straw * 1e6:.1f}us",
             )
         )
         rows.append(

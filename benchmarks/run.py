@@ -11,13 +11,31 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
                       collectives (EXPERIMENTS.md section 4.1)
 * multi_tenant_bench -- concurrent collectives on a shared fabric
                       (tenants x planes x t_recfg sweep)
+* ir_sweep         -- batched array-IR scenario sweep vs the
+                      per-instance object path (>= 5x gate)
 
 Usage: ``python benchmarks/run.py [module-substring] [--quick]``.
 ``--quick`` runs a single-cell smoke sweep per module that supports it
 (CI uses this).
+
+Every unfiltered run (no module substring) also writes
+``BENCH_sweep.json`` at the repo root: the same per-point values (CCTs
+in us for schedule points, wall-clock in us for scheduling/validation
+points) plus per-module wall-clock seconds, so the perf trajectory is
+machine-readable across PRs.  Module-filtered runs skip the write, and
+full (non ``--quick``) sweeps write ``BENCH_sweep_full.json`` instead,
+so neither ever clobbers the tracked file.  The committed flavor is the
+``--quick`` output (the cell CI runs every PR) — regenerate it with
+``PYTHONPATH=src:. python benchmarks/run.py --quick`` when benchmarks
+change.
 """
 
+import json
+import pathlib
 import sys
+import time
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def main() -> None:
@@ -25,6 +43,7 @@ def main() -> None:
         fig5_motivation,
         fig7_cct_vs_msgsize,
         fig8_scalability,
+        ir_sweep,
         kernel_bench,
         multi_tenant_bench,
         scheduler_bench,
@@ -39,15 +58,19 @@ def main() -> None:
         kernel_bench,
         swot_ladder,
         multi_tenant_bench,
+        ir_sweep,
     ]
     args = [a for a in sys.argv[1:]]
     quick = "--quick" in args
     args = [a for a in args if a != "--quick"]
     only = args[0] if args else None
+    points: list[dict] = []
+    module_wall: dict[str, float] = {}
     print("name,us_per_call,derived")
     for module in modules:
         if only and only not in module.__name__:
             continue
+        t_wall = time.perf_counter()
         if quick:
             import inspect
 
@@ -59,8 +82,25 @@ def main() -> None:
                 continue  # no quick mode: skipped in CI smoke runs
         else:
             rows = module.run()
+        module_wall[module.__name__] = time.perf_counter() - t_wall
         for name, us, note in rows:
             print(f"{name},{us:.1f},{note}", flush=True)
+            points.append(
+                {"name": name, "us_per_call": round(us, 3), "note": note}
+            )
+    if only:
+        return  # partial run: don't clobber the tracked sweep file
+    payload = {
+        "quick": quick,
+        "module_wall_clock_s": {
+            k: round(v, 4) for k, v in module_wall.items()
+        },
+        "points": points,
+    }
+    # The tracked file holds only the CI-comparable --quick flavor; full
+    # local sweeps land in an untracked sibling.
+    name = "BENCH_sweep.json" if quick else "BENCH_sweep_full.json"
+    (_REPO_ROOT / name).write_text(json.dumps(payload, indent=1) + "\n")
 
 
 if __name__ == "__main__":

@@ -18,10 +18,11 @@ from repro.core import (
     DependencyMode,
     OpticalFabric,
     TPU_V5E_LINK_BANDWIDTH,
+    batch_evaluate,
     get_pattern,
     ideal_cct,
     prestage_for,
-    strawman_icr,
+    strawman_instance,
     swot_greedy,
 )
 from repro.core.planner import profile_train_step
@@ -39,7 +40,7 @@ def run() -> list[tuple[str, float, str]]:
     specs = _decoder_specs(cfg, ctx)
     requests = profile_train_step(cfg, ctx, cell, specs)
 
-    rows = []
+    cells = []
     for req in requests:
         pattern = get_pattern(req.algorithm, req.n_nodes, req.size)
         for planes in (4, 8):
@@ -52,28 +53,40 @@ def run() -> list[tuple[str, float, str]]:
                 ),
                 pattern,
             )
-            straw = strawman_icr(fabric, pattern)
-            chain = swot_greedy(fabric, pattern)
-            entries = [
-                ("strawman", straw.cct),
-                ("swot_chain", chain.cct),
-            ]
-            if req.algorithm == "pairwise_alltoall":
-                indep = swot_greedy(
-                    fabric, pattern, mode=DependencyMode.INDEPENDENT
+            cells.append((req, planes, fabric, pattern))
+
+    # Every cell's strawman baseline in ONE batched IR pass.
+    straw_ccts = batch_evaluate(
+        [
+            strawman_instance(fabric, pattern)
+            for _, _, fabric, pattern in cells
+        ]
+    ).cct
+
+    rows = []
+    for (req, planes, fabric, pattern), straw in zip(cells, straw_ccts):
+        straw = float(straw)
+        chain = swot_greedy(fabric, pattern)
+        entries = [
+            ("strawman", straw),
+            ("swot_chain", chain.cct),
+        ]
+        if req.algorithm == "pairwise_alltoall":
+            indep = swot_greedy(
+                fabric, pattern, mode=DependencyMode.INDEPENDENT
+            )
+            entries.append(("swot_independent", indep.cct))
+        ideal = ideal_cct(fabric, pattern)
+        for mode, cct in entries:
+            rows.append(
+                (
+                    f"swot_ladder_{req.tag}_{planes}pl_{mode}",
+                    cct * 1e6,
+                    f"ideal={ideal * 1e6:.1f}us "
+                    f"size={req.size / 1e6:.1f}MB "
+                    f"vs_strawman={1 - cct / straw:+.1%}",
                 )
-                entries.append(("swot_independent", indep.cct))
-            ideal = ideal_cct(fabric, pattern)
-            for mode, cct in entries:
-                rows.append(
-                    (
-                        f"swot_ladder_{req.tag}_{planes}pl_{mode}",
-                        cct * 1e6,
-                        f"ideal={ideal * 1e6:.1f}us "
-                        f"size={req.size / 1e6:.1f}MB "
-                        f"vs_strawman={1 - cct / straw.cct:+.1%}",
-                    )
-                )
+            )
     return rows
 
 

@@ -4,7 +4,9 @@ Profiles the collectives one optimizer step of qwen2-moe-a2.7b will issue
 on the 16x16 production mesh (DP gradient sync, TP activation
 all-reduces, EP all-to-alls), schedules each on the optical fabric with
 SWOT, and prints the timelines + per-iteration optical report --
-the paper's Phase 1/Phase 2 flow end to end.
+the paper's Phase 1/Phase 2 flow end to end.  Closes with a batched
+what-if sweep over reconfiguration latencies through the array IR
+(`repro.core.batch_evaluate`).
 
     PYTHONPATH=src python examples/optical_schedule_demo.py
 """
@@ -13,7 +15,13 @@ import jax
 
 from repro.configs.base import shape_cell
 from repro.configs.registry import get_config
-from repro.core import OpticalFabric, SwotShim, TPU_V5E_LINK_BANDWIDTH
+from repro.core import (
+    OpticalFabric,
+    SwotShim,
+    TPU_V5E_LINK_BANDWIDTH,
+    batch_evaluate,
+    strawman_instance,
+)
 from repro.core.planner import profile_train_step
 from repro.models.lm import _decoder_specs  # spec-only; no allocation
 from repro.sharding.rules import MeshContext, abstract_mesh_compat
@@ -53,6 +61,35 @@ def main() -> None:
               f"{plan.pattern.total_volume / 1e6:.1f}MB/node ---")
         print(plan.schedule.timeline())
         print()
+
+    # What-if sweep: how does lockstep-ICR CCT move with OCS reconfig
+    # latency?  One batched array-IR pass evaluates every (collective,
+    # t_recfg) cell -- no per-instance schedule objects.
+    recfgs = (25e-6, 100e-6, 200e-6, 800e-6)
+    cells = [
+        strawman_instance(
+            OpticalFabric(
+                n_nodes=plan.fabric.n_nodes,
+                n_planes=plan.fabric.n_planes,
+                bandwidth=plan.fabric.bandwidth,
+                t_recfg=t_recfg,
+            ),
+            plan.pattern,
+            prestage=True,
+        )
+        for plan in shim.plans
+        for t_recfg in recfgs
+    ]
+    ccts = batch_evaluate(cells).cct
+    print(f"strawman CCT vs t_recfg ({len(cells)} cells, one IR pass):")
+    k = 0
+    for plan in shim.plans:
+        points = "  ".join(
+            f"{recfgs[r] * 1e6:.0f}us->{ccts[k + r] * 1e6:.0f}us"
+            for r in range(len(recfgs))
+        )
+        print(f"  {plan.pattern.name:24s} {points}")
+        k += len(recfgs)
 
 
 if __name__ == "__main__":

@@ -15,8 +15,12 @@ from repro.core.baselines import (
     ideal_cct,
     one_shot,
     one_shot_allocation,
+    one_shot_cct,
     prestage_for,
+    strawman_cct,
+    strawman_decisions,
     strawman_icr,
+    strawman_instance,
 )
 from repro.core.fabric import (
     FIG5_LINK_BANDWIDTH,
@@ -26,6 +30,18 @@ from repro.core.fabric import (
     OpticalFabric,
 )
 from repro.core.greedy import swot_greedy
+from repro.core.ir import (
+    BatchInstance,
+    BatchResult,
+    IRMetrics,
+    ScheduleIR,
+    batch_evaluate,
+    evaluate_decisions,
+    execute_ir,
+    from_ir,
+    to_ir,
+    validate_ir,
+)
 from repro.core.milp import MilpResult, solve_milp
 from repro.core.patterns import (
     ALGORITHMS,
@@ -52,10 +68,13 @@ from repro.core.simulator import cct_of, execute
 
 __all__ = [
     "ALGORITHMS",
+    "BatchInstance",
+    "BatchResult",
     "CollectiveRequest",
     "Decisions",
     "DependencyMode",
     "FIG5_LINK_BANDWIDTH",
+    "IRMetrics",
     "InfeasibleError",
     "Kind",
     "MilpResult",
@@ -66,18 +85,24 @@ __all__ = [
     "Pattern",
     "PlaneActivity",
     "Schedule",
+    "ScheduleIR",
     "Step",
     "SwotPlan",
     "SwotShim",
     "TPU_V5E_LINK_BANDWIDTH",
     "all_gather",
+    "batch_evaluate",
     "bruck_alltoall",
     "cct_of",
+    "evaluate_decisions",
     "execute",
+    "execute_ir",
+    "from_ir",
     "get_pattern",
     "ideal_cct",
     "one_shot",
     "one_shot_allocation",
+    "one_shot_cct",
     "pairwise_alltoall",
     "plan_collective",
     "prestage_for",
@@ -85,7 +110,12 @@ __all__ = [
     "reduce_scatter",
     "ring_allreduce",
     "solve_milp",
+    "strawman_cct",
+    "strawman_decisions",
     "strawman_icr",
+    "strawman_instance",
     "swot_greedy",
     "swot_schedule",
+    "to_ir",
+    "validate_ir",
 ]

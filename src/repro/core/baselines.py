@@ -48,14 +48,47 @@ def _proportional_split(
     }
 
 
+def strawman_decisions(fabric: OpticalFabric, pattern: Pattern) -> Decisions:
+    """Strawman-ICR discrete decisions: every plane serves every step."""
+    planes = list(range(fabric.n_planes))
+    return Decisions(
+        splits=tuple(
+            _proportional_split(fabric, planes, step.volume)
+            for step in pattern.steps
+        )
+    )
+
+
 def strawman_icr(fabric: OpticalFabric, pattern: Pattern) -> Schedule:
     """Naive ICR: all planes, lockstep reconfiguration, no overlap."""
-    planes = list(range(fabric.n_planes))
-    splits = tuple(
-        _proportional_split(fabric, planes, step.volume)
-        for step in pattern.steps
+    return execute(fabric, pattern, strawman_decisions(fabric, pattern))
+
+
+def strawman_cct(fabric: OpticalFabric, pattern: Pattern) -> float:
+    """Strawman-ICR CCT through the array IR (no activity objects)."""
+    from repro.core.ir import evaluate_decisions
+
+    return evaluate_decisions(
+        fabric, pattern, strawman_decisions(fabric, pattern)
+    ).cct
+
+
+def strawman_instance(
+    fabric: OpticalFabric, pattern: Pattern, prestage: bool = False
+):
+    """One ``BatchInstance`` evaluating the strawman on ``fabric``.
+
+    The shared constructor for batched-sweep cells (benchmarks, examples,
+    arbiter re-scoring all build these); ``prestage=True`` first stages
+    every plane at the pattern's opening config (paper Fig. 5 setup).
+    """
+    from repro.core.ir import BatchInstance
+
+    if prestage:
+        fabric = prestage_for(fabric, pattern)
+    return BatchInstance(
+        fabric, pattern, strawman_decisions(fabric, pattern)
     )
-    return execute(fabric, pattern, Decisions(splits=splits))
 
 
 def one_shot_allocation(
@@ -91,17 +124,16 @@ def one_shot_allocation(
     return counts
 
 
-def one_shot(
+def one_shot_setup(
     fabric: OpticalFabric,
     pattern: Pattern,
     n_planes: int | None = None,
-) -> Schedule:
-    """One-shot static provisioning.
+) -> tuple[OpticalFabric, Decisions]:
+    """Static fabric + decisions realizing one-shot provisioning.
 
-    ``n_planes`` overrides the fabric's plane count to model the paper's
-    "overprovision to feasibility" variant (Fig. 7 runs one-shot with one
-    plane per distinct config when the base fabric is too small).  Raises
-    ``InfeasibleError`` when #configs > n_planes.
+    Shared by the object path (``one_shot``) and the IR fast path
+    (``one_shot_cct``).  Raises ``InfeasibleError`` when the pattern needs
+    more distinct configs than planes.
     """
     k = fabric.n_planes if n_planes is None else n_planes
     counts = one_shot_allocation(pattern, k)
@@ -129,4 +161,32 @@ def one_shot(
         )
         for step in pattern.steps
     )
-    return execute(static_fabric, pattern, Decisions(splits=splits))
+    return static_fabric, Decisions(splits=splits)
+
+
+def one_shot(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    n_planes: int | None = None,
+) -> Schedule:
+    """One-shot static provisioning.
+
+    ``n_planes`` overrides the fabric's plane count to model the paper's
+    "overprovision to feasibility" variant (Fig. 7 runs one-shot with one
+    plane per distinct config when the base fabric is too small).  Raises
+    ``InfeasibleError`` when #configs > n_planes.
+    """
+    static_fabric, decisions = one_shot_setup(fabric, pattern, n_planes)
+    return execute(static_fabric, pattern, decisions)
+
+
+def one_shot_cct(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    n_planes: int | None = None,
+) -> float:
+    """One-shot CCT through the array IR (no activity objects)."""
+    from repro.core.ir import evaluate_decisions
+
+    static_fabric, decisions = one_shot_setup(fabric, pattern, n_planes)
+    return evaluate_decisions(static_fabric, pattern, decisions).cct

@@ -1,4 +1,4 @@
-"""Scalable overlap-aware greedy scheduler.
+"""Scalable overlap-aware greedy scheduler (array-IR scoring engine).
 
 The MILP (`repro.core.milp`) is exact but its solve time grows with steps x
 planes; the paper reports ~90 s at 128 nodes with Gurobi.  This greedy
@@ -7,6 +7,12 @@ scheduler makes the same class of decisions -- per-step volume splits plus
 others keep transmitting" -- in O(2^k S^2) time, which handles 512-node
 collectives in milliseconds.  It is cross-validated against the MILP optimum
 on every instance small enough to solve exactly (tests assert a small gap).
+
+Candidate evaluation runs on the array IR (`repro.core.ir`): per step, every
+candidate reserve set becomes one row of a (candidates x planes) state
+batch, the step's water-filling split is solved for all candidates in one
+``waterfill_batch`` call, and the remaining steps are scored with one
+``rollout_batch`` call -- no per-candidate Python rollout loops.
 
 CHAIN mode (paper-faithful):
   per step, enumerate which planes to *reserve* (divert to reconfigure for
@@ -20,65 +26,31 @@ dependency, e.g. pairwise all-to-all):
   steps are packed onto planes by least-finish-time, letting transmissions
   of different steps proceed concurrently on different planes; the global
   step barrier (P3) disappears and reconfigurations pipeline naturally.
+
+Both entry points accept ``plane_ready`` -- per-plane earliest activity
+times -- so the runtime arbiter can re-plan a job onto planes that free at
+different instants instead of waiting for the latest one.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import itertools
+from typing import Sequence
+
+import numpy as np
 
 from repro.core.fabric import OpticalFabric
+from repro.core.ir import (
+    NO_CONFIG,
+    _BIG,
+    fabric_arrays,
+    rollout_batch,
+    waterfill_batch,
+)
 from repro.core.patterns import Pattern
 from repro.core.schedule import Decisions, DependencyMode, Schedule
 from repro.core.simulator import execute
-
-_EPS = 1e-12
-
-
-@dataclasses.dataclass
-class _PlaneState:
-    config: int | None
-    free: float
-
-
-def _water_fill(
-    ready: list[tuple[int, float]],  # (plane, ready time), any order
-    bandwidths: dict[int, float],
-    volume: float,
-) -> tuple[float, dict[int, float]]:
-    """Equalize finish times: returns (step end, plane -> volume).
-
-    Planes whose ready time exceeds the resulting water level carry nothing
-    (and are reported with zero volume).
-    """
-    if volume <= _EPS:
-        first = min(r for _, r in ready) if ready else 0.0
-        return first, {}
-    order = sorted(ready, key=lambda t: t[1])
-    active: list[int] = []
-    level = order[0][1]
-    remaining = volume
-    idx = 0
-    while True:
-        while idx < len(order) and order[idx][1] <= level + _EPS:
-            active.append(order[idx][0])
-            idx += 1
-        bw_sum = sum(bandwidths[p] for p in active)
-        next_ready = order[idx][1] if idx < len(order) else float("inf")
-        # Volume absorbed before the next plane becomes ready.
-        absorb = bw_sum * (next_ready - level)
-        if remaining <= absorb or idx >= len(order):
-            level += remaining / bw_sum
-            break
-        remaining -= absorb
-        level = next_ready
-    ready_of = dict(ready)
-    split = {
-        p: bandwidths[p] * (level - ready_of[p])
-        for p in active
-        if level - ready_of[p] > _EPS
-    }
-    return level, split
+from repro.core.tolerances import EPS as _EPS
 
 
 def _upcoming_targets(
@@ -97,47 +69,27 @@ def _upcoming_targets(
     return targets
 
 
-def _rollout(
-    fabric: OpticalFabric,
-    pattern: Pattern,
-    states: list[_PlaneState],
-    barrier: float,
-    start_step: int,
-    horizon: int,
-) -> float:
-    """CCT estimate: run remaining steps with the no-reserve policy."""
-    bw = {j: fabric.plane_bandwidth(j) for j in range(fabric.n_planes)}
-    states = [dataclasses.replace(s) for s in states]
-    end_step = min(pattern.n_steps, start_step + horizon)
-    for i in range(start_step, end_step):
-        step = pattern.steps[i]
-        ready = []
-        for j, st in enumerate(states):
-            extra = 0.0 if st.config == step.config else fabric.t_recfg
-            ready.append((j, max(barrier, st.free + extra)))
-        level, split = _water_fill(ready, bw, step.volume)
-        for j, vol in split.items():
-            st = states[j]
-            if st.config != step.config:
-                st.free += fabric.t_recfg
-                st.config = step.config
-            st.free = max(barrier, st.free) + vol / bw[j]
-        barrier = level
-    if end_step < pattern.n_steps:
-        # Tail lower-bound: remaining volume at aggregate bandwidth plus one
-        # reconfiguration per config change.
-        tail_volume = sum(
-            pattern.steps[i].volume for i in range(end_step, pattern.n_steps)
-        )
-        changes = sum(
-            1
-            for i in range(end_step, pattern.n_steps)
-            if pattern.steps[i].config
-            != pattern.steps[max(i - 1, end_step)].config
-        )
-        barrier += tail_volume / sum(bw.values())
-        barrier += changes * fabric.t_recfg / fabric.n_planes
-    return barrier
+def _initial_state(
+    fabric: OpticalFabric, plane_ready: Sequence[float] | None
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(bandwidth, config, free) arrays for the fabric's starting state."""
+    bw, config = fabric_arrays(fabric)
+    if plane_ready is None:
+        free = np.zeros(fabric.n_planes)
+    else:
+        free = np.array(plane_ready, dtype=np.float64)
+    return bw, config.copy(), free
+
+
+def has_ready_offsets(plane_ready: Sequence[float] | None) -> bool:
+    """True when any plane carries a positive ready-time offset.
+
+    The shared predicate for the two decisions staggered leases force:
+    `repro.core.scheduler.swot_schedule` bypasses the MILP (it cannot
+    model ready offsets) and this module skips ``lp_polish`` (it assumes
+    all planes free at t=0).
+    """
+    return plane_ready is not None and any(r > 0.0 for r in plane_ready)
 
 
 def swot_greedy_chain(
@@ -146,14 +98,14 @@ def swot_greedy_chain(
     rollout_horizon: int = 24,
     max_enumerated_planes: int = 8,
     polish: bool = True,
+    plane_ready: Sequence[float] | None = None,
 ) -> Schedule:
     """Greedy CHAIN-mode (paper-faithful P3) scheduler."""
     n_planes = fabric.n_planes
-    bw = {j: fabric.plane_bandwidth(j) for j in range(n_planes)}
-    states = [
-        _PlaneState(config=fabric.initial_config(j), free=0.0)
-        for j in range(n_planes)
-    ]
+    t_recfg = fabric.t_recfg
+    bw, config, free = _initial_state(fabric, plane_ready)
+    step_configs = np.asarray(pattern.configs, dtype=np.int64)
+    step_volumes = np.asarray(pattern.volumes, dtype=np.float64)
     barrier = 0.0
     splits: list[dict[int, float]] = []
 
@@ -167,50 +119,77 @@ def swot_greedy_chain(
                 for c in itertools.combinations(range(n_planes), size)
             ]
         else:
-            by_free = sorted(range(n_planes), key=lambda j: states[j].free)
+            by_free = sorted(range(n_planes), key=lambda j: free[j])
             reserve_sets = [set(by_free[:size]) for size in range(4)]
 
-        best: tuple[float, float, dict[int, float], list[_PlaneState], float] | None = None
-        for reserved in reserve_sets:
-            servers = [j for j in range(n_planes) if j not in reserved]
-            if not servers:
+        # One state row per candidate; reserved planes are retargeted to
+        # upcoming configs, then excluded from this step's water-fill.
+        n_cand = len(reserve_sets)
+        trial_cfg = np.repeat(config[None, :], n_cand, axis=0)
+        trial_free = np.repeat(free[None, :], n_cand, axis=0)
+        reserved_mask = np.zeros((n_cand, n_planes), dtype=bool)
+        valid = np.ones(n_cand, dtype=bool)
+        for c_idx, reserved in enumerate(reserve_sets):
+            if len(reserved) == n_planes:
+                valid[c_idx] = False
                 continue
-            trial = [dataclasses.replace(s) for s in states]
-            held = {
-                trial[j].config
-                for j in range(n_planes)
-                if trial[j].config is not None
-            }
+            held = {int(c) for c in trial_cfg[c_idx] if c != NO_CONFIG}
             held.add(step.config)
             targets = _upcoming_targets(pattern, i + 1, held, len(reserved))
-            for j, cfg in zip(sorted(reserved, key=lambda j: trial[j].free), targets):
-                trial[j].free += fabric.t_recfg
-                trial[j].config = cfg
-            ready = []
-            for j in servers:
-                extra = 0.0 if trial[j].config == step.config else fabric.t_recfg
-                ready.append((j, max(barrier, trial[j].free + extra)))
-            level, split = _water_fill(ready, bw, step.volume)
-            if step.volume > _EPS and not split:
-                continue
-            for j, vol in split.items():
-                st = trial[j]
-                if st.config != step.config:
-                    st.free += fabric.t_recfg
-                    st.config = step.config
-                st.free = max(barrier, st.free) + vol / bw[j]
-            score = _rollout(
-                fabric, pattern, trial, level, i + 1, rollout_horizon
-            )
-            key = (score, level)
-            if best is None or key < (best[0], best[1]):
-                best = (score, level, split, trial, level)
-        assert best is not None, "no feasible reserve set"
-        _, _, split, states, barrier = best
-        splits.append(split)
+            by_free = sorted(reserved, key=lambda j: trial_free[c_idx, j])
+            for j, cfg_t in zip(by_free, targets):
+                trial_free[c_idx, j] += t_recfg
+                trial_cfg[c_idx, j] = cfg_t
+            if reserved:
+                reserved_mask[c_idx, sorted(reserved)] = True
 
-    schedule = execute(fabric, pattern, Decisions(tuple(splits)))
-    if polish:
+        extra = np.where(trial_cfg == step.config, 0.0, t_recfg)
+        ready = np.maximum(barrier, trial_free + extra)
+        ready = np.where(reserved_mask, _BIG, ready)
+        level, split = waterfill_batch(ready, bw, step.volume)
+        if step.volume > _EPS:
+            valid &= (split > 0.0).any(axis=1)
+        assert np.any(valid), "no feasible reserve set"
+        active = split > 0.0
+        new_free = np.where(active, level[:, None], trial_free)
+        new_cfg = np.where(active, step.config, trial_cfg)
+        scores = rollout_batch(
+            bw,
+            t_recfg,
+            step_configs,
+            step_volumes,
+            new_cfg,
+            new_free,
+            level,
+            i + 1,
+            rollout_horizon,
+        )
+        scores = np.where(valid, scores, np.inf)
+        level_key = np.where(valid, level, np.inf)
+        # Min by (score, level, candidate order) -- the same rule as the
+        # historical first-strictly-better scan.  Scores can differ from
+        # the interpreted rollout at ulp level (closed-form water level vs
+        # iterative accumulation), so near-tied candidates may resolve
+        # differently; schedule quality is pinned by the MILP
+        # cross-validation tests, not by bitwise decision equality.
+        best = int(np.lexsort((np.arange(n_cand), level_key, scores))[0])
+        config = new_cfg[best]
+        free = new_free[best]
+        barrier = float(level[best])
+        splits.append(
+            {
+                j: float(split[best, j])
+                for j in range(n_planes)
+                if split[best, j] > 0.0
+            }
+        )
+
+    schedule = execute(
+        fabric, pattern, Decisions(tuple(splits)), plane_ready=plane_ready
+    )
+    # LP polish assumes all planes free at t=0; skip it when re-planning
+    # with staggered ready times (the arbiter's case).
+    if polish and not has_ready_offsets(plane_ready):
         from repro.core.milp import lp_polish
 
         schedule = lp_polish(schedule)
@@ -234,8 +213,6 @@ def _structure_local_search(
     ``u`` therefore explore structures the constructive greedy cannot
     reach, e.g. "both planes serve step 0 but one releases early".
     """
-    import numpy as np
-
     from repro.core.milp import _structure_of, solve_fixed_structure
 
     n_cells = pattern.n_steps * fabric.n_planes
@@ -268,35 +245,30 @@ def _structure_local_search(
 
 
 def swot_greedy_independent(
-    fabric: OpticalFabric, pattern: Pattern, polish: bool = True
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    polish: bool = True,
+    plane_ready: Sequence[float] | None = None,
 ) -> Schedule:
     """Beyond-paper INDEPENDENT-mode packing (no cross-step barrier)."""
     n_planes = fabric.n_planes
-    bw = {j: fabric.plane_bandwidth(j) for j in range(n_planes)}
-    states = [
-        _PlaneState(config=fabric.initial_config(j), free=0.0)
-        for j in range(n_planes)
-    ]
+    bw, config, free = _initial_state(fabric, plane_ready)
     splits: list[dict[int, float]] = []
     for step in pattern.steps:
         # Finish time if the whole step lands on plane j.
-        def finish(j: int) -> float:
-            extra = 0.0 if states[j].config == step.config else fabric.t_recfg
-            return states[j].free + extra + step.volume / bw[j]
-
-        j = min(range(n_planes), key=finish)
-        st = states[j]
-        if st.config != step.config:
-            st.free += fabric.t_recfg
-            st.config = step.config
-        st.free += step.volume / bw[j]
+        extra = np.where(config == step.config, 0.0, fabric.t_recfg)
+        finish = free + extra + step.volume / bw
+        j = int(np.argmin(finish))
+        free[j] = finish[j]
+        config[j] = step.config
         splits.append({j: step.volume})
     schedule = execute(
         fabric,
         pattern,
         Decisions(tuple(splits), mode=DependencyMode.INDEPENDENT),
+        plane_ready=plane_ready,
     )
-    if polish:
+    if polish and not has_ready_offsets(plane_ready):
         from repro.core.milp import lp_polish
 
         schedule = lp_polish(schedule)
@@ -307,12 +279,13 @@ def swot_greedy(
     fabric: OpticalFabric,
     pattern: Pattern,
     mode: DependencyMode = DependencyMode.CHAIN,
+    plane_ready: Sequence[float] | None = None,
 ) -> Schedule:
     if mode is DependencyMode.CHAIN:
-        return swot_greedy_chain(fabric, pattern)
+        return swot_greedy_chain(fabric, pattern, plane_ready=plane_ready)
     # Every CHAIN-legal schedule is INDEPENDENT-legal (the barrier is just
     # conservative), so independent mode returns the better of step-packing
     # and the chain scheduler -- splitting wins when steps are few or wide.
-    indep = swot_greedy_independent(fabric, pattern)
-    chain = swot_greedy_chain(fabric, pattern)
+    indep = swot_greedy_independent(fabric, pattern, plane_ready=plane_ready)
+    chain = swot_greedy_chain(fabric, pattern, plane_ready=plane_ready)
     return chain if chain.cct < indep.cct else indep

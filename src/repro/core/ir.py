@@ -1,0 +1,604 @@
+"""Array-based schedule IR: vectorized legality, CCT, and batched sweeps.
+
+The object path (`repro.core.schedule` / `repro.core.simulator`) represents
+a schedule as a tuple of ``PlaneActivity`` dataclasses and walks it in
+interpreted loops -- O(activities) Python work per validation or CCT query.
+This module is the struct-of-arrays twin:
+
+* ``ScheduleIR``    -- one NumPy array per activity field (``plane_id``,
+  ``kind``, ``step``, ``config``, ``t_start``, ``t_end``, ``volume``) plus
+  per-step / per-plane metadata, with **lossless** ``to_ir``/``from_ir``
+  converters (activity order and every float preserved bit-for-bit).
+* ``validate_ir``   -- the paper's P1/P2/P3 legality properties plus
+  physical feasibility as vectorized interval/mask checks, for both CHAIN
+  and INDEPENDENT modes.  Accepts/rejects exactly like the object-path
+  validator (which is kept as the debug oracle).
+* ``execute_ir``    -- CCT, reconfiguration count, and per-plane busy time
+  via array reductions over the IR.
+* ``evaluate_decisions`` / ``batch_evaluate`` -- earliest-start timing
+  derived directly from ``Decisions`` volume splits, vectorized over a
+  *batch* of instances packed into one padded array set.  A sweep over
+  message sizes x ``t_recfg`` x plane counts is a single NumPy pass whose
+  per-step inner ops cover the whole batch; per-instance results are
+  bitwise identical to the object executor's.
+* ``waterfill_batch`` / ``rollout_batch`` -- the greedy scheduler's
+  water-filling and rollout scoring, vectorized over candidate reserve
+  sets (used by `repro.core.greedy`) and over lease candidates (used by
+  `repro.runtime.arbiter`).
+
+The IR is deliberately jit-friendly (flat float64/int64 arrays, static
+shapes after padding): later PRs can lower ``_derive_timing_batch`` to
+jax/Pallas without touching callers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.fabric import OpticalFabric
+from repro.core.patterns import Pattern
+from repro.core.schedule import (
+    Decisions,
+    DependencyMode,
+    Kind,
+    PlaneActivity,
+    Schedule,
+)
+from repro.core.tolerances import (
+    EPS,
+    EPS_VOLUME,
+    REL_TOL,
+    TOL,
+    times_close_arr,
+)
+
+KIND_XMIT = 0
+KIND_RECFG = 1
+NO_CONFIG = -1  # array sentinel for "unconfigured" (object path: ``None``)
+
+_BIG = 1e30  # finite stand-in for +inf ready times (keeps bw*ready NaN-free)
+
+
+def fabric_arrays(fabric: OpticalFabric) -> tuple[np.ndarray, np.ndarray]:
+    """``(plane_bw, initial_config)`` arrays for a fabric.
+
+    The single source of the fabric-to-arrays mapping (``NO_CONFIG``
+    encodes an unconfigured plane); shared by ``to_ir`` and the greedy's
+    state initialization.
+    """
+    plane_bw = np.array(
+        [fabric.plane_bandwidth(j) for j in range(fabric.n_planes)],
+        dtype=np.float64,
+    )
+    initial = np.array(
+        [
+            NO_CONFIG if (c := fabric.initial_config(j)) is None else c
+            for j in range(fabric.n_planes)
+        ],
+        dtype=np.int64,
+    )
+    return plane_bw, initial
+
+
+# ---------------------------------------------------------------------------
+# The IR proper + lossless converters
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ScheduleIR:
+    """Struct-of-arrays schedule representation.
+
+    Activity arrays are parallel and keep the *original* activity order of
+    the source ``Schedule`` so the round trip is lossless.  Config ids are
+    non-negative ints; ``NO_CONFIG`` encodes the object path's ``None``.
+    """
+
+    # Instance metadata.
+    n_planes: int
+    n_steps: int
+    mode: DependencyMode
+    t_recfg: float
+    plane_bw: np.ndarray  # (P,) float64, effective bytes/s per plane
+    initial_config: np.ndarray  # (P,) int64, NO_CONFIG = unconfigured
+    step_config: np.ndarray  # (S,) int64
+    step_volume: np.ndarray  # (S,) float64
+    # Activity arrays, all shape (N,).
+    plane_id: np.ndarray  # int64
+    kind: np.ndarray  # int64: KIND_XMIT | KIND_RECFG
+    step: np.ndarray  # int64
+    config: np.ndarray  # int64
+    t_start: np.ndarray  # float64
+    t_end: np.ndarray  # float64
+    volume: np.ndarray  # float64
+    # Provenance (object handles for the lossless round trip).
+    fabric: OpticalFabric
+    pattern: Pattern
+
+    @property
+    def n_activities(self) -> int:
+        return int(self.plane_id.shape[0])
+
+
+def to_ir(schedule: Schedule) -> ScheduleIR:
+    """Convert a ``Schedule`` to the array IR (lossless)."""
+    fabric = schedule.fabric
+    pattern = schedule.pattern
+    acts = schedule.activities
+    n = len(acts)
+    plane_id = np.fromiter(
+        (a.plane for a in acts), dtype=np.int64, count=n
+    )
+    kind = np.fromiter(
+        (KIND_RECFG if a.kind is Kind.RECFG else KIND_XMIT for a in acts),
+        dtype=np.int64,
+        count=n,
+    )
+    step = np.fromiter((a.step for a in acts), dtype=np.int64, count=n)
+    config = np.fromiter((a.config for a in acts), dtype=np.int64, count=n)
+    if n and config.min() < 0:
+        raise ValueError("IR requires non-negative config ids")
+    t_start = np.fromiter(
+        (a.start for a in acts), dtype=np.float64, count=n
+    )
+    t_end = np.fromiter((a.end for a in acts), dtype=np.float64, count=n)
+    volume = np.fromiter(
+        (a.volume for a in acts), dtype=np.float64, count=n
+    )
+    plane_bw, initial = fabric_arrays(fabric)
+    return ScheduleIR(
+        n_planes=fabric.n_planes,
+        n_steps=pattern.n_steps,
+        mode=schedule.mode,
+        t_recfg=fabric.t_recfg,
+        plane_bw=plane_bw,
+        initial_config=initial,
+        step_config=np.asarray(pattern.configs, dtype=np.int64),
+        step_volume=np.asarray(pattern.volumes, dtype=np.float64),
+        plane_id=plane_id,
+        kind=kind,
+        step=step,
+        config=config,
+        t_start=t_start,
+        t_end=t_end,
+        volume=volume,
+        fabric=fabric,
+        pattern=pattern,
+    )
+
+
+def from_ir(ir: ScheduleIR) -> Schedule:
+    """Reconstruct the exact source ``Schedule`` (inverse of ``to_ir``)."""
+    activities = tuple(
+        PlaneActivity(
+            plane=int(ir.plane_id[i]),
+            kind=Kind.RECFG if ir.kind[i] == KIND_RECFG else Kind.XMIT,
+            step=int(ir.step[i]),
+            start=float(ir.t_start[i]),
+            end=float(ir.t_end[i]),
+            config=int(ir.config[i]),
+            volume=float(ir.volume[i]),
+        )
+        for i in range(ir.n_activities)
+    )
+    return Schedule(
+        fabric=ir.fabric,
+        pattern=ir.pattern,
+        activities=activities,
+        mode=ir.mode,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized legality (P1 / P2 / P3 + feasibility)
+# ---------------------------------------------------------------------------
+def validate_ir(ir: ScheduleIR) -> None:
+    """Raise ``ValueError`` unless the IR encodes a legal schedule.
+
+    Mirrors the object-path validator check for check (same tolerances via
+    ``repro.core.tolerances``), so it accepts/rejects identically; only the
+    error messages differ in formatting.
+    """
+    n = ir.n_activities
+    dur = ir.t_end - ir.t_start
+    xm = ir.kind == KIND_XMIT
+    rc = ~xm
+
+    if np.any((ir.plane_id < 0) | (ir.plane_id >= ir.n_planes)):
+        raise ValueError("activity on unknown plane")
+    if np.any(ir.t_start < -TOL) or np.any(dur < -TOL):
+        raise ValueError("activity has invalid interval")
+    if np.any((ir.step[xm] < 0) | (ir.step[xm] >= ir.n_steps)):
+        raise ValueError("transmission for unknown step")
+    if np.any(ir.config[xm] != ir.step_config[ir.step[xm]]):
+        raise ValueError("transmission tagged with wrong config")
+    if np.any(ir.volume[xm] < -TOL):
+        raise ValueError("negative transmission volume")
+    min_dur = ir.volume[xm] / ir.plane_bw[ir.plane_id[xm]]
+    if not np.all(times_close_arr(min_dur, dur[xm])):
+        raise ValueError("transmission interval shorter than volume needs")
+    if not np.all(
+        times_close_arr(np.full(int(rc.sum()), ir.t_recfg), dur[rc])
+    ):
+        raise ValueError("reconfiguration shorter than t_recfg")
+
+    # Volume conservation (paper Eq. 1).
+    sent = np.zeros(ir.n_steps)
+    np.add.at(sent, ir.step[xm], ir.volume[xm])
+    tol = np.maximum(TOL, REL_TOL * np.maximum(ir.step_volume, 1.0))
+    if np.any(np.abs(sent - ir.step_volume) > tol):
+        raise ValueError("scheduled volume != required step volume")
+
+    # P2 (no per-plane overlap) + P1 (config correctness via the plane's
+    # reconfiguration state machine), vectorized per plane slice.
+    for p in np.unique(ir.plane_id):
+        idx = np.where(ir.plane_id == p)[0]
+        order = idx[np.lexsort((ir.t_end[idx], ir.t_start[idx]))]
+        s = ir.t_start[order]
+        e = ir.t_end[order]
+        k = ir.kind[order]
+        cfg = ir.config[order]
+        prev_end = np.empty(order.size)
+        prev_end[0] = 0.0
+        if order.size > 1:
+            prev_end[1:] = np.maximum.accumulate(e[:-1])
+            prev_end[1:] = np.maximum(prev_end[1:], 0.0)
+        if np.any(s < prev_end - TOL - REL_TOL * np.abs(prev_end)):
+            raise ValueError(f"P2 violation on plane {int(p)}")
+        is_r = k == KIND_RECFG
+        r_pos = np.where(is_r)[0]
+        if r_pos.size:
+            last = (
+                np.searchsorted(r_pos, np.arange(order.size), side="left")
+                - 1
+            )
+            held = np.where(
+                last >= 0,
+                cfg[r_pos[np.clip(last, 0, None)]],
+                ir.initial_config[int(p)],
+            )
+        else:
+            held = np.full(order.size, ir.initial_config[int(p)])
+        if np.any(~is_r & (held != cfg)):
+            raise ValueError(f"P1 violation on plane {int(p)}")
+
+    # P3: cross-step synchronization (chain mode only).
+    if ir.mode is DependencyMode.CHAIN:
+        wstart = np.full(ir.n_steps, np.inf)
+        wend = np.full(ir.n_steps, -np.inf)
+        np.minimum.at(wstart, ir.step[xm], ir.t_start[xm])
+        np.maximum.at(wend, ir.step[xm], ir.t_end[xm])
+        nz = np.where(ir.step_volume > TOL)[0]
+        if np.any(np.isinf(wstart[nz])):
+            # Mirrors the object path's ``step_window`` raising for a
+            # non-zero step with no transmissions at all.
+            raise ValueError("no transmissions for a non-zero-volume step")
+        prev = np.concatenate(([0.0], wend[nz][:-1]))
+        if not np.all(times_close_arr(prev, wstart[nz])):
+            raise ValueError("P3 violation: step starts before predecessor")
+
+
+# ---------------------------------------------------------------------------
+# IR evaluation: CCT + utilization via array reductions
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class IRMetrics:
+    """Evaluation of one schedule: the quantities sweeps care about."""
+
+    cct: float
+    n_reconfigurations: int
+    plane_busy: np.ndarray  # (P,) seconds transmitting or reconfiguring
+    utilization: float  # mean busy fraction of [0, cct] across planes
+
+
+def execute_ir(ir: ScheduleIR) -> IRMetrics:
+    """CCT and per-plane utilization from the IR, no object traversal."""
+    xm = ir.kind == KIND_XMIT
+    cct = float(ir.t_end[xm].max()) if np.any(xm) else 0.0
+    busy = np.bincount(
+        ir.plane_id,
+        weights=ir.t_end - ir.t_start,
+        minlength=ir.n_planes,
+    )
+    util = (
+        float(busy.sum() / (cct * ir.n_planes)) if cct > 0.0 else 0.0
+    )
+    return IRMetrics(
+        cct=cct,
+        n_reconfigurations=int((~xm).sum()),
+        plane_busy=busy,
+        utilization=util,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched water-filling + rollout (greedy / arbiter scoring primitives)
+# ---------------------------------------------------------------------------
+def waterfill_batch(
+    ready: np.ndarray,  # (C, P) per-candidate plane ready times
+    bw: np.ndarray,  # (P,) or (C, P) plane bandwidths
+    volume: float,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Equalized-finish water level per candidate row.
+
+    Returns ``(level (C,), split (C, P))`` where ``split`` carries
+    ``bw * (level - ready)`` for planes strictly below the level (others
+    zero).  Planes excluded from a candidate should be passed with
+    ``ready = _BIG`` -- they absorb nothing and never set the level.
+    """
+    ready = np.asarray(ready, dtype=np.float64)
+    bw = np.broadcast_to(np.asarray(bw, dtype=np.float64), ready.shape)
+    if volume <= EPS:
+        return ready.min(axis=1), np.zeros_like(ready)
+    order = np.argsort(ready, axis=1, kind="stable")
+    r_s = np.take_along_axis(ready, order, axis=1)
+    b_s = np.take_along_axis(bw, order, axis=1)
+    cb = np.cumsum(b_s, axis=1)  # inclusive cumulative bandwidth
+    cbr = np.cumsum(b_s * r_s, axis=1)
+    # Volume absorbed by planes 0..k-1 when the level reaches r_s[:, k].
+    cb_prev = np.concatenate([np.zeros_like(cb[:, :1]), cb[:, :-1]], axis=1)
+    cbr_prev = np.concatenate(
+        [np.zeros_like(cbr[:, :1]), cbr[:, :-1]], axis=1
+    )
+    absorbed = r_s * cb_prev - cbr_prev
+    k = (absorbed <= volume).sum(axis=1) - 1  # monotone => largest such k
+    rows = np.arange(ready.shape[0])
+    level = (volume + cbr[rows, k]) / cb[rows, k]
+    gap = level[:, None] - ready
+    split = np.where(gap > EPS, bw * gap, 0.0)
+    return level, split
+
+
+def rollout_batch(
+    bw: np.ndarray,  # (P,)
+    t_recfg: float,
+    step_configs: np.ndarray,  # (S,) int
+    step_volumes: np.ndarray,  # (S,)
+    config: np.ndarray,  # (C, P) int, NO_CONFIG for unconfigured
+    free: np.ndarray,  # (C, P)
+    barrier: np.ndarray,  # (C,)
+    start_step: int,
+    horizon: int,
+) -> np.ndarray:
+    """No-reserve rollout CCT estimate, vectorized over candidates.
+
+    The array twin of the greedy's per-candidate rollout: run the remaining
+    steps with water-filling splits from each candidate's plane state, then
+    add the aggregate-bandwidth tail lower bound past the horizon.
+    """
+    config = config.copy()
+    free = free.copy()
+    barrier = barrier.copy()
+    n_steps = int(step_configs.shape[0])
+    n_planes = int(bw.shape[0])
+    end_step = min(n_steps, start_step + horizon)
+    for i in range(start_step, end_step):
+        extra = np.where(config == step_configs[i], 0.0, t_recfg)
+        ready = np.maximum(barrier[:, None], free + extra)
+        level, split = waterfill_batch(ready, bw, float(step_volumes[i]))
+        active = split > 0.0
+        free = np.where(active, level[:, None], free)
+        config = np.where(active, step_configs[i], config)
+        barrier = level
+    if end_step < n_steps:
+        # Tail lower-bound: remaining volume at aggregate bandwidth plus
+        # one reconfiguration per config change.
+        tail_volume = float(step_volumes[end_step:].sum())
+        changes = sum(
+            1
+            for i in range(end_step, n_steps)
+            if step_configs[i] != step_configs[max(i - 1, end_step)]
+        )
+        barrier = barrier + tail_volume / float(bw.sum())
+        barrier = barrier + changes * t_recfg / n_planes
+    return barrier
+
+
+# ---------------------------------------------------------------------------
+# Batched decision evaluation (the scenario-sweep engine)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BatchInstance:
+    """One (fabric, pattern, decisions) cell of a scenario sweep."""
+
+    fabric: OpticalFabric
+    pattern: Pattern
+    decisions: Decisions
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchResult:
+    """Per-instance outcomes of one ``batch_evaluate`` pass."""
+
+    cct: np.ndarray  # (B,)
+    n_reconfigurations: np.ndarray  # (B,) int
+    plane_busy: np.ndarray  # (B, P_max); padded planes stay 0
+    utilization: np.ndarray  # (B,)
+    feasible: np.ndarray  # (B,) bool: every non-zero step had a server
+    volume_ok: np.ndarray  # (B,) bool: splits conserve per-step volume
+
+    def __len__(self) -> int:
+        return int(self.cct.shape[0])
+
+
+def _pack(
+    instances: Sequence[BatchInstance],
+    plane_ready: Sequence[Sequence[float]] | None,
+) -> dict[str, np.ndarray]:
+    b = len(instances)
+    s_max = max(inst.pattern.n_steps for inst in instances)
+    p_max = max(inst.fabric.n_planes for inst in instances)
+    vol = np.zeros((b, s_max, p_max))
+    step_vol = np.zeros((b, s_max))
+    step_cfg = np.full((b, s_max), NO_CONFIG, dtype=np.int64)
+    step_mask = np.zeros((b, s_max), dtype=bool)
+    plane_mask = np.zeros((b, p_max), dtype=bool)
+    bw = np.ones((b, p_max))
+    init = np.full((b, p_max), NO_CONFIG, dtype=np.int64)
+    t_recfg = np.zeros(b)
+    chain = np.zeros(b, dtype=bool)
+    ready = np.zeros((b, p_max))
+    for bi, inst in enumerate(instances):
+        fabric, pattern, dec = inst.fabric, inst.pattern, inst.decisions
+        if len(dec.splits) != pattern.n_steps:
+            raise ValueError(
+                f"decisions cover {len(dec.splits)} steps, pattern has "
+                f"{pattern.n_steps}"
+            )
+        n_p, n_s = fabric.n_planes, pattern.n_steps
+        step_mask[bi, :n_s] = True
+        plane_mask[bi, :n_p] = True
+        step_vol[bi, :n_s] = pattern.volumes
+        step_cfg[bi, :n_s] = pattern.configs
+        for j in range(n_p):
+            bw[bi, j] = fabric.plane_bandwidth(j)
+            c = fabric.initial_config(j)
+            init[bi, j] = NO_CONFIG if c is None else c
+        t_recfg[bi] = fabric.t_recfg
+        chain[bi] = dec.mode is DependencyMode.CHAIN
+        for i, split in enumerate(dec.splits):
+            for j, v in split.items():
+                if not 0 <= j < n_p:
+                    # Match the object executor: idle entries (volume at or
+                    # below EPS_VOLUME) are filtered before the plane-range
+                    # check, so only *active* unknown planes reject.
+                    if v > EPS_VOLUME:
+                        raise ValueError(
+                            f"unknown plane {j} in step {i} split"
+                        )
+                    continue
+                vol[bi, i, j] = v
+        if plane_ready is not None and plane_ready[bi] is not None:
+            r = tuple(plane_ready[bi])
+            if len(r) != n_p:
+                raise ValueError("plane_ready length mismatch")
+            if any(x < 0 for x in r):
+                raise ValueError("plane_ready times must be non-negative")
+            ready[bi, :n_p] = r
+    return {
+        "vol": vol,
+        "step_vol": step_vol,
+        "step_cfg": step_cfg,
+        "step_mask": step_mask,
+        "plane_mask": plane_mask,
+        "bw": bw,
+        "init": init,
+        "t_recfg": t_recfg,
+        "chain": chain,
+        "ready": ready,
+    }
+
+
+def _derive_timing_batch(p: dict[str, np.ndarray]) -> BatchResult:
+    """Earliest-start timing over the packed batch, one step per loop turn.
+
+    Per-plane update order matches the object executor exactly (reconfigure
+    lazily at plane-free, transmit at ``max(barrier, free)`` in CHAIN mode
+    or plane-free in INDEPENDENT mode), so per-instance CCTs are bitwise
+    identical to ``repro.core.simulator.execute``.
+    """
+    b, s_max, _ = p["vol"].shape
+    free = p["ready"].copy()
+    held = p["init"].copy()
+    barrier = np.zeros(b)
+    cct = np.zeros(b)
+    busy = np.zeros_like(free)
+    n_recfg = np.zeros(b, dtype=np.int64)
+    feasible = np.ones(b, dtype=bool)
+    volume_ok = np.ones(b, dtype=bool)
+    t_recfg = p["t_recfg"][:, None]
+    chain = p["chain"][:, None]
+    for i in range(s_max):
+        v = p["vol"][:, i, :]
+        live = p["step_mask"][:, i]
+        active = (v > EPS_VOLUME) & p["plane_mask"] & live[:, None]
+        has = active.any(axis=1)
+        feasible &= ~(live & (p["step_vol"][:, i] > EPS_VOLUME) & ~has)
+        # Volume conservation (the object validator's Eq. 1 check, with
+        # the shared tolerance formula).
+        sent = np.where(active, v, 0.0).sum(axis=1)
+        cons_tol = np.maximum(
+            TOL, REL_TOL * np.maximum(p["step_vol"][:, i], 1.0)
+        )
+        volume_ok &= ~live | (
+            np.abs(sent - p["step_vol"][:, i]) <= cons_tol
+        )
+        cfg = p["step_cfg"][:, i][:, None]
+        need = active & (held != cfg)
+        free = np.where(need, free + t_recfg, free)
+        held = np.where(need, cfg, held)
+        busy += np.where(need, t_recfg, 0.0)
+        n_recfg += need.sum(axis=1)
+        start = np.where(chain, np.maximum(barrier[:, None], free), free)
+        end = start + v / p["bw"]
+        free = np.where(active, end, free)
+        busy += np.where(active, end - start, 0.0)
+        step_end = np.where(active, end, -np.inf).max(axis=1, initial=-np.inf)
+        barrier = np.where(has, np.maximum(barrier, step_end), barrier)
+        cct = np.where(has, np.maximum(cct, step_end), cct)
+    util = np.where(
+        cct > 0.0,
+        busy.sum(axis=1) / np.maximum(cct * p["plane_mask"].sum(axis=1), EPS),
+        0.0,
+    )
+    return BatchResult(
+        cct=cct,
+        n_reconfigurations=n_recfg,
+        plane_busy=busy,
+        utilization=util,
+        feasible=feasible,
+        volume_ok=volume_ok,
+    )
+
+
+def batch_evaluate(
+    instances: Sequence[BatchInstance],
+    plane_ready: Sequence[Sequence[float]] | None = None,
+) -> BatchResult:
+    """Evaluate many (fabric, pattern, decisions) cells in one array pass.
+
+    Instances are padded to the batch's max step/plane counts; padded cells
+    carry zero volume and are masked out.  ``plane_ready`` optionally gives
+    per-instance plane ready-time offsets (the arbiter's re-planning case).
+    """
+    if not instances:
+        return BatchResult(
+            cct=np.zeros(0),
+            n_reconfigurations=np.zeros(0, dtype=np.int64),
+            plane_busy=np.zeros((0, 0)),
+            utilization=np.zeros(0),
+            feasible=np.ones(0, dtype=bool),
+            volume_ok=np.ones(0, dtype=bool),
+        )
+    return _derive_timing_batch(_pack(instances, plane_ready))
+
+
+def evaluate_decisions(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    decisions: Decisions,
+    plane_ready: Sequence[float] | None = None,
+) -> IRMetrics:
+    """Single-instance evaluation through the batched engine.
+
+    Raises ``ValueError`` on the same malformed-decision cases as the
+    object executor + validator: step count mismatch, active unknown
+    plane, negative ready offsets, a step with volume but no active
+    plane, or splits that fail per-step volume conservation.  (The other
+    legality properties hold by construction of earliest-start timing.)
+    """
+    res = batch_evaluate(
+        [BatchInstance(fabric, pattern, decisions)],
+        None if plane_ready is None else [plane_ready],
+    )
+    if not bool(res.feasible[0]):
+        raise ValueError("a step has volume but no active planes")
+    if not bool(res.volume_ok[0]):
+        raise ValueError("scheduled volume != required step volume")
+    return IRMetrics(
+        cct=float(res.cct[0]),
+        n_reconfigurations=int(res.n_reconfigurations[0]),
+        plane_busy=res.plane_busy[0, : fabric.n_planes],
+        utilization=float(res.utilization[0]),
+    )

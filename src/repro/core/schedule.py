@@ -28,9 +28,9 @@ from collections import defaultdict
 
 from repro.core.fabric import OpticalFabric
 from repro.core.patterns import Pattern
-
-_TOL = 1e-9
-_REL_TOL = 1e-6
+from repro.core.tolerances import REL_TOL as _REL_TOL
+from repro.core.tolerances import TOL as _TOL
+from repro.core.tolerances import times_close as _times_close
 
 
 class DependencyMode(str, enum.Enum):
@@ -101,7 +101,15 @@ class Schedule:
         return min(a.start for a in xs), max(a.end for a in xs)
 
     def validate(self) -> None:
-        validate(self)
+        """Check legality through the vectorized IR path.
+
+        ``validate_object`` (this module) is the original interpreted
+        validator, kept as the debug oracle; ``repro.core.ir.validate_ir``
+        accepts/rejects identically (property-tested in tests/test_ir.py).
+        """
+        from repro.core.ir import to_ir, validate_ir
+
+        validate_ir(to_ir(self))
 
     def timeline(self) -> str:
         """ASCII per-plane timeline (for demos and logs)."""
@@ -126,12 +134,13 @@ class Schedule:
         return "\n".join(lines)
 
 
-def _times_close(a: float, b: float) -> bool:
-    return a <= b + _TOL + _REL_TOL * max(abs(a), abs(b), 1e-6)
+def validate_object(schedule: Schedule) -> None:
+    """Raise ``ValueError`` unless the schedule is legal (P1, P2, P3).
 
-
-def validate(schedule: Schedule) -> None:
-    """Raise ``ValueError`` unless the schedule is legal (P1, P2, P3)."""
+    The interpreted object-path validator.  ``Schedule.validate`` runs the
+    vectorized IR twin instead; this one is retained as the debug oracle
+    the IR path is property-tested against.
+    """
     fabric = schedule.fabric
     pattern = schedule.pattern
     acts = schedule.activities
@@ -220,6 +229,10 @@ def validate(schedule: Schedule) -> None:
                     f"{prev_window_end * 1e6:.2f} us"
                 )
             prev_window_end = end
+
+
+#: Back-compat name: the object-path oracle used to be ``validate``.
+validate = validate_object
 
 
 @dataclasses.dataclass(frozen=True)

@@ -3,15 +3,16 @@
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from repro.core.baselines import (
     InfeasibleError,
     ideal_cct,
-    one_shot,
-    strawman_icr,
+    one_shot_cct,
+    strawman_cct,
 )
 from repro.core.fabric import OpticalFabric
-from repro.core.greedy import swot_greedy
+from repro.core.greedy import has_ready_offsets, swot_greedy
 from repro.core.milp import solve_milp
 from repro.core.patterns import Pattern
 from repro.core.schedule import DependencyMode, Schedule
@@ -54,8 +55,19 @@ def swot_schedule(
     method: str = "auto",
     mode: DependencyMode = DependencyMode.CHAIN,
     milp_time_limit: float = 30.0,
+    plane_ready: Sequence[float] | None = None,
 ) -> tuple[Schedule, str]:
-    """Schedule ``pattern`` on ``fabric`` with SWOT overlap optimization."""
+    """Schedule ``pattern`` on ``fabric`` with SWOT overlap optimization.
+
+    ``plane_ready`` gives per-plane earliest activity times (the arbiter's
+    staggered-lease case).  The MILP does not model ready offsets, so any
+    positive offset forces the greedy path.
+    """
+    if has_ready_offsets(plane_ready):
+        return (
+            swot_greedy(fabric, pattern, mode=mode, plane_ready=plane_ready),
+            "greedy",
+        )
     if method == "auto":
         n_bin = 2 * pattern.n_steps * fabric.n_planes
         method = "milp" if n_bin <= _MILP_BINARY_BUDGET else "greedy"
@@ -90,20 +102,20 @@ def plan_collective(
         fabric, pattern, method=method, mode=mode,
         milp_time_limit=milp_time_limit,
     )
-    strawman = strawman_icr(fabric, pattern)
+    # Baseline CCTs come from the array IR (no activity-object builds).
     try:
-        oneshot_cct: float | None = one_shot(
+        oneshot: float | None = one_shot_cct(
             fabric, pattern, n_planes=one_shot_planes
-        ).cct
+        )
     except InfeasibleError:
-        oneshot_cct = None
+        oneshot = None
     return SwotPlan(
         pattern=pattern,
         fabric=fabric,
         schedule=schedule,
         method=used,
         cct=schedule.cct,
-        strawman_cct=strawman.cct,
-        one_shot_cct=oneshot_cct,
+        strawman_cct=strawman_cct(fabric, pattern),
+        one_shot_cct=oneshot,
         ideal_cct=ideal_cct(fabric, pattern),
     )

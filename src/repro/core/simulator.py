@@ -24,6 +24,8 @@ the schedulers re-balance splits around them.
 
 from __future__ import annotations
 
+from typing import Sequence
+
 from repro.core.fabric import OpticalFabric
 from repro.core.patterns import Pattern
 from repro.core.schedule import (
@@ -33,14 +35,25 @@ from repro.core.schedule import (
     PlaneActivity,
     Schedule,
 )
-
-_EPS_VOLUME = 1e-6  # bytes; splits below this are treated as idle
+from repro.core.tolerances import EPS_VOLUME as _EPS_VOLUME
 
 
 def execute(
-    fabric: OpticalFabric, pattern: Pattern, decisions: Decisions
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    decisions: Decisions,
+    plane_ready: Sequence[float] | None = None,
+    validate: bool = True,
 ) -> Schedule:
-    """Derive the earliest-start ``Schedule`` for ``decisions``."""
+    """Derive the earliest-start ``Schedule`` for ``decisions``.
+
+    ``plane_ready`` optionally gives a per-plane earliest activity time
+    (default all-zero): the arbiter re-plans a job onto planes that free
+    at different instants and threads those offsets through here.
+    ``validate=False`` skips the legality check (earliest-start timing is
+    legal by construction; callers that immediately re-validate, like
+    benchmarks pitting specific validators against each other, opt out).
+    """
     if len(decisions.splits) != pattern.n_steps:
         raise ValueError(
             f"decisions cover {len(decisions.splits)} steps, pattern has "
@@ -50,7 +63,14 @@ def execute(
     config: list[int | None] = [
         fabric.initial_config(j) for j in range(n_planes)
     ]
-    free = [0.0] * n_planes
+    if plane_ready is None:
+        free = [0.0] * n_planes
+    else:
+        if len(plane_ready) != n_planes:
+            raise ValueError("plane_ready length mismatch")
+        if any(r < 0 for r in plane_ready):
+            raise ValueError("plane_ready times must be non-negative")
+        free = list(plane_ready)
     activities: list[PlaneActivity] = []
     barrier = 0.0  # end of previous step's window (CHAIN mode)
 
@@ -106,12 +126,25 @@ def execute(
         activities=tuple(activities),
         mode=decisions.mode,
     )
-    schedule.validate()
+    if validate:
+        schedule.validate()
     return schedule
 
 
 def cct_of(
-    fabric: OpticalFabric, pattern: Pattern, decisions: Decisions
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    decisions: Decisions,
+    plane_ready: Sequence[float] | None = None,
 ) -> float:
-    """CCT of the earliest-start schedule for ``decisions``."""
-    return execute(fabric, pattern, decisions).cct
+    """CCT of the earliest-start schedule for ``decisions``.
+
+    Evaluated through the array IR (`repro.core.ir.evaluate_decisions`)
+    without materializing ``PlaneActivity`` objects; bitwise identical to
+    ``execute(...).cct``.
+    """
+    from repro.core.ir import evaluate_decisions
+
+    return evaluate_decisions(
+        fabric, pattern, decisions, plane_ready=plane_ready
+    ).cct

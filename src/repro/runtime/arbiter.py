@@ -23,6 +23,10 @@ resource with an event-driven execution model:
   releases planes and re-plans its remaining steps on the smaller
   sub-fabric; freed planes are granted to waiting jobs or offered to
   running ones (grow), which likewise absorb them at their next boundary.
+  Re-plans pass per-plane *ready offsets* into the scheduler, so the
+  sub-schedule starts on the earliest-freeing plane instead of stalling
+  to the latest one, and shrink decisions re-score candidate kept-sets
+  with one batched IR evaluation (``repro.core.ir.batch_evaluate``).
   INDEPENDENT-mode jobs have no step barrier, so they resize only at
   completion.
 
@@ -39,14 +43,19 @@ import dataclasses
 import heapq
 import itertools
 
+from repro.core.baselines import strawman_instance
 from repro.core.fabric import OpticalFabric
+from repro.core.ir import BatchInstance, batch_evaluate
 from repro.core.patterns import Pattern, get_pattern
 from repro.core.schedule import DependencyMode, Kind, Schedule
 from repro.core.scheduler import swot_schedule
 from repro.core.shim import _INDEPENDENT_SAFE, CollectiveRequest
 from repro.runtime.engine import SimEngine
+from repro.core.tolerances import EPS as _EPS
 
-_EPS = 1e-12
+# Cap on lease-shrink candidate sets scored per resize (one batched IR
+# evaluation covers all of them).
+_MAX_RELEASE_CANDIDATES = 16
 
 # Namespace within which OCS config ids denote identical permutations.
 ConfigKey = tuple[str, int]  # (algorithm, n_nodes)
@@ -327,27 +336,43 @@ class FabricArbiter:
         self.stats.admitted += 1
         self._plan(job)
 
-    def _sub_fabric(self, job: _Job) -> OpticalFabric:
+    def _sub_fabric(
+        self, job: _Job, planes: tuple[int, ...] | None = None
+    ) -> OpticalFabric:
+        planes = job.planes if planes is None else planes
         scales = None
         if self.fabric.plane_bandwidth_scale is not None:
             scales = tuple(
-                self.fabric.plane_bandwidth_scale[p] for p in job.planes
+                self.fabric.plane_bandwidth_scale[p] for p in planes
             )
         initial = tuple(
             state[1]
             if (state := self._plane_state[p]) is not None
             and state[0] == job.key
             else None
-            for p in job.planes
+            for p in planes
         )
         return OpticalFabric(
             n_nodes=self.fabric.n_nodes,
-            n_planes=len(job.planes),
+            n_planes=len(planes),
             bandwidth=self.fabric.bandwidth,
             t_recfg=self.fabric.t_recfg,
             plane_bandwidth_scale=scales,
             initial_configs=initial,
         )
+
+    def _lease_frame(
+        self, planes: tuple[int, ...], now: float
+    ) -> tuple[float, tuple[float, ...]]:
+        """Plan-frame origin + per-plane ready offsets for a lease.
+
+        The plan starts when the *earliest* leased plane frees (never
+        before ``now``); later planes enter with positive ready offsets
+        instead of stalling the whole sub-schedule to the latest one.
+        """
+        ready_abs = [self._plane_free_at[p] for p in planes]
+        t0 = max(now, min(ready_abs)) if ready_abs else now
+        return t0, tuple(max(0.0, r - t0) for r in ready_abs)
 
     def _plan(self, job: _Job) -> None:
         """(Re)schedule ``job``'s remaining steps on its current lease."""
@@ -357,14 +382,13 @@ class FabricArbiter:
         sub_pattern = Pattern(
             job.pattern.name, job.pattern.n_nodes, tuple(remaining)
         )
+        t0, plane_ready = self._lease_frame(job.planes, now)
         schedule, _method = swot_schedule(
             self._sub_fabric(job),
             sub_pattern,
             method=job.method,
             mode=job.mode,
-        )
-        t0 = max(
-            [now] + [self._plane_free_at[p] for p in job.planes]
+            plane_ready=plane_ready,
         )
         job.plan = schedule
         job.plan_base_step = job.step_idx
@@ -451,6 +475,66 @@ class FabricArbiter:
             self.stats.reconfigurations += recfgs
         job.plan = None
 
+    def _choose_release(
+        self, job: _Job, lease: list[int], n_release: int, now: float
+    ) -> tuple[int, ...]:
+        """Pick which planes a shrinking job releases.
+
+        Candidate release sets (the historical soonest-free choice plus up
+        to ``_MAX_RELEASE_CANDIDATES`` alternatives) are re-scored in ONE
+        ``batch_evaluate`` pass: each kept-set is evaluated as a sub-fabric
+        with per-plane ready offsets under a proportional-split estimate of
+        the job's remaining steps, and the candidate with the earliest
+        estimated finish wins (ties keep the historical choice).
+        """
+        by_free = sorted(lease, key=lambda p: (self._plane_free_at[p], p))
+        default = tuple(by_free[:n_release])
+        remaining = job.pattern.steps[job.step_idx :]
+        if not remaining:
+            return default
+        candidates = [default]
+        seen = {frozenset(default)}
+        # Enumerate in free-time order (not plane-id order) so the capped
+        # candidate pool spans soonest- through latest-freeing release
+        # sets instead of only low-numbered planes.
+        for combo in itertools.combinations(by_free, n_release):
+            if len(candidates) >= _MAX_RELEASE_CANDIDATES:
+                break
+            key = frozenset(combo)
+            if key in seen:
+                continue
+            seen.add(key)
+            candidates.append(tuple(combo))
+        if len(candidates) == 1:
+            return default
+        sub_pattern = Pattern(
+            job.pattern.name, job.pattern.n_nodes, tuple(remaining)
+        )
+        instances: list[BatchInstance] = []
+        starts: list[float] = []
+        readies: list[tuple[float, ...]] = []
+        for release in candidates:
+            kept = tuple(p for p in sorted(lease) if p not in release)
+            fab = self._sub_fabric(job, kept)
+            t0, ready = self._lease_frame(kept, now)
+            instances.append(strawman_instance(fab, sub_pattern))
+            starts.append(t0 - now)
+            readies.append(ready)
+        result = batch_evaluate(instances, plane_ready=readies)
+        best_idx = 0
+        best_score = (
+            starts[0] + float(result.cct[0])
+            if bool(result.feasible[0])
+            else float("inf")
+        )
+        for c in range(1, len(candidates)):
+            if not bool(result.feasible[c]):
+                continue
+            score = starts[c] + float(result.cct[c])
+            if score < best_score - _EPS:
+                best_idx, best_score = c, score
+        return candidates[best_idx]
+
     def _apply_resize(self, job: _Job, now: float) -> None:
         self._cut_plan(job, now)
         # Absorb reserved grow planes first, then shrink to target.
@@ -458,11 +542,7 @@ class FabricArbiter:
         job.pending_planes = ()
         if job.target_planes < len(lease):
             n_release = len(lease) - max(job.target_planes, self.min_planes)
-            # Release the soonest-free planes (deterministic: ties by id).
-            by_free = sorted(
-                lease, key=lambda p: (self._plane_free_at[p], p)
-            )
-            for p in by_free[:n_release]:
+            for p in self._choose_release(job, lease, n_release, now):
                 lease.remove(p)
                 self._free.add(p)
         job.planes = tuple(sorted(lease))

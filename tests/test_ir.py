@@ -1,0 +1,326 @@
+"""Tests for the array schedule IR (`repro.core.ir`).
+
+The object path (``validate_object`` + ``execute``) is the oracle: the IR
+converters must be lossless, ``validate_ir`` must accept/reject exactly
+like the oracle on legal schedules and on randomized corruptions, and the
+IR evaluators must reproduce object-path CCTs to 1e-9.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    BatchInstance,
+    OpticalFabric,
+    batch_evaluate,
+    cct_of,
+    evaluate_decisions,
+    execute_ir,
+    from_ir,
+    get_pattern,
+    prestage_for,
+    strawman_decisions,
+    strawman_icr,
+    swot_greedy,
+    to_ir,
+    validate_ir,
+)
+from repro.core.greedy import swot_greedy_chain
+from repro.core.schedule import Kind, validate_object
+from repro.core.simulator import execute
+from repro.core.tolerances import EPS, EPS_VOLUME, REL_TOL, TOL
+
+
+@st.composite
+def _instances(draw):
+    alg = draw(
+        st.sampled_from(
+            ["rabenseifner_allreduce", "pairwise_alltoall", "bruck_alltoall"]
+        )
+    )
+    if alg == "rabenseifner_allreduce":
+        n = draw(st.sampled_from([2, 4, 8]))
+    else:
+        n = draw(st.integers(min_value=2, max_value=10))
+    size = draw(st.floats(min_value=1e5, max_value=2e8))
+    planes = draw(st.integers(min_value=1, max_value=4))
+    t_recfg = draw(st.sampled_from([0.0, 50e-6, 200e-6]))
+    prestaged = draw(st.booleans())
+    return alg, n, size, planes, t_recfg, prestaged
+
+
+def _build(inst, scheduler="greedy"):
+    alg, n, size, planes, t_recfg, prestaged = inst
+    pattern = get_pattern(alg, n, size)
+    fabric = OpticalFabric(n, planes, t_recfg=t_recfg)
+    if prestaged:
+        fabric = prestage_for(fabric, pattern)
+    if scheduler == "greedy":
+        schedule = swot_greedy_chain(fabric, pattern, polish=False)
+    else:
+        schedule = strawman_icr(fabric, pattern)
+    return fabric, pattern, schedule
+
+
+def _both_verdicts(schedule):
+    """(oracle_accepts, ir_accepts) for one schedule."""
+    try:
+        validate_object(schedule)
+        oracle = True
+    except ValueError:
+        oracle = False
+    try:
+        validate_ir(to_ir(schedule))
+        ir_ok = True
+    except ValueError:
+        ir_ok = False
+    return oracle, ir_ok
+
+
+class TestRoundTrip:
+    @settings(max_examples=30, deadline=None)
+    @given(_instances(), st.booleans())
+    def test_to_from_ir_lossless(self, inst, use_strawman):
+        _, _, schedule = _build(
+            inst, "strawman" if use_strawman else "greedy"
+        )
+        assert from_ir(to_ir(schedule)) == schedule
+
+    def test_ir_arrays_shape_and_order(self):
+        pattern = get_pattern("rabenseifner_allreduce", 8, 40e6)
+        fabric = prestage_for(OpticalFabric(8, 2), pattern)
+        schedule = strawman_icr(fabric, pattern)
+        ir = to_ir(schedule)
+        assert ir.n_activities == len(schedule.activities)
+        for i, a in enumerate(schedule.activities):
+            assert ir.t_start[i] == a.start and ir.t_end[i] == a.end
+            assert ir.plane_id[i] == a.plane
+        assert ir.step_volume.shape == (pattern.n_steps,)
+        assert ir.plane_bw.shape == (fabric.n_planes,)
+
+
+class TestValidateEquivalence:
+    @settings(max_examples=30, deadline=None)
+    @given(_instances())
+    def test_legal_schedules_accepted_by_both(self, inst):
+        _, _, schedule = _build(inst)
+        oracle, ir_ok = _both_verdicts(schedule)
+        assert oracle and ir_ok
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        _instances(),
+        st.integers(min_value=0, max_value=1 << 30),
+        st.sampled_from(
+            [
+                "inflate_volume",
+                "shrink_interval",
+                "wrong_config",
+                "negative_start",
+                "overlap",
+                "drop_activity",
+                "short_recfg",
+            ]
+        ),
+    )
+    def test_corruptions_judged_identically(self, inst, pick, mutation):
+        _, _, schedule = _build(inst)
+        acts = list(schedule.activities)
+        if not acts:
+            return
+        i = pick % len(acts)
+        a = acts[i]
+        if mutation == "inflate_volume":
+            if a.kind is not Kind.XMIT:
+                return
+            acts[i] = dataclasses.replace(a, volume=a.volume * 2 + 1.0)
+        elif mutation == "shrink_interval":
+            acts[i] = dataclasses.replace(
+                a, end=a.start + a.duration * 0.25
+            )
+        elif mutation == "wrong_config":
+            acts[i] = dataclasses.replace(a, config=a.config + 1)
+        elif mutation == "negative_start":
+            acts[i] = dataclasses.replace(a, start=-1e-3)
+        elif mutation == "overlap":
+            if i == 0:
+                return
+            prev = acts[i - 1]
+            acts[i] = dataclasses.replace(
+                a,
+                start=prev.start,
+                end=prev.start + a.duration,
+            )
+        elif mutation == "drop_activity":
+            del acts[i]
+        elif mutation == "short_recfg":
+            if a.kind is not Kind.RECFG or a.duration == 0.0:
+                return
+            acts[i] = dataclasses.replace(
+                a, end=a.start + a.duration * 0.5
+            )
+        mutated = dataclasses.replace(schedule, activities=tuple(acts))
+        oracle, ir_ok = _both_verdicts(mutated)
+        assert oracle == ir_ok, (
+            f"oracle={oracle} ir={ir_ok} for mutation={mutation}"
+        )
+
+
+class TestExecuteIR:
+    @settings(max_examples=30, deadline=None)
+    @given(_instances())
+    def test_cct_and_busy_match_object_path(self, inst):
+        fabric, _, schedule = _build(inst)
+        metrics = execute_ir(to_ir(schedule))
+        assert metrics.cct == pytest.approx(schedule.cct, abs=1e-9)
+        assert metrics.n_reconfigurations == schedule.total_reconfigurations
+        busy = [0.0] * fabric.n_planes
+        for a in schedule.activities:
+            busy[a.plane] += a.duration
+        np.testing.assert_allclose(metrics.plane_busy, busy, atol=1e-9)
+
+    @settings(max_examples=30, deadline=None)
+    @given(_instances())
+    def test_evaluate_decisions_bitwise_matches_execute(self, inst):
+        alg, n, size, planes, t_recfg, prestaged = inst
+        pattern = get_pattern(alg, n, size)
+        fabric = OpticalFabric(n, planes, t_recfg=t_recfg)
+        if prestaged:
+            fabric = prestage_for(fabric, pattern)
+        decisions = strawman_decisions(fabric, pattern)
+        obj = execute(fabric, pattern, decisions)
+        assert cct_of(fabric, pattern, decisions) == obj.cct
+        metrics = evaluate_decisions(fabric, pattern, decisions)
+        assert metrics.cct == obj.cct
+        assert metrics.n_reconfigurations == obj.total_reconfigurations
+
+
+class TestBatchEvaluate:
+    def test_matches_per_instance_object_path(self):
+        instances = []
+        for size in (1e6, 4e6, 16e6, 64e6):
+            for t_recfg in (0.0, 50e-6, 200e-6, 800e-6):
+                for planes in (1, 2, 4, 8):
+                    pattern = get_pattern("rabenseifner_allreduce", 8, size)
+                    fabric = prestage_for(
+                        OpticalFabric(8, planes, t_recfg=t_recfg), pattern
+                    )
+                    instances.append(
+                        BatchInstance(
+                            fabric,
+                            pattern,
+                            strawman_decisions(fabric, pattern),
+                        )
+                    )
+        result = batch_evaluate(instances)
+        assert len(result) == len(instances)
+        for k, inst in enumerate(instances):
+            obj = execute(inst.fabric, inst.pattern, inst.decisions)
+            assert result.cct[k] == pytest.approx(obj.cct, abs=1e-9)
+            assert (
+                result.n_reconfigurations[k] == obj.total_reconfigurations
+            )
+            assert bool(result.feasible[k])
+
+    def test_empty_batch(self):
+        result = batch_evaluate([])
+        assert len(result) == 0
+
+    def test_idle_split_on_unknown_plane_ignored_like_object_path(self):
+        """The object executor filters sub-EPS_VOLUME entries before the
+        plane-range check; the IR pack must accept/reject identically."""
+        pattern = get_pattern("ring_allreduce", 8, 10e6)
+        fabric = prestage_for(OpticalFabric(8, 2), pattern)
+        base = strawman_decisions(fabric, pattern)
+        idle = dataclasses.replace(
+            base,
+            splits=({**base.splits[0], 7: EPS_VOLUME / 2},)
+            + base.splits[1:],
+        )
+        obj = execute(fabric, pattern, idle)
+        assert cct_of(fabric, pattern, idle) == obj.cct
+        hot = dataclasses.replace(
+            base,
+            splits=({**base.splits[0], 7: 1.0},) + base.splits[1:],
+        )
+        with pytest.raises(ValueError):
+            execute(fabric, pattern, hot)
+        with pytest.raises(ValueError):
+            cct_of(fabric, pattern, hot)
+
+    def test_nonconserving_splits_rejected_like_object_path(self):
+        pattern = get_pattern("ring_allreduce", 8, 10e6)
+        fabric = prestage_for(OpticalFabric(8, 2), pattern)
+        base = strawman_decisions(fabric, pattern)
+        short = dataclasses.replace(
+            base,
+            splits=({j: v / 2 for j, v in base.splits[0].items()},)
+            + base.splits[1:],
+        )
+        with pytest.raises(ValueError):
+            execute(fabric, pattern, short)
+        with pytest.raises(ValueError):
+            cct_of(fabric, pattern, short)
+        assert not bool(
+            batch_evaluate([BatchInstance(fabric, pattern, short)]).volume_ok[0]
+        )
+
+    def test_negative_plane_ready_rejected_like_object_path(self):
+        pattern = get_pattern("ring_allreduce", 8, 10e6)
+        fabric = prestage_for(OpticalFabric(8, 2), pattern)
+        decisions = strawman_decisions(fabric, pattern)
+        with pytest.raises(ValueError):
+            execute(fabric, pattern, decisions, plane_ready=(-1e-3, 0.0))
+        with pytest.raises(ValueError):
+            cct_of(fabric, pattern, decisions, plane_ready=(-1e-3, 0.0))
+
+    def test_plane_ready_offsets_delay_starts(self):
+        pattern = get_pattern("rabenseifner_allreduce", 8, 10e6)
+        fabric = prestage_for(OpticalFabric(8, 2), pattern)
+        decisions = strawman_decisions(fabric, pattern)
+        ready = (0.0, 300e-6)
+        delayed = execute(fabric, pattern, decisions, plane_ready=ready)
+        delayed.validate()
+        for a in delayed.activities:
+            assert a.start >= ready[a.plane] - TOL
+        assert delayed.cct > execute(fabric, pattern, decisions).cct
+        via_ir = evaluate_decisions(
+            fabric, pattern, decisions, plane_ready=ready
+        )
+        assert via_ir.cct == delayed.cct
+
+
+class TestGreedyPlaneReady:
+    def test_greedy_respects_ready_offsets(self):
+        pattern = get_pattern("pairwise_alltoall", 8, 8e6)
+        fabric = prestage_for(OpticalFabric(8, 4), pattern)
+        ready = (0.0, 100e-6, 200e-6, 400e-6)
+        schedule = swot_greedy(fabric, pattern, plane_ready=ready)
+        schedule.validate()
+        for a in schedule.activities:
+            assert a.start >= ready[a.plane] - TOL
+
+    def test_staggered_ready_beats_max_shift(self):
+        """Per-plane ready planning must finish no later than planning
+        as if every plane freed at the latest offset (the pre-refactor
+        arbiter behavior)."""
+        pattern = get_pattern("rabenseifner_allreduce", 8, 20e6)
+        fabric = prestage_for(OpticalFabric(8, 4), pattern)
+        ready = (0.0, 0.0, 0.0, 600e-6)
+        staggered = swot_greedy(fabric, pattern, plane_ready=ready)
+        max_shift = max(ready) + swot_greedy(fabric, pattern).cct
+        assert staggered.cct <= max_shift * (1 + 1e-9)
+
+
+class TestToleranceSingleSource:
+    def test_modules_share_constants(self):
+        from repro.core import greedy, schedule, simulator
+
+        assert schedule._TOL is TOL or schedule._TOL == TOL
+        assert schedule._REL_TOL == REL_TOL
+        assert simulator._EPS_VOLUME == EPS_VOLUME
+        assert greedy._EPS == EPS
