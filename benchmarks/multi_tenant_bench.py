@@ -67,7 +67,8 @@ def run(quick: bool = False) -> list[tuple[str, float, str]]:
         ]
         rate, horizon = 30.0, 0.5
     # Whole-sweep lockstep-ICR reference: every (cell, collective
-    # signature) pair becomes one row of a single batched IR evaluation.
+    # signature) pair becomes one row of a single batched IR evaluation
+    # (timing backend follows REPRO_IR_BACKEND, like every IR sweep).
     ref_keys: list[tuple[int, tuple]] = []
     ref_instances: list[BatchInstance] = []
     for idx, (n_tenants, n_planes, t_recfg) in enumerate(cells):

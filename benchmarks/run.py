@@ -28,6 +28,13 @@ so neither ever clobbers the tracked file.  The committed flavor is the
 ``--quick`` output (the cell CI runs every PR) — regenerate it with
 ``PYTHONPATH=src:. python benchmarks/run.py --quick`` when benchmarks
 change.
+
+Unfiltered runs additionally write the IR timing-backend throughput
+comparison (numpy vs jax vs pallas-interpret on the large ``ir_sweep``
+grid, including the >= 2x jax-vs-numpy acceptance gate):
+``BENCH_backends.json`` for ``--quick`` (the tracked, CI-comparable
+flavor) and ``BENCH_backends_full.json`` otherwise, so backend speedups
+are tracked across PRs alongside the sweep numbers.
 """
 
 import json
@@ -90,6 +97,26 @@ def main() -> None:
             )
     if only:
         return  # partial run: don't clobber the tracked sweep file
+    # Backend throughput comparison (and the jax >= 2x gate) on the
+    # large grid; its own JSON so the trajectory file stays diffable.
+    # Same no-clobber policy as the sweep file: the tracked name holds
+    # the CI-comparable --quick flavor, full runs land in a sibling.
+    backends_payload = ir_sweep.backend_throughput(quick=quick)
+    for name, entry in backends_payload["backends"].items():
+        note = (
+            "unavailable"
+            if "ms" not in entry
+            else f"total={entry['ms']:.1f}ms "
+            f"speedup={entry['speedup_vs_numpy']}x"
+        )
+        us = entry.get("us_per_instance", 0.0)
+        print(f"ir_backend_{name},{us:.1f},{note}", flush=True)
+    backends_name = (
+        "BENCH_backends.json" if quick else "BENCH_backends_full.json"
+    )
+    (_REPO_ROOT / backends_name).write_text(
+        json.dumps(backends_payload, indent=1) + "\n"
+    )
     payload = {
         "quick": quick,
         "module_wall_clock_s": {

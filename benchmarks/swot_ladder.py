@@ -10,8 +10,6 @@ x 4 optical planes (TPU-calibrated: 50 GB/s links, 200 us reconfig):
 CCT per iteration; the EXPERIMENTS.md Perf log quotes this table.
 """
 
-import jax
-
 from repro.configs.base import shape_cell
 from repro.configs.registry import get_config
 from repro.core import (
@@ -55,7 +53,8 @@ def run() -> list[tuple[str, float, str]]:
             )
             cells.append((req, planes, fabric, pattern))
 
-    # Every cell's strawman baseline in ONE batched IR pass.
+    # Every cell's strawman baseline in ONE batched IR pass (the timing
+    # backend follows REPRO_IR_BACKEND: numpy default, jax/pallas opt-in).
     straw_ccts = batch_evaluate(
         [
             strawman_instance(fabric, pattern)

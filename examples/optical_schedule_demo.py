@@ -6,12 +6,13 @@ all-reduces, EP all-to-alls), schedules each on the optical fabric with
 SWOT, and prints the timelines + per-iteration optical report --
 the paper's Phase 1/Phase 2 flow end to end.  Closes with a batched
 what-if sweep over reconfiguration latencies through the array IR
-(`repro.core.batch_evaluate`).
+(`repro.core.batch_evaluate`) on a selectable timing backend.
 
-    PYTHONPATH=src python examples/optical_schedule_demo.py
+    PYTHONPATH=src python examples/optical_schedule_demo.py \
+        [--backend numpy|jax|pallas]
 """
 
-import jax
+import argparse
 
 from repro.configs.base import shape_cell
 from repro.configs.registry import get_config
@@ -28,6 +29,15 @@ from repro.sharding.rules import MeshContext, abstract_mesh_compat
 
 
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--backend",
+        choices=("numpy", "jax", "pallas"),
+        default=None,
+        help="IR timing backend for the what-if sweep "
+        "(default: REPRO_IR_BACKEND env, else numpy)",
+    )
+    args = parser.parse_args()
     cfg = get_config("qwen2_moe_a2_7b")
     # AbstractMesh: the planner only needs mesh *shapes*; no devices.
     mesh = abstract_mesh_compat((16, 16), ("data", "model"))
@@ -80,8 +90,11 @@ def main() -> None:
         for plan in shim.plans
         for t_recfg in recfgs
     ]
-    ccts = batch_evaluate(cells).cct
-    print(f"strawman CCT vs t_recfg ({len(cells)} cells, one IR pass):")
+    ccts = batch_evaluate(cells, backend=args.backend).cct
+    print(
+        f"strawman CCT vs t_recfg ({len(cells)} cells, one IR pass, "
+        f"backend={args.backend or 'default'}):"
+    )
     k = 0
     for plan in shim.plans:
         points = "  ".join(

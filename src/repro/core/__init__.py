@@ -29,16 +29,20 @@ from repro.core.fabric import (
     TPU_V5E_LINK_BANDWIDTH,
     OpticalFabric,
 )
-from repro.core.greedy import swot_greedy
+from repro.core.greedy import GridPlan, swot_greedy, swot_greedy_grid
 from repro.core.ir import (
+    BackendUnavailable,
     BatchInstance,
     BatchResult,
     IRMetrics,
     ScheduleIR,
+    TimingBackend,
+    available_backends,
     batch_evaluate,
     evaluate_decisions,
     execute_ir,
     from_ir,
+    get_backend,
     to_ir,
     validate_ir,
 )
@@ -62,18 +66,27 @@ from repro.core.schedule import (
     PlaneActivity,
     Schedule,
 )
-from repro.core.scheduler import SwotPlan, plan_collective, swot_schedule
+from repro.core.scheduler import (
+    GridCellPlan,
+    SwotPlan,
+    plan_collective,
+    plan_grid,
+    swot_schedule,
+)
 from repro.core.shim import CollectiveRequest, OpticalController, SwotShim
 from repro.core.simulator import cct_of, execute
 
 __all__ = [
     "ALGORITHMS",
+    "BackendUnavailable",
     "BatchInstance",
     "BatchResult",
     "CollectiveRequest",
     "Decisions",
     "DependencyMode",
     "FIG5_LINK_BANDWIDTH",
+    "GridCellPlan",
+    "GridPlan",
     "IRMetrics",
     "InfeasibleError",
     "Kind",
@@ -90,7 +103,9 @@ __all__ = [
     "SwotPlan",
     "SwotShim",
     "TPU_V5E_LINK_BANDWIDTH",
+    "TimingBackend",
     "all_gather",
+    "available_backends",
     "batch_evaluate",
     "bruck_alltoall",
     "cct_of",
@@ -98,6 +113,7 @@ __all__ = [
     "execute",
     "execute_ir",
     "from_ir",
+    "get_backend",
     "get_pattern",
     "ideal_cct",
     "one_shot",
@@ -105,6 +121,7 @@ __all__ = [
     "one_shot_cct",
     "pairwise_alltoall",
     "plan_collective",
+    "plan_grid",
     "prestage_for",
     "rabenseifner_allreduce",
     "reduce_scatter",
@@ -115,6 +132,7 @@ __all__ = [
     "strawman_icr",
     "strawman_instance",
     "swot_greedy",
+    "swot_greedy_grid",
     "swot_schedule",
     "to_ir",
     "validate_ir",

@@ -30,12 +30,20 @@ dependency, e.g. pairwise all-to-all):
 Both entry points accept ``plane_ready`` -- per-plane earliest activity
 times -- so the runtime arbiter can re-plan a job onto planes that free at
 different instants instead of waiting for the latest one.
+
+``swot_greedy_grid`` batches the CHAIN greedy across sweep *instances*:
+a whole grid of (fabric, pattern, t_recfg) cells advances through the
+per-step loop together, every cell's candidate reserve sets stacked into
+one (rows x planes) state batch, so each step costs ONE ``waterfill_batch``
+and ONE rollout call for the entire grid -- and the final decisions are
+scored in one ``batch_evaluate`` pass on the selected IR backend.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
 
 import numpy as np
 
@@ -43,6 +51,8 @@ from repro.core.fabric import OpticalFabric
 from repro.core.ir import (
     NO_CONFIG,
     _BIG,
+    BatchInstance,
+    batch_evaluate,
     fabric_arrays,
     rollout_batch,
     waterfill_batch,
@@ -51,6 +61,9 @@ from repro.core.patterns import Pattern
 from repro.core.schedule import Decisions, DependencyMode, Schedule
 from repro.core.simulator import execute
 from repro.core.tolerances import EPS as _EPS
+
+if TYPE_CHECKING:
+    from repro.core.ir.backends import TimingBackend
 
 
 def _upcoming_targets(
@@ -81,13 +94,66 @@ def _initial_state(
     return bw, config.copy(), free
 
 
+def _reserve_candidates(
+    pattern: Pattern,
+    step_idx: int,
+    n_planes: int,
+    config: np.ndarray,
+    free: np.ndarray,
+    t_recfg: float,
+    max_enumerated_planes: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Candidate reserve-set states for one instance at one step.
+
+    Returns ``(trial_cfg, trial_free, reserved_mask, valid)``, all with a
+    leading candidate dimension.  Reserved planes are retargeted toward
+    upcoming configs (soonest-free first).  The single source of the
+    candidate policy: both the per-instance chain greedy and the
+    instance-batched grid call this, which is what keeps their bitwise
+    parity contract edit-proof.  ``config``/``free`` may be wider than
+    ``n_planes`` (the grid path's padded rows); enumeration and
+    retargeting only touch real planes, and padded entries hold
+    ``NO_CONFIG`` so the held-set construction ignores them.
+    """
+    step_config = pattern.steps[step_idx].config
+    if n_planes <= max_enumerated_planes:
+        reserve_sets = [
+            set(c)
+            for size in range(n_planes)
+            for c in itertools.combinations(range(n_planes), size)
+        ]
+    else:
+        by_free = sorted(range(n_planes), key=lambda j: free[j])
+        reserve_sets = [set(by_free[:size]) for size in range(4)]
+    n_cand = len(reserve_sets)
+    trial_cfg = np.repeat(config[None, :], n_cand, axis=0)
+    trial_free = np.repeat(free[None, :], n_cand, axis=0)
+    reserved_mask = np.zeros((n_cand, config.shape[0]), dtype=bool)
+    valid = np.ones(n_cand, dtype=bool)
+    for c_idx, reserved in enumerate(reserve_sets):
+        if len(reserved) == n_planes:
+            valid[c_idx] = False
+            continue
+        held = {int(c) for c in trial_cfg[c_idx] if c != NO_CONFIG}
+        held.add(step_config)
+        targets = _upcoming_targets(
+            pattern, step_idx + 1, held, len(reserved)
+        )
+        by_free_r = sorted(reserved, key=lambda j: trial_free[c_idx, j])
+        for j, cfg_t in zip(by_free_r, targets):
+            trial_free[c_idx, j] += t_recfg
+            trial_cfg[c_idx, j] = cfg_t
+        if reserved:
+            reserved_mask[c_idx, sorted(reserved)] = True
+    return trial_cfg, trial_free, reserved_mask, valid
+
+
 def has_ready_offsets(plane_ready: Sequence[float] | None) -> bool:
     """True when any plane carries a positive ready-time offset.
 
-    The shared predicate for the two decisions staggered leases force:
-    `repro.core.scheduler.swot_schedule` bypasses the MILP (it cannot
-    model ready offsets) and this module skips ``lp_polish`` (it assumes
-    all planes free at t=0).
+    Since the MILP learned per-plane ready anchoring, the only decision
+    left on this predicate is gating the LP-hungry structure local search
+    (hundreds of LP solves) out of the arbiter's staggered-lease re-plans.
     """
     return plane_ready is not None and any(r > 0.0 for r in plane_ready)
 
@@ -110,38 +176,14 @@ def swot_greedy_chain(
     splits: list[dict[int, float]] = []
 
     for i, step in enumerate(pattern.steps):
-        # Candidate reserve sets.  Reserved planes skip this step and
-        # reconfigure toward upcoming configs instead.
-        if n_planes <= max_enumerated_planes:
-            reserve_sets = [
-                set(c)
-                for size in range(n_planes)
-                for c in itertools.combinations(range(n_planes), size)
-            ]
-        else:
-            by_free = sorted(range(n_planes), key=lambda j: free[j])
-            reserve_sets = [set(by_free[:size]) for size in range(4)]
-
-        # One state row per candidate; reserved planes are retargeted to
-        # upcoming configs, then excluded from this step's water-fill.
-        n_cand = len(reserve_sets)
-        trial_cfg = np.repeat(config[None, :], n_cand, axis=0)
-        trial_free = np.repeat(free[None, :], n_cand, axis=0)
-        reserved_mask = np.zeros((n_cand, n_planes), dtype=bool)
-        valid = np.ones(n_cand, dtype=bool)
-        for c_idx, reserved in enumerate(reserve_sets):
-            if len(reserved) == n_planes:
-                valid[c_idx] = False
-                continue
-            held = {int(c) for c in trial_cfg[c_idx] if c != NO_CONFIG}
-            held.add(step.config)
-            targets = _upcoming_targets(pattern, i + 1, held, len(reserved))
-            by_free = sorted(reserved, key=lambda j: trial_free[c_idx, j])
-            for j, cfg_t in zip(by_free, targets):
-                trial_free[c_idx, j] += t_recfg
-                trial_cfg[c_idx, j] = cfg_t
-            if reserved:
-                reserved_mask[c_idx, sorted(reserved)] = True
+        # Candidate reserve sets: reserved planes skip this step and
+        # reconfigure toward upcoming configs instead, then are excluded
+        # from this step's water-fill (one state row per candidate).
+        trial_cfg, trial_free, reserved_mask, valid = _reserve_candidates(
+            pattern, i, n_planes, config, free, t_recfg,
+            max_enumerated_planes,
+        )
+        n_cand = trial_cfg.shape[0]
 
         extra = np.where(trial_cfg == step.config, 0.0, t_recfg)
         ready = np.maximum(barrier, trial_free + extra)
@@ -187,13 +229,15 @@ def swot_greedy_chain(
     schedule = execute(
         fabric, pattern, Decisions(tuple(splits)), plane_ready=plane_ready
     )
-    # LP polish assumes all planes free at t=0; skip it when re-planning
-    # with staggered ready times (the arbiter's case).
-    if polish and not has_ready_offsets(plane_ready):
+    # The fixed-structure LP anchors plane chains at their ready offsets,
+    # so polish applies to staggered-lease re-plans too; the (much more
+    # LP-hungry) structure local search stays gated to fresh fabrics.
+    if polish:
         from repro.core.milp import lp_polish
 
-        schedule = lp_polish(schedule)
-        schedule = _structure_local_search(fabric, pattern, schedule)
+        schedule = lp_polish(schedule, plane_ready=plane_ready)
+        if not has_ready_offsets(plane_ready):
+            schedule = _structure_local_search(fabric, pattern, schedule)
     return schedule
 
 
@@ -268,10 +312,10 @@ def swot_greedy_independent(
         Decisions(tuple(splits), mode=DependencyMode.INDEPENDENT),
         plane_ready=plane_ready,
     )
-    if polish and not has_ready_offsets(plane_ready):
+    if polish:
         from repro.core.milp import lp_polish
 
-        schedule = lp_polish(schedule)
+        schedule = lp_polish(schedule, plane_ready=plane_ready)
     return schedule
 
 
@@ -289,3 +333,246 @@ def swot_greedy(
     indep = swot_greedy_independent(fabric, pattern, plane_ready=plane_ready)
     chain = swot_greedy_chain(fabric, pattern, plane_ready=plane_ready)
     return chain if chain.cct < indep.cct else indep
+
+
+# ---------------------------------------------------------------------------
+# Instance-batched greedy: plan a whole sweep grid in one batched pass
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GridPlan:
+    """One cell's outcome from ``swot_greedy_grid``."""
+
+    fabric: OpticalFabric
+    pattern: Pattern
+    decisions: Decisions
+    cct: float
+    n_reconfigurations: int
+    utilization: float
+
+    def schedule(self) -> Schedule:
+        """Materialize the activity-object schedule (validated)."""
+        return execute(self.fabric, self.pattern, self.decisions)
+
+
+class _GridState:
+    """Packed per-instance planner state for the batched CHAIN greedy."""
+
+    def __init__(self, cells: Sequence[tuple[OpticalFabric, Pattern]]):
+        b = len(cells)
+        self.cells = list(cells)
+        self.n_p = np.array(
+            [f.n_planes for f, _ in cells], dtype=np.int64
+        )
+        self.n_s = np.array(
+            [p.n_steps for _, p in cells], dtype=np.int64
+        )
+        p_max = int(self.n_p.max())
+        s_max = int(self.n_s.max())
+        self.p_max, self.s_max = p_max, s_max
+        self.bw = np.ones((b, p_max))
+        self.config = np.full((b, p_max), NO_CONFIG, dtype=np.int64)
+        self.free = np.zeros((b, p_max))
+        self.barrier = np.zeros(b)
+        self.real = np.zeros((b, p_max), dtype=bool)
+        self.step_cfg = np.full((b, s_max), NO_CONFIG, dtype=np.int64)
+        self.step_vol = np.zeros((b, s_max))
+        self.t_recfg = np.zeros(b)
+        for bi, (fabric, pattern) in enumerate(cells):
+            n_p, n_s = fabric.n_planes, pattern.n_steps
+            bw, init = fabric_arrays(fabric)
+            self.bw[bi, :n_p] = bw
+            self.config[bi, :n_p] = init
+            self.real[bi, :n_p] = True
+            self.step_cfg[bi, :n_s] = pattern.configs
+            self.step_vol[bi, :n_s] = pattern.volumes
+            self.t_recfg[bi] = fabric.t_recfg
+        # Tail lower-bound tables (same summation order as rollout_batch:
+        # a direct np.sum over the suffix slice, per start offset).
+        self.bw_sum = np.array(
+            [self.bw[bi, : self.n_p[bi]].sum() for bi in range(b)]
+        )
+        self.suffix_vol = np.zeros((b, s_max + 1))
+        self.suffix_changes = np.zeros((b, s_max + 1), dtype=np.int64)
+        for bi in range(b):
+            n_s = int(self.n_s[bi])
+            for k in range(n_s):
+                # Per-offset direct np.sum: load-bearing for float-order
+                # parity with rollout_batch's tail_volume computation.
+                self.suffix_vol[bi, k] = self.step_vol[bi, k:n_s].sum()
+            if n_s > 1:
+                # suffix_changes[k] counts adjacent config changes in
+                # steps k..n_s-1; integer-exact, so a reverse cumsum is
+                # bitwise-identical to the O(S^2) counting loop.
+                changes = (
+                    self.step_cfg[bi, 1:n_s] != self.step_cfg[bi, : n_s - 1]
+                ).astype(np.int64)
+                self.suffix_changes[bi, : n_s - 1] = np.cumsum(
+                    changes[::-1]
+                )[::-1]
+
+
+def _rollout_rows(
+    st: _GridState,
+    inst: np.ndarray,  # (R,) row -> instance index
+    cfg: np.ndarray,  # (R, P_max)
+    free: np.ndarray,  # (R, P_max)
+    barrier: np.ndarray,  # (R,)
+    start_step: int,
+    horizon: int,
+) -> np.ndarray:
+    """Row-batched twin of ``rollout_batch`` with per-row step tables.
+
+    Rows belonging to different grid cells roll out their own remaining
+    steps (masked once a row's pattern runs out); the arithmetic per row
+    matches the per-instance ``rollout_batch`` operation for operation, so
+    scores -- and therefore candidate selections -- are bitwise identical.
+    """
+    cfg = cfg.copy()
+    free = free.copy()
+    barrier = barrier.copy()
+    bw_rows = st.bw[inst]
+    real_rows = st.real[inst]
+    t_rows = st.t_recfg[inst][:, None]
+    end_step = np.minimum(st.n_s[inst], start_step + horizon)
+    stop = int(min(st.s_max, start_step + horizon))
+    for k in range(start_step, stop):
+        live = k < st.n_s[inst]
+        if not live.any():
+            break
+        cfg_k = st.step_cfg[inst, k][:, None]
+        vol_k = np.where(live, st.step_vol[inst, k], 0.0)
+        extra = np.where(cfg == cfg_k, 0.0, t_rows)
+        ready = np.maximum(barrier[:, None], free + extra)
+        ready = np.where(real_rows, ready, _BIG)
+        level, split = waterfill_batch(ready, bw_rows, vol_k)
+        active = (split > 0.0) & live[:, None]
+        free = np.where(active, level[:, None], free)
+        cfg = np.where(active, cfg_k, cfg)
+        barrier = np.where(live, level, barrier)
+    # Aggregate-bandwidth tail past the horizon (two separate additions,
+    # matching rollout_batch's float evaluation order).
+    has_tail = end_step < st.n_s[inst]
+    tail_vol = st.suffix_vol[inst, end_step] / st.bw_sum[inst]
+    barrier = np.where(has_tail, barrier + tail_vol, barrier)
+    tail_rec = (
+        st.suffix_changes[inst, end_step] * st.t_recfg[inst] / st.n_p[inst]
+    )
+    return np.where(has_tail, barrier + tail_rec, barrier)
+
+
+def swot_greedy_grid(
+    cells: Sequence[tuple[OpticalFabric, Pattern]],
+    rollout_horizon: int = 24,
+    max_enumerated_planes: int = 8,
+    backend: "str | TimingBackend | None" = None,
+) -> list[GridPlan]:
+    """Plan a whole grid of (fabric, pattern) cells in one batched pass.
+
+    The instance-batched CHAIN greedy: every cell advances through the
+    per-step loop together, and each step's candidate reserve sets across
+    ALL cells are scored with one ``waterfill_batch`` + one row-batched
+    rollout call.  Per-cell decisions are bitwise identical to
+    ``swot_greedy_chain(..., polish=False)`` (property-tested); the final
+    CCT/utilization scoring runs through ``batch_evaluate`` on the chosen
+    IR backend (``None`` = the ``REPRO_IR_BACKEND``/numpy default).
+
+    LP polish is deliberately per-instance-only (it solves one LP per
+    cell), so the grid path trades it away for throughput; sweeps that
+    need polished cells can re-run the winners through ``swot_greedy``.
+    """
+    if not cells:
+        return []
+    st = _GridState(cells)
+    b = len(st.cells)
+    splits: list[list[dict[int, float]]] = [[] for _ in range(b)]
+
+    for i in range(st.s_max):
+        live_insts = [bi for bi in range(b) if i < st.n_s[bi]]
+        if not live_insts:
+            break
+        row_inst: list[int] = []
+        row_trial_cfg: list[np.ndarray] = []
+        row_trial_free: list[np.ndarray] = []
+        row_reserved: list[np.ndarray] = []
+        row_valid: list[np.ndarray] = []
+        cand_slices: dict[int, slice] = {}
+        offset = 0
+        for bi in live_insts:
+            _, pattern = st.cells[bi]
+            trial_cfg, trial_free, reserved_mask, valid = (
+                _reserve_candidates(
+                    pattern, i, int(st.n_p[bi]), st.config[bi],
+                    st.free[bi], float(st.t_recfg[bi]),
+                    max_enumerated_planes,
+                )
+            )
+            n_cand = trial_cfg.shape[0]
+            row_inst.extend([bi] * n_cand)
+            row_trial_cfg.append(trial_cfg)
+            row_trial_free.append(trial_free)
+            row_reserved.append(reserved_mask)
+            row_valid.append(valid)
+            cand_slices[bi] = slice(offset, offset + n_cand)
+            offset += n_cand
+
+        inst = np.asarray(row_inst, dtype=np.int64)
+        trial_cfg = np.concatenate(row_trial_cfg, axis=0)
+        trial_free = np.concatenate(row_trial_free, axis=0)
+        reserved_mask = np.concatenate(row_reserved, axis=0)
+        valid = np.concatenate(row_valid, axis=0)
+        cfg_i = st.step_cfg[inst, i][:, None]
+        vol_i = st.step_vol[inst, i]
+        extra = np.where(trial_cfg == cfg_i, 0.0, st.t_recfg[inst][:, None])
+        ready = np.maximum(st.barrier[inst][:, None], trial_free + extra)
+        ready = np.where(reserved_mask | ~st.real[inst], _BIG, ready)
+        level, split = waterfill_batch(ready, st.bw[inst], vol_i)
+        valid &= (vol_i <= _EPS) | (split > 0.0).any(axis=1)
+        active = split > 0.0
+        new_free = np.where(active, level[:, None], trial_free)
+        new_cfg = np.where(active, cfg_i, trial_cfg)
+        scores = _rollout_rows(
+            st, inst, new_cfg, new_free, level, i + 1, rollout_horizon
+        )
+        scores = np.where(valid, scores, np.inf)
+        level_key = np.where(valid, level, np.inf)
+        for bi in live_insts:
+            sl = cand_slices[bi]
+            n_cand = sl.stop - sl.start
+            assert np.any(valid[sl]), "no feasible reserve set"
+            best = sl.start + int(
+                np.lexsort(
+                    (np.arange(n_cand), level_key[sl], scores[sl])
+                )[0]
+            )
+            st.config[bi] = new_cfg[best]
+            st.free[bi] = new_free[best]
+            st.barrier[bi] = float(level[best])
+            splits[bi].append(
+                {
+                    j: float(split[best, j])
+                    for j in range(int(st.n_p[bi]))
+                    if split[best, j] > 0.0
+                }
+            )
+
+    decisions = [Decisions(tuple(s)) for s in splits]
+    result = batch_evaluate(
+        [
+            BatchInstance(fabric, pattern, dec)
+            for (fabric, pattern), dec in zip(st.cells, decisions)
+        ],
+        backend=backend,
+    )
+    return [
+        GridPlan(
+            fabric=fabric,
+            pattern=pattern,
+            decisions=dec,
+            cct=float(result.cct[bi]),
+            n_reconfigurations=int(result.n_reconfigurations[bi]),
+            utilization=float(result.utilization[bi]),
+        )
+        for bi, ((fabric, pattern), dec) in enumerate(
+            zip(st.cells, decisions)
+        )
+    ]

@@ -1,0 +1,412 @@
+"""Pluggable timing backends for the batched schedule-IR sweep engine.
+
+``batch_evaluate`` packs a batch of (fabric, pattern, decisions) cells
+into flat padded arrays (`repro.core.ir.engine.pack_instances`); a
+*timing backend* consumes that packed dict and runs the per-step timing
+recurrence -- the max-plus update
+
+    start   = max(step barrier, plane free)        (CHAIN mode)
+    end     = start + volume / bandwidth
+    barrier = max over active planes of end
+
+with lazy per-plane reconfiguration -- across the whole batch.  Three
+implementations share one parity contract (CCTs equal to the object-path
+oracle within `repro.core.tolerances`):
+
+* ``numpy``  -- the reference: one Python loop turn per step, vectorized
+  over (batch, planes).  Deterministic, dependency-free, the default.
+* ``jax``    -- the same recurrence as a ``jax.lax.scan`` over steps,
+  ``jit``-compiled over the padded batch.  Inputs are padded to
+  power-of-two *buckets* (batch, steps, planes) so the number of
+  distinct compiled programs stays O(log^3) of the largest sweep, not
+  one per sweep shape.  Runs in float64 via a scoped ``enable_x64``.
+* ``pallas`` -- the recurrence lowered as a *blocked scan* kernel
+  (`repro.kernels.timing_scan`): the grid blocks the batch dimension,
+  each program carries the (block, planes) plane state through a
+  ``fori_loop`` over steps.  On CPU it runs in interpret mode (the
+  tier-1 suite exercises it); on TPU set ``REPRO_PALLAS_INTERPRET=0``.
+
+Select a backend per call (``batch_evaluate(..., backend="jax")``) or
+process-wide with the ``REPRO_IR_BACKEND`` env var; unset means numpy so
+results stay deterministic unless an accelerator path is asked for.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable
+
+import numpy as np
+
+from repro.core.ir.engine import (
+    BatchResult,
+    finalize_result,
+)
+from repro.core.tolerances import EPS_VOLUME, REL_TOL, TOL
+
+ENV_BACKEND = "REPRO_IR_BACKEND"
+ENV_PALLAS_INTERPRET = "REPRO_PALLAS_INTERPRET"
+
+
+class BackendUnavailable(RuntimeError):
+    """The requested backend's dependencies are missing on this host."""
+
+
+class TimingBackend:
+    """One implementation of the batched per-step timing recurrence."""
+
+    name: str = "abstract"
+
+    def derive_timing(self, packed: dict[str, np.ndarray]) -> BatchResult:
+        raise NotImplementedError
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n (static-shape bucketing for jit caches)."""
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+def pad_packed(
+    packed: dict[str, np.ndarray], b_pad: int, s_pad: int, p_pad: int
+) -> dict[str, np.ndarray]:
+    """Pad a packed batch to ``(b_pad, s_pad, p_pad)`` bucket shapes.
+
+    Padded batch rows / steps / planes carry zero volume and False masks,
+    so the recurrence leaves them inert; padded bandwidth is 1.0 (never
+    used, but keeps ``volume / bw`` NaN-free).
+    """
+    b, s, p = packed["vol"].shape
+    if (b, s, p) == (b_pad, s_pad, p_pad):
+        return packed
+    from repro.core.ir.engine import NO_CONFIG
+
+    out: dict[str, np.ndarray] = {}
+    fill = {
+        "vol": 0.0,
+        "step_vol": 0.0,
+        "step_cfg": NO_CONFIG,
+        "step_mask": False,
+        "plane_mask": False,
+        "bw": 1.0,
+        "init": NO_CONFIG,
+        "t_recfg": 0.0,
+        "chain": False,
+        "ready": 0.0,
+    }
+    tgt_shape = {
+        "vol": (b_pad, s_pad, p_pad),
+        "step_vol": (b_pad, s_pad),
+        "step_cfg": (b_pad, s_pad),
+        "step_mask": (b_pad, s_pad),
+        "plane_mask": (b_pad, p_pad),
+        "bw": (b_pad, p_pad),
+        "init": (b_pad, p_pad),
+        "t_recfg": (b_pad,),
+        "chain": (b_pad,),
+        "ready": (b_pad, p_pad),
+    }
+    for key, arr in packed.items():
+        padded = np.full(tgt_shape[key], fill[key], dtype=arr.dtype)
+        padded[tuple(slice(0, d) for d in arr.shape)] = arr
+        out[key] = padded
+    return out
+
+
+# ---------------------------------------------------------------------------
+# NumPy reference backend
+# ---------------------------------------------------------------------------
+def _timing_numpy(p: dict[str, np.ndarray]) -> BatchResult:
+    """Earliest-start timing over the packed batch, one step per loop turn.
+
+    Per-plane update order matches the object executor exactly (reconfigure
+    lazily at plane-free, transmit at ``max(barrier, free)`` in CHAIN mode
+    or plane-free in INDEPENDENT mode), so per-instance CCTs are bitwise
+    identical to ``repro.core.simulator.execute``.
+    """
+    b, s_max, _ = p["vol"].shape
+    free = p["ready"].copy()
+    held = p["init"].copy()
+    barrier = np.zeros(b)
+    cct = np.zeros(b)
+    busy = np.zeros_like(free)
+    n_recfg = np.zeros(b, dtype=np.int64)
+    feasible = np.ones(b, dtype=bool)
+    volume_ok = np.ones(b, dtype=bool)
+    t_recfg = p["t_recfg"][:, None]
+    chain = p["chain"][:, None]
+    for i in range(s_max):
+        v = p["vol"][:, i, :]
+        live = p["step_mask"][:, i]
+        active = (v > EPS_VOLUME) & p["plane_mask"] & live[:, None]
+        has = active.any(axis=1)
+        feasible &= ~(live & (p["step_vol"][:, i] > EPS_VOLUME) & ~has)
+        # Volume conservation (the object validator's Eq. 1 check, with
+        # the shared tolerance formula).
+        sent = np.where(active, v, 0.0).sum(axis=1)
+        cons_tol = np.maximum(
+            TOL, REL_TOL * np.maximum(p["step_vol"][:, i], 1.0)
+        )
+        volume_ok &= ~live | (
+            np.abs(sent - p["step_vol"][:, i]) <= cons_tol
+        )
+        cfg = p["step_cfg"][:, i][:, None]
+        need = active & (held != cfg)
+        free = np.where(need, free + t_recfg, free)
+        held = np.where(need, cfg, held)
+        busy += np.where(need, t_recfg, 0.0)
+        n_recfg += need.sum(axis=1)
+        start = np.where(chain, np.maximum(barrier[:, None], free), free)
+        end = start + v / p["bw"]
+        free = np.where(active, end, free)
+        busy += np.where(active, end - start, 0.0)
+        step_end = np.where(active, end, -np.inf).max(axis=1, initial=-np.inf)
+        barrier = np.where(has, np.maximum(barrier, step_end), barrier)
+        cct = np.where(has, np.maximum(cct, step_end), cct)
+    return finalize_result(
+        cct, n_recfg, busy, feasible, volume_ok, p["plane_mask"]
+    )
+
+
+class NumpyBackend(TimingBackend):
+    """Reference backend: vectorized NumPy, one loop turn per step."""
+
+    name = "numpy"
+
+    def derive_timing(self, packed: dict[str, np.ndarray]) -> BatchResult:
+        return _timing_numpy(packed)
+
+
+# ---------------------------------------------------------------------------
+# JAX backend: jit + lax.scan over padded buckets
+# ---------------------------------------------------------------------------
+def _require_jax():
+    try:
+        import jax  # noqa: F401  (availability probe)
+    except Exception as exc:  # pragma: no cover - env without jax
+        raise BackendUnavailable(
+            "the 'jax' IR backend needs jax installed (pip install jax)"
+        ) from exc
+    return jax
+
+
+def _build_jax_timing() -> Callable:
+    """The scan-lowered recurrence (built lazily so numpy users never
+    import jax)."""
+    jax = _require_jax()
+    import jax.numpy as jnp
+
+    def fn(
+        vol, step_vol, step_cfg, step_mask, plane_mask, bw, init,
+        t_recfg, chain, ready,
+    ):
+        b = vol.shape[0]
+        t_recfg_c = t_recfg[:, None]
+        chain_c = chain[:, None]
+
+        def body(carry, xs):
+            free, held, barrier, cct, busy, n_recfg, feasible, volume_ok = (
+                carry
+            )
+            v, live, svol, scfg = xs
+            active = (v > EPS_VOLUME) & plane_mask & live[:, None]
+            has = jnp.any(active, axis=1)
+            feasible = feasible & ~(live & (svol > EPS_VOLUME) & ~has)
+            sent = jnp.where(active, v, 0.0).sum(axis=1)
+            cons_tol = jnp.maximum(TOL, REL_TOL * jnp.maximum(svol, 1.0))
+            volume_ok = volume_ok & (
+                ~live | (jnp.abs(sent - svol) <= cons_tol)
+            )
+            cfg = scfg[:, None]
+            need = active & (held != cfg)
+            free = jnp.where(need, free + t_recfg_c, free)
+            held = jnp.where(need, cfg, held)
+            busy = busy + jnp.where(need, t_recfg_c, 0.0)
+            n_recfg = n_recfg + need.sum(axis=1)
+            start = jnp.where(
+                chain_c, jnp.maximum(barrier[:, None], free), free
+            )
+            end = start + v / bw
+            free = jnp.where(active, end, free)
+            busy = busy + jnp.where(active, end - start, 0.0)
+            step_end = jnp.max(
+                jnp.where(active, end, -jnp.inf), axis=1, initial=-jnp.inf
+            )
+            barrier = jnp.where(has, jnp.maximum(barrier, step_end), barrier)
+            cct = jnp.where(has, jnp.maximum(cct, step_end), cct)
+            return (
+                free, held, barrier, cct, busy, n_recfg, feasible, volume_ok
+            ), None
+
+        carry = (
+            ready,
+            init,
+            jnp.zeros(b, ready.dtype),
+            jnp.zeros(b, ready.dtype),
+            jnp.zeros_like(ready),
+            jnp.zeros(b, init.dtype),
+            jnp.ones(b, bool),
+            jnp.ones(b, bool),
+        )
+        xs = (
+            jnp.swapaxes(vol, 0, 1),  # (S, B, P)
+            step_mask.T,
+            step_vol.T,
+            step_cfg.T,
+        )
+        (free, held, barrier, cct, busy, n_recfg, feasible, volume_ok), _ = (
+            jax.lax.scan(body, carry, xs)
+        )
+        return cct, n_recfg, busy, feasible, volume_ok
+
+    return jax.jit(fn)
+
+
+class JaxBackend(TimingBackend):
+    """jit + scan over power-of-two padded buckets (CPU or accelerator)."""
+
+    name = "jax"
+
+    def __init__(self) -> None:
+        _require_jax()
+        self._fn: Callable | None = None
+
+    def _padded(self, packed: dict[str, np.ndarray]):
+        # Bucket the dimensions that vary continuously with sweep size
+        # (batch, planes); the step count is pattern-determined, so its
+        # distinct values are few and padding it would only buy a copy of
+        # the (B, S, P) volume tensor per call.
+        b, s, p = packed["vol"].shape
+        return pad_packed(packed, _bucket(b), s, _bucket(p)), (b, p)
+
+    def derive_timing(self, packed: dict[str, np.ndarray]) -> BatchResult:
+        from jax.experimental import enable_x64
+
+        if self._fn is None:
+            self._fn = _build_jax_timing()
+        padded, (b, p) = self._padded(packed)
+        with enable_x64():
+            cct, n_recfg, busy, feasible, volume_ok = self._fn(
+                padded["vol"], padded["step_vol"], padded["step_cfg"],
+                padded["step_mask"], padded["plane_mask"], padded["bw"],
+                padded["init"], padded["t_recfg"], padded["chain"],
+                padded["ready"],
+            )
+        return finalize_result(
+            np.asarray(cct)[:b],
+            np.asarray(n_recfg)[:b],
+            np.asarray(busy)[:b, :p],
+            np.asarray(feasible)[:b],
+            np.asarray(volume_ok)[:b],
+            packed["plane_mask"],
+        )
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend: blocked-scan kernel (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+class PallasBackend(TimingBackend):
+    """Blocked-scan Pallas kernel (`repro.kernels.timing_scan`).
+
+    Interpret mode (the CPU fallback tier-1 tests exercise) is the
+    default; set ``REPRO_PALLAS_INTERPRET=0`` on a real TPU host.
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool | None = None) -> None:
+        _require_jax()
+        try:
+            # Deferred so numpy-only users never import pallas; jax can
+            # be importable while jax.experimental.pallas is not (old
+            # jax), so this probe is wrapped too.
+            from repro.kernels import timing_scan
+        except Exception as exc:
+            raise BackendUnavailable(
+                "the 'pallas' IR backend needs a jax with a working "
+                f"jax.experimental.pallas ({exc})"
+            ) from exc
+
+        self._kernel = timing_scan.timing_scan
+        # None = follow the env var *per call*: get_backend caches the
+        # instance process-wide, so binding the env value here would
+        # silently freeze whatever was set at first instantiation.
+        self._interpret_override = interpret
+
+    @property
+    def interpret(self) -> bool:
+        if self._interpret_override is not None:
+            return self._interpret_override
+        return os.environ.get(ENV_PALLAS_INTERPRET, "1") != "0"
+
+    def derive_timing(self, packed: dict[str, np.ndarray]) -> BatchResult:
+        from jax.experimental import enable_x64
+
+        b, s, p = packed["vol"].shape
+        padded = pad_packed(packed, _bucket(b), s, _bucket(p))
+        with enable_x64():
+            cct, n_recfg, busy, feasible, volume_ok = self._kernel(
+                padded, interpret=self.interpret
+            )
+        return finalize_result(
+            np.asarray(cct)[:b],
+            np.asarray(n_recfg)[:b],
+            np.asarray(busy)[:b, :p],
+            np.asarray(feasible)[:b],
+            np.asarray(volume_ok)[:b],
+            packed["plane_mask"],
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry + selection
+# ---------------------------------------------------------------------------
+BACKENDS: dict[str, type[TimingBackend]] = {
+    "numpy": NumpyBackend,
+    "jax": JaxBackend,
+    "pallas": PallasBackend,
+}
+
+_instances: dict[str, TimingBackend] = {}
+
+
+def get_backend(name: str) -> TimingBackend:
+    """Instantiate (and cache) the named backend.
+
+    Raises ``BackendUnavailable`` when the backend's dependencies are
+    missing, ``ValueError`` for an unknown name.
+    """
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown IR backend {name!r}; choose from "
+            f"{sorted(BACKENDS)}"
+        )
+    if name not in _instances:
+        _instances[name] = BACKENDS[name]()
+    return _instances[name]
+
+
+def default_backend_name() -> str:
+    """The process-wide default (``REPRO_IR_BACKEND``, else numpy)."""
+    return os.environ.get(ENV_BACKEND, "numpy")
+
+
+def resolve_backend(
+    backend: str | TimingBackend | None,
+) -> TimingBackend:
+    """Per-call selection: instance > name > env default."""
+    if isinstance(backend, TimingBackend):
+        return backend
+    return get_backend(backend if backend is not None else
+                       default_backend_name())
+
+
+def available_backends() -> tuple[str, ...]:
+    """Names of the backends whose dependencies import on this host."""
+    names = []
+    for name in BACKENDS:
+        try:
+            get_backend(name)
+        except BackendUnavailable:
+            continue
+        names.append(name)
+    return tuple(names)

@@ -17,24 +17,27 @@ This module is the struct-of-arrays twin:
   via array reductions over the IR.
 * ``evaluate_decisions`` / ``batch_evaluate`` -- earliest-start timing
   derived directly from ``Decisions`` volume splits, vectorized over a
-  *batch* of instances packed into one padded array set.  A sweep over
-  message sizes x ``t_recfg`` x plane counts is a single NumPy pass whose
-  per-step inner ops cover the whole batch; per-instance results are
-  bitwise identical to the object executor's.
+  *batch* of instances packed into one padded array set.  The per-step
+  timing recurrence runs on a pluggable array backend
+  (`repro.core.ir.backends`): ``numpy`` (reference), ``jax`` (jit + scan
+  over padded sweep cells), or ``pallas`` (blocked-scan kernel,
+  interpret mode on CPU).  Select with ``backend=`` or the
+  ``REPRO_IR_BACKEND`` env var; the default is numpy for determinism.
 * ``waterfill_batch`` / ``rollout_batch`` -- the greedy scheduler's
   water-filling and rollout scoring, vectorized over candidate reserve
   sets (used by `repro.core.greedy`) and over lease candidates (used by
   `repro.runtime.arbiter`).
 
-The IR is deliberately jit-friendly (flat float64/int64 arrays, static
-shapes after padding): later PRs can lower ``_derive_timing_batch`` to
-jax/Pallas without touching callers.
+The packed batch layout is deliberately jit-friendly (flat float64/int64
+arrays, static shapes after padding): the jax and Pallas backends consume
+it unchanged, and static-shape bucketing (pad to powers of two) keeps the
+number of distinct compiled programs bounded.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
 
 import numpy as np
 
@@ -54,6 +57,9 @@ from repro.core.tolerances import (
     TOL,
     times_close_arr,
 )
+
+if TYPE_CHECKING:
+    from repro.core.ir.backends import TimingBackend
 
 KIND_XMIT = 0
 KIND_RECFG = 1
@@ -318,7 +324,7 @@ def execute_ir(ir: ScheduleIR) -> IRMetrics:
 def waterfill_batch(
     ready: np.ndarray,  # (C, P) per-candidate plane ready times
     bw: np.ndarray,  # (P,) or (C, P) plane bandwidths
-    volume: float,
+    volume: float | np.ndarray,  # scalar or (C,) per-candidate volumes
 ) -> tuple[np.ndarray, np.ndarray]:
     """Equalized-finish water level per candidate row.
 
@@ -326,10 +332,18 @@ def waterfill_batch(
     ``bw * (level - ready)`` for planes strictly below the level (others
     zero).  Planes excluded from a candidate should be passed with
     ``ready = _BIG`` -- they absorb nothing and never set the level.
+    ``volume`` may be a scalar (every row fills the same volume, the
+    greedy's per-step candidate batch) or a ``(C,)`` vector (per-row
+    volumes, the instance-batched grid case); zero-volume rows return
+    ``level = ready.min`` with an all-zero split.
     """
     ready = np.asarray(ready, dtype=np.float64)
     bw = np.broadcast_to(np.asarray(bw, dtype=np.float64), ready.shape)
-    if volume <= EPS:
+    vol = np.broadcast_to(
+        np.asarray(volume, dtype=np.float64), ready.shape[:1]
+    )
+    zero = vol <= EPS
+    if np.all(zero):
         return ready.min(axis=1), np.zeros_like(ready)
     order = np.argsort(ready, axis=1, kind="stable")
     r_s = np.take_along_axis(ready, order, axis=1)
@@ -342,11 +356,12 @@ def waterfill_batch(
         [np.zeros_like(cbr[:, :1]), cbr[:, :-1]], axis=1
     )
     absorbed = r_s * cb_prev - cbr_prev
-    k = (absorbed <= volume).sum(axis=1) - 1  # monotone => largest such k
+    k = (absorbed <= vol[:, None]).sum(axis=1) - 1  # monotone: largest such k
     rows = np.arange(ready.shape[0])
-    level = (volume + cbr[rows, k]) / cb[rows, k]
+    level = (vol + cbr[rows, k]) / cb[rows, k]
+    level = np.where(zero, ready.min(axis=1), level)
     gap = level[:, None] - ready
-    split = np.where(gap > EPS, bw * gap, 0.0)
+    split = np.where((gap > EPS) & ~zero[:, None], bw * gap, 0.0)
     return level, split
 
 
@@ -422,10 +437,49 @@ class BatchResult:
         return int(self.cct.shape[0])
 
 
-def _pack(
+def finalize_result(
+    cct: np.ndarray,
+    n_recfg: np.ndarray,
+    busy: np.ndarray,
+    feasible: np.ndarray,
+    volume_ok: np.ndarray,
+    plane_mask: np.ndarray,
+) -> BatchResult:
+    """Assemble a ``BatchResult`` from raw recurrence outputs.
+
+    One shared epilogue for every backend, so the utilization formula (and
+    its tolerance behavior) cannot drift between numpy, jax, and Pallas.
+    """
+    cct = np.asarray(cct, dtype=np.float64)
+    busy = np.asarray(busy, dtype=np.float64)
+    util = np.where(
+        cct > 0.0,
+        busy.sum(axis=1)
+        / np.maximum(cct * plane_mask.sum(axis=1), EPS),
+        0.0,
+    )
+    return BatchResult(
+        cct=cct,
+        n_reconfigurations=np.asarray(n_recfg, dtype=np.int64),
+        plane_busy=busy,
+        utilization=util,
+        feasible=np.asarray(feasible, dtype=bool),
+        volume_ok=np.asarray(volume_ok, dtype=bool),
+    )
+
+
+def pack_instances(
     instances: Sequence[BatchInstance],
     plane_ready: Sequence[Sequence[float]] | None,
 ) -> dict[str, np.ndarray]:
+    """Pad a batch of instances into one flat array set.
+
+    The packed dict is the contract between the sweep engine and the
+    timing backends (`repro.core.ir.backends`): every array is a plain
+    float64/int64/bool NumPy array with batch dimension first, so backends
+    can consume it unchanged (the jax/Pallas backends additionally pad to
+    static-shape buckets before compiling).
+    """
     b = len(instances)
     s_max = max(inst.pattern.n_steps for inst in instances)
     p_max = max(inst.fabric.n_planes for inst in instances)
@@ -490,78 +544,26 @@ def _pack(
     }
 
 
-def _derive_timing_batch(p: dict[str, np.ndarray]) -> BatchResult:
-    """Earliest-start timing over the packed batch, one step per loop turn.
-
-    Per-plane update order matches the object executor exactly (reconfigure
-    lazily at plane-free, transmit at ``max(barrier, free)`` in CHAIN mode
-    or plane-free in INDEPENDENT mode), so per-instance CCTs are bitwise
-    identical to ``repro.core.simulator.execute``.
-    """
-    b, s_max, _ = p["vol"].shape
-    free = p["ready"].copy()
-    held = p["init"].copy()
-    barrier = np.zeros(b)
-    cct = np.zeros(b)
-    busy = np.zeros_like(free)
-    n_recfg = np.zeros(b, dtype=np.int64)
-    feasible = np.ones(b, dtype=bool)
-    volume_ok = np.ones(b, dtype=bool)
-    t_recfg = p["t_recfg"][:, None]
-    chain = p["chain"][:, None]
-    for i in range(s_max):
-        v = p["vol"][:, i, :]
-        live = p["step_mask"][:, i]
-        active = (v > EPS_VOLUME) & p["plane_mask"] & live[:, None]
-        has = active.any(axis=1)
-        feasible &= ~(live & (p["step_vol"][:, i] > EPS_VOLUME) & ~has)
-        # Volume conservation (the object validator's Eq. 1 check, with
-        # the shared tolerance formula).
-        sent = np.where(active, v, 0.0).sum(axis=1)
-        cons_tol = np.maximum(
-            TOL, REL_TOL * np.maximum(p["step_vol"][:, i], 1.0)
-        )
-        volume_ok &= ~live | (
-            np.abs(sent - p["step_vol"][:, i]) <= cons_tol
-        )
-        cfg = p["step_cfg"][:, i][:, None]
-        need = active & (held != cfg)
-        free = np.where(need, free + t_recfg, free)
-        held = np.where(need, cfg, held)
-        busy += np.where(need, t_recfg, 0.0)
-        n_recfg += need.sum(axis=1)
-        start = np.where(chain, np.maximum(barrier[:, None], free), free)
-        end = start + v / p["bw"]
-        free = np.where(active, end, free)
-        busy += np.where(active, end - start, 0.0)
-        step_end = np.where(active, end, -np.inf).max(axis=1, initial=-np.inf)
-        barrier = np.where(has, np.maximum(barrier, step_end), barrier)
-        cct = np.where(has, np.maximum(cct, step_end), cct)
-    util = np.where(
-        cct > 0.0,
-        busy.sum(axis=1) / np.maximum(cct * p["plane_mask"].sum(axis=1), EPS),
-        0.0,
-    )
-    return BatchResult(
-        cct=cct,
-        n_reconfigurations=n_recfg,
-        plane_busy=busy,
-        utilization=util,
-        feasible=feasible,
-        volume_ok=volume_ok,
-    )
+# Back-compat alias: `_pack` was the pre-refactor (private) name.
+_pack = pack_instances
 
 
 def batch_evaluate(
     instances: Sequence[BatchInstance],
     plane_ready: Sequence[Sequence[float]] | None = None,
+    backend: "str | TimingBackend | None" = None,
 ) -> BatchResult:
     """Evaluate many (fabric, pattern, decisions) cells in one array pass.
 
     Instances are padded to the batch's max step/plane counts; padded cells
     carry zero volume and are masked out.  ``plane_ready`` optionally gives
     per-instance plane ready-time offsets (the arbiter's re-planning case).
+    ``backend`` selects the timing engine (``"numpy"`` | ``"jax"`` |
+    ``"pallas"``, a ``TimingBackend`` instance, or ``None`` for the
+    ``REPRO_IR_BACKEND`` env default).
     """
+    from repro.core.ir.backends import resolve_backend
+
     if not instances:
         return BatchResult(
             cct=np.zeros(0),
@@ -571,7 +573,9 @@ def batch_evaluate(
             feasible=np.ones(0, dtype=bool),
             volume_ok=np.ones(0, dtype=bool),
         )
-    return _derive_timing_batch(_pack(instances, plane_ready))
+    return resolve_backend(backend).derive_timing(
+        pack_instances(instances, plane_ready)
+    )
 
 
 def evaluate_decisions(
@@ -579,6 +583,7 @@ def evaluate_decisions(
     pattern: Pattern,
     decisions: Decisions,
     plane_ready: Sequence[float] | None = None,
+    backend: "str | TimingBackend | None" = None,
 ) -> IRMetrics:
     """Single-instance evaluation through the batched engine.
 
@@ -591,6 +596,7 @@ def evaluate_decisions(
     res = batch_evaluate(
         [BatchInstance(fabric, pattern, decisions)],
         None if plane_ready is None else [plane_ready],
+        backend=backend,
     )
     if not bool(res.feasible[0]):
         raise ValueError("a step has volume but no active planes")

@@ -35,6 +35,7 @@ Solutions are re-executed through the earliest-start executor
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 from scipy.optimize import Bounds, LinearConstraint
@@ -123,6 +124,7 @@ def _solve(
     time_limit: float,
     mip_rel_gap: float,
     fixed: dict[str, np.ndarray] | None,
+    plane_ready: Sequence[float] | None = None,
 ) -> MilpResult:
     steps = pattern.steps
     n_steps = len(steps)
@@ -135,9 +137,18 @@ def _solve(
     total_bw = sum(bw)
     t_recfg = fabric.t_recfg * _MS  # ms
     initial = [fabric.initial_config(j) for j in range(n_planes)]
+    if plane_ready is None:
+        ready_ms = [0.0] * n_planes
+    else:
+        if len(plane_ready) != n_planes:
+            raise ValueError("plane_ready length mismatch")
+        if any(r < 0 for r in plane_ready):
+            raise ValueError("plane_ready times must be non-negative")
+        ready_ms = [r * _MS for r in plane_ready]
 
-    # Upper bound / big-M: the strawman schedule is feasible.
-    horizon = _strawman_cct_ms(fabric, pattern) + t_recfg
+    # Upper bound / big-M: the strawman schedule, started once every plane
+    # is ready, is feasible.
+    horizon = _strawman_cct_ms(fabric, pattern) + t_recfg + max(ready_ms)
     big_m = horizon
 
     def _fix(kind: str, i: int, j: int) -> tuple[int, int] | tuple[None, None]:
@@ -222,9 +233,11 @@ def _solve(
                 # ... with no intervening reconfiguration on this plane.
                 for mid in range(ip + 1 if ip >= 0 else 0, i):
                     c.add([(z[(i, j, ip)], 1.0), (r[mid][j], 1.0)], -inf, 1.0)
-            # (Eq.7-9) per-plane activity chaining (P2).
+            # (Eq.7-9) per-plane activity chaining (P2).  The chain is
+            # anchored at the plane's ready time (0 for a fresh fabric;
+            # positive offsets model the arbiter's staggered leases).
             if i == 0:
-                c.add([(pe[i][j], 1.0)], 0.0, 0.0)
+                c.add([(pe[i][j], 1.0)], ready_ms[j], ready_ms[j])
             else:
                 c.add([(pe[i][j], 1.0), (pe[i - 1][j], -1.0)], 0.0, inf)
                 c.add(
@@ -276,6 +289,7 @@ def _solve(
             if (
                 bw[j] == bw[j + 1]
                 and initial[j] == initial[j + 1]
+                and ready_ms[j] == ready_ms[j + 1]
                 and n_steps > 0
             ):
                 c.add([(d[0][j], 1.0), (d[0][j + 1], -1.0)], 0.0, inf)
@@ -322,7 +336,12 @@ def _solve(
             step_split = {jj: vol * scale for jj, vol in step_split.items()}
         splits.append(step_split)
 
-    schedule = execute(fabric, pattern, Decisions(tuple(splits), mode=mode))
+    schedule = execute(
+        fabric,
+        pattern,
+        Decisions(tuple(splits), mode=mode),
+        plane_ready=plane_ready,
+    )
     n_bin = int(np.sum(np.array(v.integrality) == 1))
     return MilpResult(
         schedule=schedule,
@@ -341,9 +360,24 @@ def solve_milp(
     mode: DependencyMode = DependencyMode.CHAIN,
     time_limit: float = 60.0,
     mip_rel_gap: float = 1e-4,
+    plane_ready: Sequence[float] | None = None,
 ) -> MilpResult:
-    """Solve the paper's scheduling MILP and return a validated schedule."""
-    return _solve(fabric, pattern, mode, time_limit, mip_rel_gap, fixed=None)
+    """Solve the paper's scheduling MILP and return a validated schedule.
+
+    ``plane_ready`` gives per-plane earliest activity times (the arbiter's
+    staggered-lease re-planning case): each plane's activity chain is
+    anchored at its ready offset instead of t=0, so small re-plans stay
+    *exact* instead of falling back to the greedy.
+    """
+    return _solve(
+        fabric,
+        pattern,
+        mode,
+        time_limit,
+        mip_rel_gap,
+        fixed=None,
+        plane_ready=plane_ready,
+    )
 
 
 def derive_reconfigs(
@@ -376,6 +410,7 @@ def solve_fixed_structure(
     u: np.ndarray,
     mode: DependencyMode = DependencyMode.CHAIN,
     time_limit: float = 30.0,
+    plane_ready: Sequence[float] | None = None,
 ) -> Schedule | None:
     """Exact LP over splits/timing for a fixed serving-set structure."""
     if not np.all(u.sum(axis=1) >= 1):
@@ -389,6 +424,7 @@ def solve_fixed_structure(
             time_limit,
             1e-9,
             fixed={"u": u, "r": r},
+            plane_ready=plane_ready,
         ).schedule
     except RuntimeError:
         return None
@@ -408,13 +444,18 @@ def _structure_of(schedule: Schedule) -> dict[str, np.ndarray]:
     return {"u": u, "r": r}
 
 
-def lp_polish(schedule: Schedule, time_limit: float = 30.0) -> Schedule:
+def lp_polish(
+    schedule: Schedule,
+    time_limit: float = 30.0,
+    plane_ready: Sequence[float] | None = None,
+) -> Schedule:
     """Optimal continuous splits for a schedule's discrete structure.
 
     Fixes (u, r) to the given schedule's decisions and re-solves the exact
     LP, recovering splits such as "serve partially, release the plane early
     to reconfigure" that constructive heuristics cannot express.  Returns
-    whichever of (input, polished) has the lower CCT.
+    whichever of (input, polished) has the lower CCT.  ``plane_ready``
+    must match the offsets the input schedule was derived with.
     """
     fixed = _structure_of(schedule)
     polished = solve_fixed_structure(
@@ -423,6 +464,7 @@ def lp_polish(schedule: Schedule, time_limit: float = 30.0) -> Schedule:
         fixed["u"],
         mode=schedule.mode,
         time_limit=time_limit,
+        plane_ready=plane_ready,
     )
     if polished is None:
         return schedule

@@ -1,21 +1,33 @@
-"""SWOT scheduler facade: exact MILP when tractable, greedy at scale."""
+"""SWOT scheduler facade: exact MILP when tractable, greedy at scale.
+
+``plan_grid`` is the sweep-scale entry point: a whole grid of (fabric,
+pattern) cells is planned by the instance-batched greedy
+(`repro.core.greedy.swot_greedy_grid`) and scored -- including the
+strawman baseline for every cell -- in two ``batch_evaluate`` passes on
+the selected IR backend (numpy / jax / pallas).
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
 
 from repro.core.baselines import (
     InfeasibleError,
     ideal_cct,
     one_shot_cct,
     strawman_cct,
+    strawman_instance,
 )
 from repro.core.fabric import OpticalFabric
-from repro.core.greedy import has_ready_offsets, swot_greedy
+from repro.core.greedy import GridPlan, swot_greedy, swot_greedy_grid
+from repro.core.ir import batch_evaluate
 from repro.core.milp import solve_milp
 from repro.core.patterns import Pattern
 from repro.core.schedule import DependencyMode, Schedule
+
+if TYPE_CHECKING:
+    from repro.core.ir.backends import TimingBackend
 
 # Above this many (step, plane) binaries the MILP hands over to the greedy
 # (+ LP-polished structure local search), which empirically dominates HiGHS
@@ -60,22 +72,24 @@ def swot_schedule(
     """Schedule ``pattern`` on ``fabric`` with SWOT overlap optimization.
 
     ``plane_ready`` gives per-plane earliest activity times (the arbiter's
-    staggered-lease case).  The MILP does not model ready offsets, so any
-    positive offset forces the greedy path.
+    staggered-lease case).  The MILP anchors each plane's activity chain
+    at its ready offset, so small re-plans stay exact; at scale the auto
+    policy hands over to the greedy exactly as for fresh fabrics.
     """
-    if has_ready_offsets(plane_ready):
-        return (
-            swot_greedy(fabric, pattern, mode=mode, plane_ready=plane_ready),
-            "greedy",
-        )
     if method == "auto":
         n_bin = 2 * pattern.n_steps * fabric.n_planes
         method = "milp" if n_bin <= _MILP_BINARY_BUDGET else "greedy"
     if method == "milp":
-        greedy_schedule = swot_greedy(fabric, pattern, mode=mode)
+        greedy_schedule = swot_greedy(
+            fabric, pattern, mode=mode, plane_ready=plane_ready
+        )
         try:
             milp_schedule = solve_milp(
-                fabric, pattern, mode=mode, time_limit=milp_time_limit
+                fabric,
+                pattern,
+                mode=mode,
+                time_limit=milp_time_limit,
+                plane_ready=plane_ready,
             ).schedule
         except RuntimeError:
             return greedy_schedule, "greedy"  # solver hiccup: greedy+LP
@@ -85,7 +99,10 @@ def swot_schedule(
             return greedy_schedule, "greedy"
         return milp_schedule, "milp"
     if method == "greedy":
-        return swot_greedy(fabric, pattern, mode=mode), "greedy"
+        return (
+            swot_greedy(fabric, pattern, mode=mode, plane_ready=plane_ready),
+            "greedy",
+        )
     raise ValueError(f"unknown method {method!r}")
 
 
@@ -119,3 +136,49 @@ def plan_collective(
         one_shot_cct=oneshot,
         ideal_cct=ideal_cct(fabric, pattern),
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class GridCellPlan:
+    """One sweep cell planned by ``plan_grid``: greedy plan + baseline."""
+
+    plan: GridPlan
+    strawman_cct: float
+
+    @property
+    def cct(self) -> float:
+        return self.plan.cct
+
+    @property
+    def vs_strawman(self) -> float | None:
+        if self.strawman_cct == 0:
+            return None
+        return 1.0 - self.plan.cct / self.strawman_cct
+
+
+def plan_grid(
+    cells: Sequence[tuple[OpticalFabric, Pattern]],
+    backend: "str | TimingBackend | None" = None,
+    rollout_horizon: int = 24,
+) -> list[GridCellPlan]:
+    """Plan a whole sweep grid in one instance-batched pass.
+
+    The batched greedy plans every (fabric, pattern) cell together
+    (`swot_greedy_grid`), then ONE more ``batch_evaluate`` pass scores the
+    strawman-ICR baseline for every cell -- both on the selected IR
+    backend (``backend=None`` follows ``REPRO_IR_BACKEND``, default
+    numpy).  Use this for message-size x ``t_recfg`` x plane-count
+    sweeps; for single collectives (or when LP polish matters) use
+    ``plan_collective``.
+    """
+    plans = swot_greedy_grid(
+        cells, rollout_horizon=rollout_horizon, backend=backend
+    )
+    straw = batch_evaluate(
+        [strawman_instance(fabric, pattern) for fabric, pattern in cells],
+        backend=backend,
+    )
+    return [
+        GridCellPlan(plan=plan, strawman_cct=float(straw.cct[i]))
+        for i, plan in enumerate(plans)
+    ]

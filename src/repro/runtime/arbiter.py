@@ -151,6 +151,7 @@ class FabricArbiter:
         method: str = "greedy",
         allow_independent: bool = False,
         rebalance: bool = True,
+        backend: str | None = None,
     ) -> None:
         if min_planes < 1 or min_planes > fabric.n_planes:
             raise ValueError(
@@ -164,6 +165,9 @@ class FabricArbiter:
         self.method = method
         self.allow_independent = allow_independent
         self.rebalance = rebalance
+        # IR backend for batched lease-shrink re-scoring (None follows the
+        # REPRO_IR_BACKEND env default).
+        self.backend = backend
         self.stats = ArbiterStats()
         self.records: dict[int, JobRecord] = {}
         self._free: set[int] = set(range(fabric.n_planes))
@@ -520,7 +524,9 @@ class FabricArbiter:
             instances.append(strawman_instance(fab, sub_pattern))
             starts.append(t0 - now)
             readies.append(ready)
-        result = batch_evaluate(instances, plane_ready=readies)
+        result = batch_evaluate(
+            instances, plane_ready=readies, backend=self.backend
+        )
         best_idx = 0
         best_score = (
             starts[0] + float(result.cct[0])

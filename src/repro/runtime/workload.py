@@ -212,6 +212,7 @@ def replay(
     method: str = "greedy",
     allow_independent: bool = False,
     rebalance: bool = True,
+    backend: str | None = None,
 ) -> ReplayReport:
     """Replay ``trace`` through a fresh engine + arbiter; returns stats."""
     engine = SimEngine()
@@ -223,6 +224,7 @@ def replay(
         method=method,
         allow_independent=allow_independent,
         rebalance=rebalance,
+        backend=backend,
     )
     specs = sorted(trace, key=lambda s: s.arrival)
     records: list[JobRecord] = []
