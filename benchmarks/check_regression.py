@@ -1,0 +1,185 @@
+"""CI benchmark-regression gate: diff emitted BENCH JSONs vs baselines.
+
+``benchmarks/run.py --quick`` emits ``BENCH_sweep.json`` and
+``BENCH_backends.json``; this script compares a fresh pair against the
+committed baselines with a tolerance band and exits non-zero on
+regression, so the BENCH_* numbers are enforced by the pipeline instead
+of rotting silently.
+
+What is gated (and why):
+
+* **Deterministic sweep points** -- every ``BENCH_sweep.json`` point
+  that is not a wall-clock timing row (CCTs, queueing delays,
+  utilization: simulated quantities, identical on any machine).  A
+  value drifting above baseline by more than the band fails.
+* **Speedup ratios** -- ``speedup_vs_numpy`` per backend from
+  ``BENCH_backends.json`` and the INDEPENDENT-grid
+  ``speedup_vs_per_instance``.  Ratios compare two timings from the
+  SAME run on the SAME host, so they transfer across runner hardware
+  where absolute microseconds do not.  A ratio falling below baseline
+  by more than the band fails -- with the floor clamped to the
+  benchmark's own in-run hard gate (>= 2x), so a baseline captured on
+  a fast host can never fail a slower runner that still clears the
+  gate.
+
+What is deliberately NOT gated:
+
+* absolute wall-clock rows (``*_wall_time``, ``ir_sweep_*``,
+  ``indep_grid_*``, ``ir_backend_*`` microsecond columns) -- runner
+  hardware varies run to run;
+* the ``pallas`` backend ratio -- interpret mode on CPU times the
+  interpreter, not the kernel.
+
+A point present in the baseline but missing from the current run fails
+too (a silently dropped gate is itself rot); new points are reported
+but pass, since they land together with their regenerated baseline.
+
+Usage (CI runs exactly this)::
+
+    python benchmarks/check_regression.py \
+        --baseline /tmp/bench-baseline --current . [--tolerance 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+
+# Sweep rows whose us_per_call is a wall-clock measurement (machine
+# dependent): excluded from the deterministic-point comparison.
+_TIMING_ROW = re.compile(
+    r"(wall_time|ir_sweep_|indep_grid_|ir_backend_|_solve_time|_us$)"
+)
+# Backends whose speedup ratio is not meaningful on CI hosts.
+_UNGATED_BACKENDS = frozenset({"pallas"})
+
+# Hard floors the benchmarks themselves assert in-run (ir_sweep's >= 2x
+# gates).  The band floor is clamped to never exceed these: a baseline
+# captured on a fast host must not make a slower runner fail while it
+# still clears the benchmark's own gate -- but a current run whose JSON
+# somehow records a sub-gate ratio (e.g. the in-bench assert was
+# deleted) still fails here.
+_RATIO_HARD_GATES = {
+    "backend_speedup:jax": 2.0,
+    "independent_grid_speedup": 2.0,
+}
+
+SWEEP_NAME = "BENCH_sweep.json"
+BACKENDS_NAME = "BENCH_backends.json"
+
+
+def _load(path: pathlib.Path) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def _sweep_points(payload: dict) -> dict[str, float]:
+    return {
+        pt["name"]: float(pt["us_per_call"])
+        for pt in payload.get("points", [])
+        if not _TIMING_ROW.search(pt["name"])
+    }
+
+
+def _speedup_ratios(payload: dict) -> dict[str, float]:
+    ratios: dict[str, float] = {}
+    for name, entry in payload.get("backends", {}).items():
+        if name in _UNGATED_BACKENDS or "speedup_vs_numpy" not in entry:
+            continue
+        ratios[f"backend_speedup:{name}"] = float(
+            entry["speedup_vs_numpy"]
+        )
+    grid = payload.get("independent_grid", {})
+    if "speedup_vs_per_instance" in grid:
+        ratios["independent_grid_speedup"] = float(
+            grid["speedup_vs_per_instance"]
+        )
+    return ratios
+
+
+def compare(
+    baseline_dir: pathlib.Path,
+    current_dir: pathlib.Path,
+    tolerance: float,
+) -> list[str]:
+    """Return a list of human-readable failures (empty = pass)."""
+    failures: list[str] = []
+
+    base_sweep = _sweep_points(_load(baseline_dir / SWEEP_NAME))
+    cur_sweep = _sweep_points(_load(current_dir / SWEEP_NAME))
+    for name, base in sorted(base_sweep.items()):
+        if name not in cur_sweep:
+            failures.append(f"sweep point {name!r} missing from current run")
+            continue
+        cur = cur_sweep[name]
+        if base > 0 and cur > base * (1.0 + tolerance):
+            failures.append(
+                f"sweep point {name!r} regressed: {cur:.3f} vs baseline "
+                f"{base:.3f} (+{cur / base - 1.0:.0%}, band is "
+                f"{tolerance:.0%})"
+            )
+    for name in sorted(set(cur_sweep) - set(base_sweep)):
+        print(f"note: new sweep point {name!r} (no baseline yet)")
+
+    base_ratio = _speedup_ratios(_load(baseline_dir / BACKENDS_NAME))
+    cur_ratio = _speedup_ratios(_load(current_dir / BACKENDS_NAME))
+    for name, base in sorted(base_ratio.items()):
+        if name not in cur_ratio:
+            failures.append(f"ratio {name!r} missing from current run")
+            continue
+        cur = cur_ratio[name]
+        floor = base * (1.0 - tolerance)
+        if name in _RATIO_HARD_GATES:
+            floor = min(floor, _RATIO_HARD_GATES[name])
+        if base > 0 and cur < floor:
+            failures.append(
+                f"throughput ratio {name!r} regressed: {cur:.2f}x vs "
+                f"baseline {base:.2f}x (floor {floor:.2f}x, band is "
+                f"{tolerance:.0%})"
+            )
+    for name in sorted(set(cur_ratio) - set(base_ratio)):
+        print(f"note: new ratio {name!r} (no baseline yet)")
+
+    n_checked = len(base_sweep) + len(base_ratio)
+    print(
+        f"checked {len(base_sweep)} sweep points + {len(base_ratio)} "
+        f"throughput ratios against {baseline_dir} "
+        f"(band {tolerance:.0%}): "
+        + ("PASS" if not failures else f"{len(failures)} FAILURE(S)")
+    )
+    assert n_checked > 0, "baselines contained nothing to check"
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--baseline",
+        type=pathlib.Path,
+        required=True,
+        help="directory holding the committed baseline BENCH_*.json",
+    )
+    parser.add_argument(
+        "--current",
+        type=pathlib.Path,
+        required=True,
+        help="directory holding the freshly emitted BENCH_*.json",
+    )
+    parser.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="relative regression band (default 0.25 = 25%%)",
+    )
+    args = parser.parse_args(argv)
+    failures = compare(args.baseline, args.current, args.tolerance)
+    for failure in failures:
+        print(f"REGRESSION: {failure}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

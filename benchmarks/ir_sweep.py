@@ -20,6 +20,13 @@ Two sweeps, two acceptance gates:
   time on CPU is the interpreter's, not the kernel's).  ``run.py`` dumps
   these numbers to ``BENCH_backends.json`` for the cross-PR perf
   trajectory.
+
+A third gate rides along: ``independent_grid`` plans a 16 x 16 grid of
+64-node pairwise all-to-all cells with the instance-batched
+INDEPENDENT-mode greedy (``swot_greedy_grid(mode=INDEPENDENT)``) and
+must be >= 2x faster than the per-instance ``independent_decisions``
+loop -- with bitwise-identical decisions.  Its numbers land in both
+``BENCH_sweep.json`` (as ``run`` rows) and ``BENCH_backends.json``.
 """
 
 import argparse
@@ -31,13 +38,15 @@ from repro.core import (
     BatchInstance,
     OpticalFabric,
     batch_evaluate,
+    independent_decisions,
     pairwise_alltoall,
     rabenseifner_allreduce,
     strawman_instance,
+    swot_greedy_grid,
 )
 from repro.core.ir import BackendUnavailable, get_backend, resolve_backend
 from repro.core.ir.engine import pack_instances
-from repro.core.schedule import validate_object
+from repro.core.schedule import DependencyMode, validate_object
 from repro.core.simulator import execute
 
 
@@ -111,6 +120,110 @@ def run(
             f"ir_sweep_batched_{tag}",
             t_batch * 1e6 / n,
             f"speedup={speedup:.1f}x max_cct_err={err:.1e}",
+        ),
+    ] + independent_grid_rows()
+
+
+# INDEPENDENT-mode grid: 16 sizes x 16 delays of 64-node pairwise
+# all-to-all (63 steps each).  Deep enough in steps that the
+# per-instance argmin-packing loop's Python turns dominate, small
+# enough (~0.2 s per rep) for the CI smoke sweep.
+_INDEP_NODES = 64
+_INDEP_PLANES = 8
+_INDEP_SIZES = tuple(1e6 * (1 + i) for i in range(16))
+_INDEP_RECFGS = tuple(25e-6 * (1 + i) for i in range(16))
+
+_independent_grid_cache: dict | None = None
+
+
+def independent_grid(quick: bool = False) -> dict:
+    """Instance-batched INDEPENDENT grid vs the per-instance loop.
+
+    Both sides produce scored plans for every cell: the per-instance
+    path runs ``independent_decisions`` per cell plus one
+    ``batch_evaluate`` scoring pass; the batched path is ONE
+    ``swot_greedy_grid(mode=INDEPENDENT)`` call.  Decisions must be
+    bitwise identical and the batched path >= 2x faster (the
+    acceptance gate for batching the last per-step Python out of the
+    grid path).  The payload is memoized so ``run.py`` can record it
+    in both BENCH JSON files without re-timing.
+    """
+    global _independent_grid_cache
+    del quick  # the grid must stay step-deep or the gate is meaningless
+    if _independent_grid_cache is not None:
+        return _independent_grid_cache
+    patterns = {
+        size: pairwise_alltoall(_INDEP_NODES, size)
+        for size in _INDEP_SIZES
+    }
+    cells = [
+        (
+            OpticalFabric(_INDEP_NODES, _INDEP_PLANES, t_recfg=t_recfg),
+            patterns[size],
+        )
+        for size in _INDEP_SIZES
+        for t_recfg in _INDEP_RECFGS
+    ]
+    t_instance = t_grid = float("inf")
+    # Interleave best-of-3 reps so host load spikes skew both sides alike.
+    for _ in range(3):
+        t0 = time.perf_counter()
+        decisions = [
+            independent_decisions(fabric, pattern)
+            for fabric, pattern in cells
+        ]
+        batch_evaluate(
+            [
+                BatchInstance(fabric, pattern, dec)
+                for (fabric, pattern), dec in zip(cells, decisions)
+            ]
+        )
+        t_instance = min(t_instance, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        plans = swot_greedy_grid(cells, mode=DependencyMode.INDEPENDENT)
+        t_grid = min(t_grid, time.perf_counter() - t0)
+    mismatches = sum(
+        plan.decisions != dec for plan, dec in zip(plans, decisions)
+    )
+    assert mismatches == 0, (
+        f"INDEPENDENT grid decisions diverge from per-instance "
+        f"independent_decisions on {mismatches}/{len(cells)} cells"
+    )
+    speedup = t_instance / t_grid
+    assert speedup >= 2.0, (
+        f"INDEPENDENT grid greedy only {speedup:.1f}x faster than the "
+        "per-instance path (acceptance gate is >= 2x)"
+    )
+    _independent_grid_cache = {
+        "cells": len(cells),
+        "pattern": f"pairwise_alltoall_{_INDEP_NODES}",
+        "n_steps": cells[0][1].n_steps,
+        "n_planes": _INDEP_PLANES,
+        "per_instance_ms": round(t_instance * 1e3, 3),
+        "grid_ms": round(t_grid * 1e3, 3),
+        "us_per_instance": round(t_grid * 1e6 / len(cells), 3),
+        "speedup_vs_per_instance": round(speedup, 2),
+        "decision_mismatches": mismatches,
+    }
+    return _independent_grid_cache
+
+
+def independent_grid_rows(
+    quick: bool = False,
+) -> list[tuple[str, float, str]]:
+    """``independent_grid`` reshaped into benchmark CSV rows."""
+    g = independent_grid(quick=quick)
+    return [
+        (
+            "indep_grid_per_instance",
+            g["per_instance_ms"] * 1e3 / g["cells"],
+            f"{g['cells']} cells total={g['per_instance_ms']:.1f}ms",
+        ),
+        (
+            "indep_grid_batched",
+            g["us_per_instance"],
+            f"speedup={g['speedup_vs_per_instance']}x "
+            f"mismatches={g['decision_mismatches']}",
         ),
     ]
 
@@ -202,6 +315,9 @@ def backend_throughput(quick: bool = False) -> dict:
             f"jax backend only {jax_entry['speedup_vs_numpy']}x vs numpy "
             "on the large grid (acceptance gate is >= 2x)"
         )
+    # The INDEPENDENT-mode grid gate rides along in the same payload so
+    # BENCH_backends.json tracks both batching trajectories per PR.
+    payload["independent_grid"] = independent_grid()
     return payload
 
 

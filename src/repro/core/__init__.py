@@ -29,7 +29,12 @@ from repro.core.fabric import (
     TPU_V5E_LINK_BANDWIDTH,
     OpticalFabric,
 )
-from repro.core.greedy import GridPlan, swot_greedy, swot_greedy_grid
+from repro.core.greedy import (
+    GridPlan,
+    independent_decisions,
+    swot_greedy,
+    swot_greedy_grid,
+)
 from repro.core.ir import (
     BackendUnavailable,
     BatchInstance,
@@ -131,6 +136,7 @@ __all__ = [
     "strawman_decisions",
     "strawman_icr",
     "strawman_instance",
+    "independent_decisions",
     "swot_greedy",
     "swot_greedy_grid",
     "swot_schedule",

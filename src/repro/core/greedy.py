@@ -31,12 +31,16 @@ Both entry points accept ``plane_ready`` -- per-plane earliest activity
 times -- so the runtime arbiter can re-plan a job onto planes that free at
 different instants instead of waiting for the latest one.
 
-``swot_greedy_grid`` batches the CHAIN greedy across sweep *instances*:
-a whole grid of (fabric, pattern, t_recfg) cells advances through the
-per-step loop together, every cell's candidate reserve sets stacked into
-one (rows x planes) state batch, so each step costs ONE ``waterfill_batch``
-and ONE rollout call for the entire grid -- and the final decisions are
-scored in one ``batch_evaluate`` pass on the selected IR backend.
+``swot_greedy_grid`` batches the greedy across sweep *instances*: a whole
+grid of (fabric, pattern, t_recfg) cells advances through the per-step
+loop together.  In CHAIN mode every cell's candidate reserve sets come
+from a table precomputed at grid construction (`_GridState`) and are
+stacked into one (rows x planes) state batch, so each step costs ONE
+batched candidate construction, ONE ``waterfill_batch``, ONE rollout
+call, and ONE instance-keyed lexsort for the entire grid -- no
+per-instance Python inside the loop.  INDEPENDENT mode packs every
+cell's step by least finish time in one batched argmin.  Final decisions
+are scored in one ``batch_evaluate`` pass on the selected IR backend.
 """
 
 from __future__ import annotations
@@ -139,7 +143,11 @@ def _reserve_candidates(
         targets = _upcoming_targets(
             pattern, step_idx + 1, held, len(reserved)
         )
-        by_free_r = sorted(reserved, key=lambda j: trial_free[c_idx, j])
+        # Ties on free time break by plane index (sorted() is stable over
+        # the ascending base order) -- the same rule as a stable argsort,
+        # which is what keeps the vectorized grid enumeration
+        # (`_reserve_rows`) bitwise-identical to this reference.
+        by_free_r = sorted(sorted(reserved), key=lambda j: trial_free[c_idx, j])
         for j, cfg_t in zip(by_free_r, targets):
             trial_free[c_idx, j] += t_recfg
             trial_cfg[c_idx, j] = cfg_t
@@ -288,14 +296,16 @@ def _structure_local_search(
     return best
 
 
-def swot_greedy_independent(
+def independent_decisions(
     fabric: OpticalFabric,
     pattern: Pattern,
-    polish: bool = True,
     plane_ready: Sequence[float] | None = None,
-) -> Schedule:
-    """Beyond-paper INDEPENDENT-mode packing (no cross-step barrier)."""
-    n_planes = fabric.n_planes
+) -> Decisions:
+    """Least-finish-time INDEPENDENT-mode packing decisions (one instance).
+
+    The single-instance reference the instance-batched grid path
+    (`swot_greedy_grid(mode=INDEPENDENT)`) is bitwise-pinned against.
+    """
     bw, config, free = _initial_state(fabric, plane_ready)
     splits: list[dict[int, float]] = []
     for step in pattern.steps:
@@ -306,10 +316,20 @@ def swot_greedy_independent(
         free[j] = finish[j]
         config[j] = step.config
         splits.append({j: step.volume})
+    return Decisions(tuple(splits), mode=DependencyMode.INDEPENDENT)
+
+
+def swot_greedy_independent(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    polish: bool = True,
+    plane_ready: Sequence[float] | None = None,
+) -> Schedule:
+    """Beyond-paper INDEPENDENT-mode packing (no cross-step barrier)."""
     schedule = execute(
         fabric,
         pattern,
-        Decisions(tuple(splits), mode=DependencyMode.INDEPENDENT),
+        independent_decisions(fabric, pattern, plane_ready),
         plane_ready=plane_ready,
     )
     if polish:
@@ -355,11 +375,29 @@ class GridPlan:
 
 
 class _GridState:
-    """Packed per-instance planner state for the batched CHAIN greedy."""
+    """Packed per-instance planner state for the instance-batched greedy.
 
-    def __init__(self, cells: Sequence[tuple[OpticalFabric, Pattern]]):
+    CHAIN mode additionally precomputes the *candidate reserve-set table*:
+    one flat row per (instance, reserve set) in exactly the enumeration
+    order of ``_reserve_candidates`` (subset enumeration when
+    ``n_planes <= max_enumerated_planes``, soonest-free prefixes of sizes
+    0..3 otherwise), plus the ``prev_same`` first-occurrence table that
+    lets upcoming-target retargeting run as array ops.  The per-step loop
+    then touches no per-instance Python at all: candidate construction,
+    water-filling, rollout scoring, and selection are each ONE batched
+    call over every candidate row of every live instance.
+    """
+
+    def __init__(
+        self,
+        cells: Sequence[tuple[OpticalFabric, Pattern]],
+        mode: DependencyMode = DependencyMode.CHAIN,
+        max_enumerated_planes: int = 8,
+    ):
         b = len(cells)
         self.cells = list(cells)
+        self.mode = mode
+        self.max_enumerated_planes = max_enumerated_planes
         self.n_p = np.array(
             [f.n_planes for f, _ in cells], dtype=np.int64
         )
@@ -386,6 +424,13 @@ class _GridState:
             self.step_cfg[bi, :n_s] = pattern.configs
             self.step_vol[bi, :n_s] = pattern.volumes
             self.t_recfg[bi] = fabric.t_recfg
+        if mode is DependencyMode.CHAIN:
+            self._init_chain_tables()
+            self._init_candidate_table()
+
+    def _init_chain_tables(self) -> None:
+        """Rollout tail tables + the ``prev_same`` first-occurrence table."""
+        b, s_max = len(self.cells), self.s_max
         # Tail lower-bound tables (same summation order as rollout_batch:
         # a direct np.sum over the suffix slice, per start offset).
         self.bw_sum = np.array(
@@ -393,12 +438,20 @@ class _GridState:
         )
         self.suffix_vol = np.zeros((b, s_max + 1))
         self.suffix_changes = np.zeros((b, s_max + 1), dtype=np.int64)
+        # prev_same[bi, k]: largest k' < k with the same step config, else
+        # -1 -- so "k is the first occurrence of its config in steps >= s"
+        # is the O(1) test prev_same[bi, k] < s.
+        self.prev_same = np.full((b, s_max), -1, dtype=np.int64)
         for bi in range(b):
             n_s = int(self.n_s[bi])
+            last_seen: dict[int, int] = {}
             for k in range(n_s):
                 # Per-offset direct np.sum: load-bearing for float-order
                 # parity with rollout_batch's tail_volume computation.
                 self.suffix_vol[bi, k] = self.step_vol[bi, k:n_s].sum()
+                cfg = int(self.step_cfg[bi, k])
+                self.prev_same[bi, k] = last_seen.get(cfg, -1)
+                last_seen[cfg] = k
             if n_s > 1:
                 # suffix_changes[k] counts adjacent config changes in
                 # steps k..n_s-1; integer-exact, so a reverse cumsum is
@@ -409,6 +462,148 @@ class _GridState:
                 self.suffix_changes[bi, : n_s - 1] = np.cumsum(
                     changes[::-1]
                 )[::-1]
+
+    def _init_candidate_table(self) -> None:
+        """Flat padded reserve-set rows, in `_reserve_candidates` order.
+
+        Enumerated instances (``n_planes <= max_enumerated_planes``) get
+        static masks: every subset except the full set, sizes ascending,
+        lexicographic within a size (the ``itertools.combinations``
+        order).  Larger instances get 4 *dynamic* rows -- soonest-free
+        prefixes of sizes 0..3 -- whose masks are refreshed from ``free``
+        at every step (`_refresh_dynamic_rows`).
+        """
+        b, p_max = len(self.cells), self.p_max
+        masks: list[np.ndarray] = []
+        inst: list[int] = []
+        self.cand_start = np.zeros(b, dtype=np.int64)
+        dynamic: list[int] = []
+        for bi in range(b):
+            n_p = int(self.n_p[bi])
+            self.cand_start[bi] = len(inst)
+            if n_p <= self.max_enumerated_planes:
+                for size in range(n_p):
+                    for combo in itertools.combinations(range(n_p), size):
+                        m = np.zeros(p_max, dtype=bool)
+                        m[list(combo)] = True
+                        masks.append(m)
+                        inst.append(bi)
+            else:
+                dynamic.append(bi)
+                for _ in range(4):  # sizes 0..3, refreshed per step
+                    masks.append(np.zeros(p_max, dtype=bool))
+                    inst.append(bi)
+        self.cand_mask = np.stack(masks, axis=0)
+        self.cand_inst = np.asarray(inst, dtype=np.int64)
+        self.cand_size = self.cand_mask.sum(axis=1)
+        self.cand_valid = self.cand_size != self.n_p[self.cand_inst]
+        self.dyn_insts = np.asarray(dynamic, dtype=np.int64)
+
+    def _refresh_dynamic_rows(self, live: np.ndarray) -> None:
+        """Rebuild soonest-free prefix masks for live fallback instances.
+
+        Matches ``_reserve_candidates``'s ``sorted(range(n_planes),
+        key=free)`` (stable: free-time ties break by plane index) via a
+        stable argsort; prefixes longer than ``n_planes`` saturate to the
+        full plane set exactly like ``set(by_free[:size])`` does.
+        """
+        if not self.dyn_insts.size:
+            return
+        dyn = self.dyn_insts[live[self.dyn_insts]]
+        if not dyn.size:
+            return
+        ranks = _stable_ranks(
+            np.where(self.real[dyn], self.free[dyn], np.inf)
+        )
+        for size in range(4):
+            rows = self.cand_start[dyn] + size
+            self.cand_mask[rows] = (ranks < size) & self.real[dyn]
+        rows = (self.cand_start[dyn][:, None] + np.arange(4)).ravel()
+        self.cand_size[rows] = self.cand_mask[rows].sum(axis=1)
+        self.cand_valid[rows] = (
+            self.cand_size[rows] != self.n_p[self.cand_inst[rows]]
+        )
+
+    def upcoming_targets_table(
+        self, step_idx: int
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-instance retarget tables for reserve sets at ``step_idx``.
+
+        Returns ``(targets (B, P_max), n_avail (B,))``: for each instance,
+        the first ``P_max`` distinct configs of steps ``step_idx + 1..``
+        (first-occurrence order) that are neither installed on a plane nor
+        equal to the current step's config -- the array twin of
+        ``_upcoming_targets`` with ``held`` = installed + current.
+        """
+        b, p_max = len(self.cells), self.p_max
+        targets = np.full((b, p_max), NO_CONFIG, dtype=np.int64)
+        s = step_idx + 1
+        if s >= self.s_max:
+            return targets, np.zeros(b, dtype=np.int64)
+        window = self.step_cfg[:, s:]
+        first_occ = self.prev_same[:, s:] < s
+        in_window = np.arange(s, self.s_max)[None, :] < self.n_s[:, None]
+        held = (window[:, :, None] == self.config[:, None, :]).any(axis=2)
+        held |= window == self.step_cfg[:, step_idx][:, None]
+        avail = first_occ & ~held & in_window
+        slot = np.cumsum(avail, axis=1) - 1
+        take = avail & (slot < p_max)
+        bi, wi = np.nonzero(take)
+        targets[bi, slot[bi, wi]] = window[bi, wi]
+        return targets, avail.sum(axis=1)
+
+
+def _stable_ranks(key: np.ndarray) -> np.ndarray:
+    """Per-row rank of each column under a stable ascending sort of ``key``.
+
+    Ties rank in column order -- the ``sorted(sorted(...), key=...)``
+    rule of ``_reserve_candidates``.  The single source of the rank
+    computation both the batched retarget pairing (`_reserve_rows`) and
+    the dynamic prefix masks (`_refresh_dynamic_rows`) rely on for the
+    bitwise-parity contract.
+    """
+    order = np.argsort(key, axis=1, kind="stable")
+    ranks = np.empty_like(order)
+    np.put_along_axis(
+        ranks, order, np.arange(key.shape[1])[None, :], axis=1
+    )
+    return ranks
+
+
+def _reserve_rows(
+    st: _GridState, step_idx: int, live: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+           np.ndarray]:
+    """Batched candidate reserve-set states across every live instance.
+
+    The vectorized twin of per-instance ``_reserve_candidates`` calls:
+    returns ``(inst, starts, trial_cfg, trial_free, reserved_mask,
+    valid)`` where rows are grouped contiguously per live instance
+    (``starts`` marks each instance's first row).  Reserved planes are
+    retargeted toward upcoming configs soonest-free first (stable on
+    ties, matching the reference's deterministic sort), with the same
+    single ``free + t_recfg`` float bump -- so downstream scores, and
+    therefore selections, are bitwise identical.
+    """
+    st._refresh_dynamic_rows(live)
+    rows = np.nonzero(live[st.cand_inst])[0]
+    inst = st.cand_inst[rows]
+    starts = np.nonzero(np.r_[True, inst[1:] != inst[:-1]])[0]
+    mask = st.cand_mask[rows]
+    free_rows = st.free[inst]
+    cfg_rows = st.config[inst]
+    # Rank reserved planes by (free time, plane index): stable argsort
+    # over free with non-reserved planes pushed to +inf.
+    ranks = _stable_ranks(np.where(mask, free_rows, np.inf))
+    targets, n_avail = st.upcoming_targets_table(step_idx)
+    n_tgt = np.minimum(st.cand_size[rows], n_avail[inst])
+    assigned = mask & (ranks < n_tgt[:, None])
+    tgt = np.take_along_axis(targets[inst], ranks, axis=1)
+    trial_free = np.where(
+        assigned, free_rows + st.t_recfg[inst][:, None], free_rows
+    )
+    trial_cfg = np.where(assigned, tgt, cfg_rows)
+    return inst, starts, trial_cfg, trial_free, mask, st.cand_valid[rows]
 
 
 def _rollout_rows(
@@ -460,19 +655,126 @@ def _rollout_rows(
     return np.where(has_tail, barrier + tail_rec, barrier)
 
 
+def _chain_grid_decisions(
+    st: _GridState, rollout_horizon: int
+) -> list[Decisions]:
+    """The batched CHAIN per-step loop: no per-instance Python inside.
+
+    Each step costs ONE `_reserve_rows` (batched candidate construction
+    from the precomputed reserve-set table), ONE ``waterfill_batch``, ONE
+    row-batched rollout, and ONE instance-keyed lexsort selecting every
+    live instance's winner at once.  Chosen splits land in per-step
+    arrays; the Decisions dicts are materialized after the loop.
+    """
+    b = len(st.cells)
+    chosen: list[tuple[np.ndarray, np.ndarray]] = []
+    for i in range(st.s_max):
+        live = i < st.n_s
+        if not live.any():
+            break
+        inst, starts, trial_cfg, trial_free, reserved_mask, valid = (
+            _reserve_rows(st, i, live)
+        )
+        cfg_i = st.step_cfg[inst, i][:, None]
+        vol_i = st.step_vol[inst, i]
+        extra = np.where(trial_cfg == cfg_i, 0.0, st.t_recfg[inst][:, None])
+        ready = np.maximum(st.barrier[inst][:, None], trial_free + extra)
+        ready = np.where(reserved_mask | ~st.real[inst], _BIG, ready)
+        level, split = waterfill_batch(ready, st.bw[inst], vol_i)
+        valid = valid & ((vol_i <= _EPS) | (split > 0.0).any(axis=1))
+        assert np.logical_or.reduceat(valid, starts).all(), (
+            "no feasible reserve set"
+        )
+        active = split > 0.0
+        new_free = np.where(active, level[:, None], trial_free)
+        new_cfg = np.where(active, cfg_i, trial_cfg)
+        scores = _rollout_rows(
+            st, inst, new_cfg, new_free, level, i + 1, rollout_horizon
+        )
+        scores = np.where(valid, scores, np.inf)
+        level_key = np.where(valid, level, np.inf)
+        # Per-instance min by (score, level, candidate order): one global
+        # lexsort with the instance id as primary key; the first row of
+        # each instance segment is exactly its per-slice lexsort()[0].
+        order = np.lexsort(
+            (np.arange(inst.shape[0]), level_key, scores, inst)
+        )
+        inst_sorted = inst[order]
+        seg = np.nonzero(
+            np.r_[True, inst_sorted[1:] != inst_sorted[:-1]]
+        )[0]
+        best = order[seg]
+        live_insts = inst_sorted[seg]
+        st.config[live_insts] = new_cfg[best]
+        st.free[live_insts] = new_free[best]
+        st.barrier[live_insts] = level[best]
+        chosen.append((live_insts, split[best]))
+
+    splits: list[list[dict[int, float]]] = [[] for _ in range(b)]
+    for live_insts, split in chosen:
+        for row, bi in enumerate(live_insts):
+            splits[bi].append(
+                {
+                    j: float(split[row, j])
+                    for j in range(int(st.n_p[bi]))
+                    if split[row, j] > 0.0
+                }
+            )
+    return [Decisions(tuple(s)) for s in splits]
+
+
+def _independent_grid_decisions(st: _GridState) -> list[Decisions]:
+    """Batched INDEPENDENT-mode step packing (least-finish-time).
+
+    The instance-batched twin of ``independent_decisions``: every live
+    instance's argmin-packing decision for step ``i`` comes from one
+    (batch, planes) finish-time computation.  Padded/dead rows are masked
+    to +inf, so per-instance argmins -- and the resulting splits -- are
+    bitwise identical to the per-instance loop.
+    """
+    b = len(st.cells)
+    chosen: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    for i in range(st.s_max):
+        live = i < st.n_s
+        if not live.any():
+            break
+        cfg_i = st.step_cfg[:, i][:, None]
+        extra = np.where(st.config == cfg_i, 0.0, st.t_recfg[:, None])
+        finish = st.free + extra + st.step_vol[:, i][:, None] / st.bw
+        finish = np.where(st.real, finish, np.inf)
+        j = np.argmin(finish, axis=1)
+        rows = np.nonzero(live)[0]
+        jl = j[rows]
+        st.free[rows, jl] = finish[rows, jl]
+        st.config[rows, jl] = st.step_cfg[rows, i]
+        chosen.append((rows, jl, st.step_vol[rows, i]))
+    splits: list[list[dict[int, float]]] = [[] for _ in range(b)]
+    for rows, jl, vols in chosen:
+        for bi, j, v in zip(rows, jl, vols):
+            splits[bi].append({int(j): float(v)})
+    return [
+        Decisions(tuple(s), mode=DependencyMode.INDEPENDENT)
+        for s in splits
+    ]
+
+
 def swot_greedy_grid(
     cells: Sequence[tuple[OpticalFabric, Pattern]],
     rollout_horizon: int = 24,
     max_enumerated_planes: int = 8,
     backend: "str | TimingBackend | None" = None,
+    mode: DependencyMode = DependencyMode.CHAIN,
 ) -> list[GridPlan]:
     """Plan a whole grid of (fabric, pattern) cells in one batched pass.
 
-    The instance-batched CHAIN greedy: every cell advances through the
-    per-step loop together, and each step's candidate reserve sets across
-    ALL cells are scored with one ``waterfill_batch`` + one row-batched
-    rollout call.  Per-cell decisions are bitwise identical to
-    ``swot_greedy_chain(..., polish=False)`` (property-tested); the final
+    The instance-batched greedy: every cell advances through the per-step
+    loop together.  CHAIN mode scores each step's candidate reserve sets
+    across ALL cells with one ``waterfill_batch`` + one row-batched
+    rollout call, drawing candidates from a reserve-set table precomputed
+    at grid construction; INDEPENDENT mode packs every cell's step by
+    least finish time in one batched argmin.  Per-cell decisions are
+    bitwise identical to ``swot_greedy_chain(..., polish=False)`` /
+    ``independent_decisions`` respectively (property-tested); the final
     CCT/utilization scoring runs through ``batch_evaluate`` on the chosen
     IR backend (``None`` = the ``REPRO_IR_BACKEND``/numpy default).
 
@@ -482,80 +784,12 @@ def swot_greedy_grid(
     """
     if not cells:
         return []
-    st = _GridState(cells)
-    b = len(st.cells)
-    splits: list[list[dict[int, float]]] = [[] for _ in range(b)]
-
-    for i in range(st.s_max):
-        live_insts = [bi for bi in range(b) if i < st.n_s[bi]]
-        if not live_insts:
-            break
-        row_inst: list[int] = []
-        row_trial_cfg: list[np.ndarray] = []
-        row_trial_free: list[np.ndarray] = []
-        row_reserved: list[np.ndarray] = []
-        row_valid: list[np.ndarray] = []
-        cand_slices: dict[int, slice] = {}
-        offset = 0
-        for bi in live_insts:
-            _, pattern = st.cells[bi]
-            trial_cfg, trial_free, reserved_mask, valid = (
-                _reserve_candidates(
-                    pattern, i, int(st.n_p[bi]), st.config[bi],
-                    st.free[bi], float(st.t_recfg[bi]),
-                    max_enumerated_planes,
-                )
-            )
-            n_cand = trial_cfg.shape[0]
-            row_inst.extend([bi] * n_cand)
-            row_trial_cfg.append(trial_cfg)
-            row_trial_free.append(trial_free)
-            row_reserved.append(reserved_mask)
-            row_valid.append(valid)
-            cand_slices[bi] = slice(offset, offset + n_cand)
-            offset += n_cand
-
-        inst = np.asarray(row_inst, dtype=np.int64)
-        trial_cfg = np.concatenate(row_trial_cfg, axis=0)
-        trial_free = np.concatenate(row_trial_free, axis=0)
-        reserved_mask = np.concatenate(row_reserved, axis=0)
-        valid = np.concatenate(row_valid, axis=0)
-        cfg_i = st.step_cfg[inst, i][:, None]
-        vol_i = st.step_vol[inst, i]
-        extra = np.where(trial_cfg == cfg_i, 0.0, st.t_recfg[inst][:, None])
-        ready = np.maximum(st.barrier[inst][:, None], trial_free + extra)
-        ready = np.where(reserved_mask | ~st.real[inst], _BIG, ready)
-        level, split = waterfill_batch(ready, st.bw[inst], vol_i)
-        valid &= (vol_i <= _EPS) | (split > 0.0).any(axis=1)
-        active = split > 0.0
-        new_free = np.where(active, level[:, None], trial_free)
-        new_cfg = np.where(active, cfg_i, trial_cfg)
-        scores = _rollout_rows(
-            st, inst, new_cfg, new_free, level, i + 1, rollout_horizon
-        )
-        scores = np.where(valid, scores, np.inf)
-        level_key = np.where(valid, level, np.inf)
-        for bi in live_insts:
-            sl = cand_slices[bi]
-            n_cand = sl.stop - sl.start
-            assert np.any(valid[sl]), "no feasible reserve set"
-            best = sl.start + int(
-                np.lexsort(
-                    (np.arange(n_cand), level_key[sl], scores[sl])
-                )[0]
-            )
-            st.config[bi] = new_cfg[best]
-            st.free[bi] = new_free[best]
-            st.barrier[bi] = float(level[best])
-            splits[bi].append(
-                {
-                    j: float(split[best, j])
-                    for j in range(int(st.n_p[bi]))
-                    if split[best, j] > 0.0
-                }
-            )
-
-    decisions = [Decisions(tuple(s)) for s in splits]
+    st = _GridState(cells, mode=mode,
+                    max_enumerated_planes=max_enumerated_planes)
+    if mode is DependencyMode.CHAIN:
+        decisions = _chain_grid_decisions(st, rollout_horizon)
+    else:
+        decisions = _independent_grid_decisions(st)
     result = batch_evaluate(
         [
             BatchInstance(fabric, pattern, dec)

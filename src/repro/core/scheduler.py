@@ -160,6 +160,7 @@ def plan_grid(
     cells: Sequence[tuple[OpticalFabric, Pattern]],
     backend: "str | TimingBackend | None" = None,
     rollout_horizon: int = 24,
+    mode: DependencyMode = DependencyMode.CHAIN,
 ) -> list[GridCellPlan]:
     """Plan a whole sweep grid in one instance-batched pass.
 
@@ -167,12 +168,15 @@ def plan_grid(
     (`swot_greedy_grid`), then ONE more ``batch_evaluate`` pass scores the
     strawman-ICR baseline for every cell -- both on the selected IR
     backend (``backend=None`` follows ``REPRO_IR_BACKEND``, default
-    numpy).  Use this for message-size x ``t_recfg`` x plane-count
-    sweeps; for single collectives (or when LP polish matters) use
+    numpy).  ``mode`` picks the per-cell planner: CHAIN (paper-faithful
+    reserve-set greedy) or INDEPENDENT (least-finish-time step packing,
+    bitwise-equal to per-instance ``swot_greedy_independent`` decisions).
+    Use this for message-size x ``t_recfg`` x plane-count sweeps; for
+    single collectives (or when LP polish matters) use
     ``plan_collective``.
     """
     plans = swot_greedy_grid(
-        cells, rollout_horizon=rollout_horizon, backend=backend
+        cells, rollout_horizon=rollout_horizon, backend=backend, mode=mode
     )
     straw = batch_evaluate(
         [strawman_instance(fabric, pattern) for fabric, pattern in cells],

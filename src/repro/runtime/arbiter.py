@@ -42,10 +42,16 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import os
 
 from repro.core.baselines import strawman_instance
 from repro.core.fabric import OpticalFabric
-from repro.core.ir import BatchInstance, batch_evaluate
+from repro.core.ir import (
+    BackendUnavailable,
+    BatchInstance,
+    batch_evaluate,
+    get_backend,
+)
 from repro.core.patterns import Pattern, get_pattern
 from repro.core.schedule import DependencyMode, Kind, Schedule
 from repro.core.scheduler import swot_schedule
@@ -56,6 +62,16 @@ from repro.core.tolerances import EPS as _EPS
 # Cap on lease-shrink candidate sets scored per resize (one batched IR
 # evaluation covers all of them).
 _MAX_RELEASE_CANDIDATES = 16
+
+# Candidate-batch size at and above which the arbiter auto-selects the
+# jax IR backend for lease re-scoring (numpy below it -- small batches
+# cannot amortize jit dispatch).  The default equals the candidate cap,
+# so exactly the maximum-size shrink batches -- the only ones where the
+# batched recurrence dominates the evaluation -- flip to jax; it must
+# stay <= _MAX_RELEASE_CANDIDATES or auto-selection becomes unreachable.
+# Override with the env var; <= 0 disables auto-selection entirely.
+ENV_BACKEND_THRESHOLD = "REPRO_ARBITER_BACKEND_THRESHOLD"
+_DEFAULT_BACKEND_THRESHOLD = _MAX_RELEASE_CANDIDATES
 
 # Namespace within which OCS config ids denote identical permutations.
 ConfigKey = tuple[str, int]  # (algorithm, n_nodes)
@@ -165,8 +181,10 @@ class FabricArbiter:
         self.method = method
         self.allow_independent = allow_independent
         self.rebalance = rebalance
-        # IR backend for batched lease-shrink re-scoring (None follows the
-        # REPRO_IR_BACKEND env default).
+        # IR backend for batched lease-shrink re-scoring.  None enables
+        # auto-selection: jax once the candidate batch reaches
+        # REPRO_ARBITER_BACKEND_THRESHOLD rows, the REPRO_IR_BACKEND env
+        # default (numpy) below it (see `_select_backend`).
         self.backend = backend
         self.stats = ArbiterStats()
         self.records: dict[int, JobRecord] = {}
@@ -442,6 +460,35 @@ class FabricArbiter:
         else:
             self._schedule_boundary(job)
 
+    # -- backend selection --------------------------------------------------
+    def _select_backend(self, n_candidates: int) -> str | None:
+        """IR backend for a batched re-scoring of ``n_candidates`` rows.
+
+        An explicit arbiter ``backend`` always wins.  Otherwise the jax
+        backend is auto-selected once the candidate batch reaches
+        ``REPRO_ARBITER_BACKEND_THRESHOLD`` rows (default
+        ``_DEFAULT_BACKEND_THRESHOLD``) -- large batches amortize jit
+        dispatch while small ones are faster on the numpy reference --
+        falling back to the env-default (numpy) when jax is unavailable
+        on this host.  A threshold <= 0 disables auto-selection.
+        """
+        if self.backend is not None:
+            return self.backend
+        raw = os.environ.get(ENV_BACKEND_THRESHOLD, "")
+        try:
+            threshold = int(raw) if raw else _DEFAULT_BACKEND_THRESHOLD
+        except ValueError as exc:
+            raise ValueError(
+                f"{ENV_BACKEND_THRESHOLD} must be an integer, got {raw!r}"
+            ) from exc
+        if threshold <= 0 or n_candidates < threshold:
+            return None  # env default: numpy unless REPRO_IR_BACKEND says
+        try:
+            get_backend("jax")
+        except BackendUnavailable:
+            return None
+        return "jax"
+
     # -- plan surgery -------------------------------------------------------
     def _cut_plan(self, job: _Job, cutoff: float) -> None:
         """Retire ``job``'s plan at ``cutoff``: account activities that
@@ -525,7 +572,9 @@ class FabricArbiter:
             starts.append(t0 - now)
             readies.append(ready)
         result = batch_evaluate(
-            instances, plane_ready=readies, backend=self.backend
+            instances,
+            plane_ready=readies,
+            backend=self._select_backend(len(instances)),
         )
         best_idx = 0
         best_score = (

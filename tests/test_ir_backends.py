@@ -29,7 +29,13 @@ from repro.core import (
     to_ir,
     validate_ir,
 )
-from repro.core.greedy import swot_greedy_chain, swot_greedy_grid
+from repro.core.greedy import (
+    independent_decisions,
+    swot_greedy_chain,
+    swot_greedy_grid,
+    swot_greedy_independent,
+)
+from repro.core.schedule import DependencyMode
 from repro.core.ir.backends import (
     BackendUnavailable,
     JaxBackend,
@@ -317,6 +323,95 @@ class TestGreedyGrid:
 
     def test_empty_grid(self):
         assert swot_greedy_grid([]) == []
+
+    def test_fallback_planes_match_per_instance_greedy_bitwise(self):
+        """Plane counts above ``max_enumerated_planes`` take the dynamic
+        soonest-free-prefix rows; they must stay bitwise-equal to the
+        per-instance reference too (incl. saturated prefixes when
+        ``max_enumerated_planes`` is tiny)."""
+        pattern = get_pattern("rabenseifner_allreduce", 8, 16e6)
+        cells = []
+        for planes in (3, 9, 12):
+            fabric = OpticalFabric(8, planes, t_recfg=2e-4)
+            cells.append((fabric, pattern))
+            cells.append((prestage_for(fabric, pattern), pattern))
+        for max_enum in (8, 2):
+            plans = swot_greedy_grid(
+                cells, max_enumerated_planes=max_enum
+            )
+            for (fabric, pattern_), plan in zip(cells, plans):
+                ref = swot_greedy_chain(
+                    fabric, pattern_, polish=False,
+                    max_enumerated_planes=max_enum,
+                )
+                assert plan.cct == ref.cct, (fabric.n_planes, max_enum)
+
+
+class TestGreedyGridIndependent:
+    """INDEPENDENT-mode grid parity: the batched argmin packing must make
+    bitwise-identical decisions to per-instance ``independent_decisions``
+    (and therefore to ``swot_greedy_independent(polish=False)``)."""
+
+    @settings(max_examples=12, deadline=None)
+    @given(insts=st.lists(_instances(), min_size=1, max_size=6))
+    def test_plan_grid_independent_matches_per_instance_bitwise(
+        self, insts
+    ):
+        cells = [_cell(inst) for inst in insts]
+        plans = plan_grid(cells, mode=DependencyMode.INDEPENDENT)
+        for (fabric, pattern), cell_plan in zip(cells, plans):
+            ref = independent_decisions(fabric, pattern)
+            assert cell_plan.plan.decisions == ref
+            sched = swot_greedy_independent(
+                fabric, pattern, polish=False
+            )
+            assert cell_plan.plan.cct == sched.cct
+
+    def test_grid_plans_validate_as_independent(self):
+        pattern = get_pattern("pairwise_alltoall", 8, 16e6)
+        cells = [
+            (OpticalFabric(8, p, t_recfg=2e-4), pattern) for p in (2, 4)
+        ]
+        for plan in swot_greedy_grid(
+            cells, mode=DependencyMode.INDEPENDENT
+        ):
+            assert plan.decisions.mode is DependencyMode.INDEPENDENT
+            plan.schedule().validate()
+
+
+class TestCandidatePaddingIsolation:
+    """Regression: the precomputed padded reserve-set tensor must not let
+    one cell's candidates (or padding rows) bleed into another cell's
+    decisions -- every cell's plan must be independent of its batch
+    companions."""
+
+    def _mixed_cells(self):
+        specs = [
+            ("rabenseifner_allreduce", 8, 40e6, 1, 0.0),
+            ("pairwise_alltoall", 10, 3e6, 4, 2e-4),
+            ("bruck_alltoall", 5, 7e6, 3, 1e-4),
+            ("rabenseifner_allreduce", 4, 1e6, 8, 4e-4),
+            ("ring_allreduce", 6, 12e6, 10, 5e-5),  # dynamic fallback row
+        ]
+        cells = []
+        for alg, n, size, planes, t_recfg in specs:
+            pattern = get_pattern(alg, n, size)
+            fabric = OpticalFabric(n, planes, t_recfg=t_recfg)
+            cells.append((fabric, pattern))
+        return cells
+
+    @pytest.mark.parametrize(
+        "mode", [DependencyMode.CHAIN, DependencyMode.INDEPENDENT]
+    )
+    def test_decisions_independent_of_batch_companions(self, mode):
+        cells = self._mixed_cells()
+        together = swot_greedy_grid(cells, mode=mode)
+        for k, cell in enumerate(cells):
+            alone = swot_greedy_grid([cell], mode=mode)[0]
+            assert together[k].decisions == alone.decisions, (
+                f"cell {k} decisions changed when batched ({mode})"
+            )
+            assert together[k].cct == alone.cct
 
 
 class TestMilpPlaneReady:
