@@ -11,7 +11,12 @@ What is gated (and why):
 * **Deterministic sweep points** -- every ``BENCH_sweep.json`` point
   that is not a wall-clock timing row (CCTs, queueing delays,
   utilization: simulated quantities, identical on any machine).  A
-  value drifting above baseline by more than the band fails.
+  value drifting above baseline by more than the band fails.  This
+  includes the Topology-Bypassing rows (``bypass_*_cct`` per-point CCTs
+  and ``bypass_*_cct_ratio`` bypass/no-bypass ratios, which are <= 1 by
+  the guarded pick): a bypass CCT reduction that shrinks past the band
+  fails here, on top of the strict in-run gate ``ir_sweep.bypass_sweep``
+  asserts at the documented high-``t_recfg`` point.
 * **Speedup ratios** -- ``speedup_vs_numpy`` per backend from
   ``BENCH_backends.json`` and the INDEPENDENT-grid
   ``speedup_vs_per_instance``.  Ratios compare two timings from the

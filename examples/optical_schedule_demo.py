@@ -8,8 +8,13 @@ the paper's Phase 1/Phase 2 flow end to end.  Closes with a batched
 what-if sweep over reconfiguration latencies through the array IR
 (`repro.core.batch_evaluate`) on a selectable timing backend.
 
+``--bypass`` appends a Topology-Bypassing section: the EP all-to-all is
+re-planned with relay candidates up to ``--bypass-depth`` hops
+(`repro.core.bypass`), printing the relay timeline and the CCT
+reduction vs the no-bypass greedy across the ``t_recfg`` axis.
+
     PYTHONPATH=src python examples/optical_schedule_demo.py \
-        [--backend numpy|jax|pallas]
+        [--backend numpy|jax|pallas] [--bypass] [--bypass-depth H]
 """
 
 import argparse
@@ -21,8 +26,10 @@ from repro.core import (
     SwotShim,
     TPU_V5E_LINK_BANDWIDTH,
     batch_evaluate,
+    pairwise_alltoall,
     strawman_instance,
 )
+from repro.core.greedy import swot_greedy_chain
 from repro.core.planner import profile_train_step
 from repro.models.lm import _decoder_specs  # spec-only; no allocation
 from repro.sharding.rules import MeshContext, abstract_mesh_compat
@@ -36,6 +43,19 @@ def main() -> None:
         default=None,
         help="IR timing backend for the what-if sweep "
         "(default: REPRO_IR_BACKEND env, else numpy)",
+    )
+    parser.add_argument(
+        "--bypass",
+        action="store_true",
+        help="add the Topology-Bypassing section (relay-routing the EP "
+        "all-to-all over installed circuits)",
+    )
+    parser.add_argument(
+        "--bypass-depth",
+        type=int,
+        default=2,
+        metavar="H",
+        help="maximum relay hops for bypass candidates (default 2)",
     )
     args = parser.parse_args()
     cfg = get_config("qwen2_moe_a2_7b")
@@ -103,6 +123,45 @@ def main() -> None:
         )
         print(f"  {plan.pattern.name:24s} {points}")
         k += len(recfgs)
+
+    if args.bypass:
+        # Topology Bypassing: re-plan the EP all-to-all with relay
+        # candidates -- traffic for an uninstalled pairing rides
+        # already-installed circuits at bandwidth/h instead of waiting
+        # out a reconfiguration.
+        ep_sizes = [
+            plan.pattern.total_volume
+            for plan in shim.plans
+            if plan.pattern.name == "pairwise_alltoall"
+        ]
+        size = ep_sizes[0] if ep_sizes else 32e6
+        pattern = pairwise_alltoall(fabric.n_nodes, size)
+        print()
+        print(
+            f"--- topology bypassing (depth {args.bypass_depth}): "
+            f"pairwise all-to-all {size / 1e6:.1f}MB/node on "
+            f"{fabric.n_nodes}x{fabric.n_planes} ---"
+        )
+        for t_recfg in recfgs:
+            what_if = OpticalFabric(
+                n_nodes=fabric.n_nodes,
+                n_planes=fabric.n_planes,
+                bandwidth=fabric.bandwidth,
+                t_recfg=t_recfg,
+            ).prestaged(pattern.steps[0].config)
+            base = swot_greedy_chain(what_if, pattern, polish=False)
+            byp = swot_greedy_chain(
+                what_if, pattern, polish=False,
+                bypass_depth=args.bypass_depth,
+            )
+            relays = sum(1 for a in byp.activities if a.route >= 0)
+            print(
+                f"  t_recfg={t_recfg * 1e6:5.0f}us: no-bypass "
+                f"{base.cct * 1e6:8.1f}us  bypass {byp.cct * 1e6:8.1f}us "
+                f"({1 - byp.cct / base.cct:+.1%}, {relays} relay hops)"
+            )
+            if t_recfg == recfgs[-1] and relays:
+                print(byp.timeline())
 
 
 if __name__ == "__main__":

@@ -22,6 +22,11 @@ from repro.core.baselines import (
     strawman_icr,
     strawman_instance,
 )
+from repro.core.bypass import (
+    config_perms,
+    enumerate_relay_routes,
+    relay_depth_table,
+)
 from repro.core.fabric import (
     FIG5_LINK_BANDWIDTH,
     PAPER_LINK_BANDWIDTH,
@@ -32,6 +37,7 @@ from repro.core.fabric import (
 from repro.core.greedy import (
     GridPlan,
     independent_decisions,
+    independent_split_decisions,
     swot_greedy,
     swot_greedy_grid,
 )
@@ -65,6 +71,7 @@ from repro.core.patterns import (
     ring_allreduce,
 )
 from repro.core.schedule import (
+    BypassRoute,
     Decisions,
     DependencyMode,
     Kind,
@@ -86,6 +93,7 @@ __all__ = [
     "BackendUnavailable",
     "BatchInstance",
     "BatchResult",
+    "BypassRoute",
     "CollectiveRequest",
     "Decisions",
     "DependencyMode",
@@ -114,6 +122,8 @@ __all__ = [
     "batch_evaluate",
     "bruck_alltoall",
     "cct_of",
+    "config_perms",
+    "enumerate_relay_routes",
     "evaluate_decisions",
     "execute",
     "execute_ir",
@@ -130,6 +140,7 @@ __all__ = [
     "prestage_for",
     "rabenseifner_allreduce",
     "reduce_scatter",
+    "relay_depth_table",
     "ring_allreduce",
     "solve_milp",
     "strawman_cct",
@@ -137,6 +148,7 @@ __all__ = [
     "strawman_icr",
     "strawman_instance",
     "independent_decisions",
+    "independent_split_decisions",
     "swot_greedy",
     "swot_greedy_grid",
     "swot_schedule",

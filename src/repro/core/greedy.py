@@ -19,7 +19,13 @@ CHAIN mode (paper-faithful):
   an upcoming config); the remaining planes carry the step's volume with
   water-filling splits (equalized finish times given per-plane ready
   times).  Candidates are scored by rolling out the remaining steps with
-  the no-reserve policy and comparing final CCT.
+  the no-reserve policy and comparing final CCT.  With ``bypass_depth >=
+  2``, every reserve-set candidate gains a Topology-Bypassing twin
+  (`repro.core.bypass`): config-mismatched planes with an ``h``-hop
+  self-composition relay serve over their installed circuit at ``bw / h``
+  instead of paying ``t_recfg`` -- decisive when reconfiguration
+  dominates step transmission time -- and the bypass plan is kept only on
+  a strict CCT win over the no-bypass plan.
 
 INDEPENDENT mode (beyond-paper, for collectives whose steps carry no data
 dependency, e.g. pairwise all-to-all):
@@ -51,20 +57,33 @@ from typing import TYPE_CHECKING, Sequence
 
 import numpy as np
 
+from repro.core.bypass import relay_depth_table
 from repro.core.fabric import OpticalFabric
 from repro.core.ir import (
     NO_CONFIG,
     _BIG,
     BatchInstance,
     batch_evaluate,
+    evaluate_decisions,
     fabric_arrays,
     rollout_batch,
     waterfill_batch,
 )
+from repro.core.ir.backends import (
+    DEFAULT_GRID_BACKEND_THRESHOLD,
+    ENV_GRID_BACKEND_THRESHOLD,
+    select_backend_by_size,
+)
 from repro.core.patterns import Pattern
-from repro.core.schedule import Decisions, DependencyMode, Schedule
+from repro.core.schedule import (
+    BypassRoute,
+    Decisions,
+    DependencyMode,
+    Schedule,
+)
 from repro.core.simulator import execute
 from repro.core.tolerances import EPS as _EPS
+from repro.core.tolerances import EPS_VOLUME as _EPS_VOLUME
 
 if TYPE_CHECKING:
     from repro.core.ir.backends import TimingBackend
@@ -166,22 +185,39 @@ def has_ready_offsets(plane_ready: Sequence[float] | None) -> bool:
     return plane_ready is not None and any(r > 0.0 for r in plane_ready)
 
 
-def swot_greedy_chain(
+def _chain_decisions(
     fabric: OpticalFabric,
     pattern: Pattern,
-    rollout_horizon: int = 24,
-    max_enumerated_planes: int = 8,
-    polish: bool = True,
-    plane_ready: Sequence[float] | None = None,
-) -> Schedule:
-    """Greedy CHAIN-mode (paper-faithful P3) scheduler."""
+    rollout_horizon: int,
+    max_enumerated_planes: int,
+    plane_ready: Sequence[float] | None,
+    depth_tab: np.ndarray | None = None,
+) -> Decisions:
+    """The CHAIN-mode per-step candidate loop, as discrete decisions.
+
+    ``depth_tab`` (from `repro.core.bypass.relay_depth_table`) enables
+    Topology-Bypassing candidates: every reserve-set row gains a twin in
+    which non-reserved, config-mismatched planes with a self-composition
+    relay of ``h`` hops serve the step over their *installed* circuit at
+    effective bandwidth ``bw / h`` instead of paying ``t_recfg`` -- the
+    same water-fill/rollout scoring decides between reconfiguring and
+    relaying.  ``None`` reproduces the pre-bypass greedy bit-for-bit.
+    """
     n_planes = fabric.n_planes
     t_recfg = fabric.t_recfg
     bw, config, free = _initial_state(fabric, plane_ready)
+    # The executor installs configs *lazily* (a plane reconfigures only
+    # when it next serves a direct step), so the planning state `config`
+    # -- which accumulates speculative reserve retargets -- can run ahead
+    # of what is physically installed.  Bypass relays ride the physical
+    # state, so it is tracked separately.
+    installed = config.copy()
     step_configs = np.asarray(pattern.configs, dtype=np.int64)
     step_volumes = np.asarray(pattern.volumes, dtype=np.float64)
     barrier = 0.0
     splits: list[dict[int, float]] = []
+    bypass_steps: list[tuple[BypassRoute, ...]] = []
+    with_bypass = depth_tab is not None
 
     for i, step in enumerate(pattern.steps):
         # Candidate reserve sets: reserved planes skip this step and
@@ -191,18 +227,50 @@ def swot_greedy_chain(
             pattern, i, n_planes, config, free, t_recfg,
             max_enumerated_planes,
         )
+        byp_h = np.zeros_like(trial_cfg)
+        if with_bypass:
+            # Bypass twin rows: per plane, the minimal self-relay depth
+            # from its *installed* circuit toward this step's pairing
+            # (0 = no relay).  Rows without any relayable plane stay
+            # invalid twins, so the base row always wins ties (it
+            # precedes in candidate order).
+            c_max = depth_tab.shape[0]
+            known = (installed >= 0) & (installed < c_max)
+            plane_hops = np.where(
+                known,
+                depth_tab[np.clip(installed, 0, c_max - 1), step.config],
+                0,
+            )
+            hops = np.where(
+                reserved_mask | (trial_cfg == step.config),
+                0,
+                plane_hops[None, :],
+            )
+            trial_cfg = np.concatenate([trial_cfg, trial_cfg], axis=0)
+            trial_free = np.concatenate([trial_free, trial_free], axis=0)
+            reserved_mask = np.concatenate(
+                [reserved_mask, reserved_mask], axis=0
+            )
+            valid = np.concatenate([valid, valid & hops.any(axis=1)])
+            byp_h = np.concatenate([np.zeros_like(hops), hops], axis=0)
         n_cand = trial_cfg.shape[0]
+        bypassing = byp_h >= 2
 
-        extra = np.where(trial_cfg == step.config, 0.0, t_recfg)
+        extra = np.where(
+            (trial_cfg == step.config) | bypassing, 0.0, t_recfg
+        )
         ready = np.maximum(barrier, trial_free + extra)
         ready = np.where(reserved_mask, _BIG, ready)
-        level, split = waterfill_batch(ready, bw, step.volume)
+        bw_eff = np.where(bypassing, bw / np.maximum(byp_h, 1), bw)
+        level, split = waterfill_batch(ready, bw_eff, step.volume)
         if step.volume > _EPS:
             valid &= (split > 0.0).any(axis=1)
         assert np.any(valid), "no feasible reserve set"
         active = split > 0.0
         new_free = np.where(active, level[:, None], trial_free)
-        new_cfg = np.where(active, step.config, trial_cfg)
+        # Relaying planes keep their installed config (that is the point
+        # of bypassing); only direct serves install the step's config.
+        new_cfg = np.where(active & ~bypassing, step.config, trial_cfg)
         scores = rollout_batch(
             bw,
             t_recfg,
@@ -226,16 +294,64 @@ def swot_greedy_chain(
         config = new_cfg[best]
         free = new_free[best]
         barrier = float(level[best])
+        row_byp = byp_h[best]
+        # Physically-installed state: direct serves install the step's
+        # config (the executor's lazy reconfiguration); bypass relays and
+        # reserve retargets leave it untouched.  The EPS_VOLUME threshold
+        # mirrors the executor's idle-split filter, so this tracks what
+        # the executor actually installs.
+        installed = np.where(
+            (split[best] > _EPS_VOLUME) & ~bypassing[best],
+            step.config,
+            installed,
+        )
         splits.append(
             {
                 j: float(split[best, j])
                 for j in range(n_planes)
-                if split[best, j] > 0.0
+                if split[best, j] > 0.0 and row_byp[j] < 2
             }
         )
+        bypass_steps.append(
+            tuple(
+                BypassRoute(
+                    planes=(j,) * int(row_byp[j]),
+                    volume=float(split[best, j]),
+                )
+                for j in range(n_planes)
+                if split[best, j] > 0.0 and row_byp[j] >= 2
+            )
+        )
 
+    return Decisions(
+        tuple(splits),
+        bypass=tuple(bypass_steps) if with_bypass else None,
+    )
+
+
+def swot_greedy_chain(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    rollout_horizon: int = 24,
+    max_enumerated_planes: int = 8,
+    polish: bool = True,
+    plane_ready: Sequence[float] | None = None,
+    bypass_depth: int = 0,
+) -> Schedule:
+    """Greedy CHAIN-mode (paper-faithful P3) scheduler.
+
+    ``bypass_depth >= 2`` additionally plans a Topology-Bypassing variant
+    (relay candidates up to that many hops, `repro.core.bypass`) and
+    keeps it only when its CCT strictly beats the no-bypass schedule --
+    so enabling bypassing never hurts.  Bypass-winning schedules skip LP
+    polish (the LP models reconfigure-then-transmit structures only).
+    """
+    decisions = _chain_decisions(
+        fabric, pattern, rollout_horizon, max_enumerated_planes,
+        plane_ready,
+    )
     schedule = execute(
-        fabric, pattern, Decisions(tuple(splits)), plane_ready=plane_ready
+        fabric, pattern, decisions, plane_ready=plane_ready
     )
     # The fixed-structure LP anchors plane chains at their ready offsets,
     # so polish applies to staggered-lease re-plans too; the (much more
@@ -246,6 +362,25 @@ def swot_greedy_chain(
         schedule = lp_polish(schedule, plane_ready=plane_ready)
         if not has_ready_offsets(plane_ready):
             schedule = _structure_local_search(fabric, pattern, schedule)
+    if bypass_depth >= 2:
+        depth_tab = relay_depth_table(pattern, bypass_depth)
+        if depth_tab.any():
+            byp = _chain_decisions(
+                fabric, pattern, rollout_horizon, max_enumerated_planes,
+                plane_ready, depth_tab,
+            )
+            # Guarded pick: replace only on a strict CCT win (scored on
+            # the deterministic numpy backend, bitwise-equal to the
+            # object executor) so bypass-enabled never regresses.
+            if byp.bypass is not None and any(byp.bypass):
+                byp_cct = evaluate_decisions(
+                    fabric, pattern, byp, plane_ready=plane_ready,
+                    backend="numpy",
+                ).cct
+                if byp_cct < schedule.cct:
+                    schedule = execute(
+                        fabric, pattern, byp, plane_ready=plane_ready
+                    )
     return schedule
 
 
@@ -339,19 +474,59 @@ def swot_greedy_independent(
     return schedule
 
 
+def independent_split_decisions(
+    fabric: OpticalFabric,
+    pattern: Pattern,
+    plane_ready: Sequence[float] | None = None,
+) -> Decisions:
+    """Water-filled INDEPENDENT-mode decisions (one instance).
+
+    Each step's volume splits across ALL planes with equalized finish
+    times -- the plane-heterogeneous alternative to the argmin packing of
+    ``independent_decisions``: straggler planes (bandwidth scale < 1)
+    absorb proportionally less instead of stalling a whole step.  The
+    single-instance reference the instance-batched grid path
+    (``swot_greedy_grid(mode=INDEPENDENT, independent_split=True)``) is
+    bitwise-pinned against.
+    """
+    bw, config, free = _initial_state(fabric, plane_ready)
+    splits: list[dict[int, float]] = []
+    for step in pattern.steps:
+        extra = np.where(config == step.config, 0.0, fabric.t_recfg)
+        ready = (free + extra)[None, :]
+        level, split = waterfill_batch(ready, bw, step.volume)
+        active = split[0] > 0.0
+        free = np.where(active, level[0], free)
+        config = np.where(active, step.config, config)
+        splits.append(
+            {
+                j: float(split[0, j])
+                for j in range(fabric.n_planes)
+                if split[0, j] > 0.0
+            }
+        )
+    return Decisions(tuple(splits), mode=DependencyMode.INDEPENDENT)
+
+
 def swot_greedy(
     fabric: OpticalFabric,
     pattern: Pattern,
     mode: DependencyMode = DependencyMode.CHAIN,
     plane_ready: Sequence[float] | None = None,
+    bypass_depth: int = 0,
 ) -> Schedule:
     if mode is DependencyMode.CHAIN:
-        return swot_greedy_chain(fabric, pattern, plane_ready=plane_ready)
+        return swot_greedy_chain(
+            fabric, pattern, plane_ready=plane_ready,
+            bypass_depth=bypass_depth,
+        )
     # Every CHAIN-legal schedule is INDEPENDENT-legal (the barrier is just
     # conservative), so independent mode returns the better of step-packing
     # and the chain scheduler -- splitting wins when steps are few or wide.
     indep = swot_greedy_independent(fabric, pattern, plane_ready=plane_ready)
-    chain = swot_greedy_chain(fabric, pattern, plane_ready=plane_ready)
+    chain = swot_greedy_chain(
+        fabric, pattern, plane_ready=plane_ready, bypass_depth=bypass_depth
+    )
     return chain if chain.cct < indep.cct else indep
 
 
@@ -393,11 +568,13 @@ class _GridState:
         cells: Sequence[tuple[OpticalFabric, Pattern]],
         mode: DependencyMode = DependencyMode.CHAIN,
         max_enumerated_planes: int = 8,
+        bypass_depth: int = 0,
     ):
         b = len(cells)
         self.cells = list(cells)
         self.mode = mode
         self.max_enumerated_planes = max_enumerated_planes
+        self.bypass_depth = bypass_depth
         self.n_p = np.array(
             [f.n_planes for f, _ in cells], dtype=np.int64
         )
@@ -427,6 +604,24 @@ class _GridState:
         if mode is DependencyMode.CHAIN:
             self._init_chain_tables()
             self._init_candidate_table()
+        # Physically-installed configs (the executor's lazy state): only
+        # direct serves advance it, never reserve retargets -- bypass
+        # relay depths are derived from this, not from `config`.
+        self.installed = self.config.copy()
+        # Per-instance self-relay depth tables, padded to the grid's max
+        # config-id range; all-zero (shape (B, 0, 0)) when bypassing is
+        # off, which turns the bypass row expansion into a no-op.
+        if mode is DependencyMode.CHAIN and bypass_depth >= 2:
+            tabs = [
+                relay_depth_table(pattern, bypass_depth)
+                for _, pattern in cells
+            ]
+            c_max = max(t.shape[0] for t in tabs)
+            self.depth_tab = np.zeros((b, c_max, c_max), dtype=np.int64)
+            for bi, t in enumerate(tabs):
+                self.depth_tab[bi, : t.shape[0], : t.shape[1]] = t
+        else:
+            self.depth_tab = np.zeros((b, 0, 0), dtype=np.int64)
 
     def _init_chain_tables(self) -> None:
         """Rollout tail tables + the ``prev_same`` first-occurrence table."""
@@ -667,7 +862,8 @@ def _chain_grid_decisions(
     arrays; the Decisions dicts are materialized after the loop.
     """
     b = len(st.cells)
-    chosen: list[tuple[np.ndarray, np.ndarray]] = []
+    with_bypass = st.bypass_depth >= 2
+    chosen: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
     for i in range(st.s_max):
         live = i < st.n_s
         if not live.any():
@@ -675,19 +871,59 @@ def _chain_grid_decisions(
         inst, starts, trial_cfg, trial_free, reserved_mask, valid = (
             _reserve_rows(st, i, live)
         )
+        byp_h = np.zeros_like(trial_cfg)
+        if with_bypass and st.depth_tab.shape[1]:
+            # Bypass twin rows, appended after ALL base rows: within one
+            # instance every base row still precedes every bypass row in
+            # the global candidate order, which is exactly the
+            # per-instance `_chain_decisions` enumeration -- so the
+            # instance-keyed lexsort selects identically.
+            c_max = st.depth_tab.shape[1]
+            scfg = st.step_cfg[inst, i]
+            inst_rows = st.installed[inst]
+            known = (inst_rows >= 0) & (inst_rows < c_max)
+            plane_hops = np.where(
+                known,
+                st.depth_tab[
+                    inst[:, None],
+                    np.clip(inst_rows, 0, c_max - 1),
+                    np.clip(scfg, 0, c_max - 1)[:, None],
+                ],
+                0,
+            )
+            hops = np.where(
+                reserved_mask | (trial_cfg == scfg[:, None]),
+                0,
+                plane_hops,
+            )
+            inst = np.concatenate([inst, inst])
+            trial_cfg = np.concatenate([trial_cfg, trial_cfg], axis=0)
+            trial_free = np.concatenate([trial_free, trial_free], axis=0)
+            reserved_mask = np.concatenate(
+                [reserved_mask, reserved_mask], axis=0
+            )
+            valid = np.concatenate([valid, valid & hops.any(axis=1)])
+            byp_h = np.concatenate([np.zeros_like(hops), hops], axis=0)
+        bypassing = byp_h >= 2
         cfg_i = st.step_cfg[inst, i][:, None]
         vol_i = st.step_vol[inst, i]
-        extra = np.where(trial_cfg == cfg_i, 0.0, st.t_recfg[inst][:, None])
+        extra = np.where(
+            (trial_cfg == cfg_i) | bypassing,
+            0.0,
+            st.t_recfg[inst][:, None],
+        )
         ready = np.maximum(st.barrier[inst][:, None], trial_free + extra)
         ready = np.where(reserved_mask | ~st.real[inst], _BIG, ready)
-        level, split = waterfill_batch(ready, st.bw[inst], vol_i)
+        bw_rows = st.bw[inst]
+        bw_eff = np.where(bypassing, bw_rows / np.maximum(byp_h, 1), bw_rows)
+        level, split = waterfill_batch(ready, bw_eff, vol_i)
         valid = valid & ((vol_i <= _EPS) | (split > 0.0).any(axis=1))
-        assert np.logical_or.reduceat(valid, starts).all(), (
-            "no feasible reserve set"
-        )
+        feasible = np.zeros(b, dtype=bool)
+        np.logical_or.at(feasible, inst, valid)
+        assert feasible[live].all(), "no feasible reserve set"
         active = split > 0.0
         new_free = np.where(active, level[:, None], trial_free)
-        new_cfg = np.where(active, cfg_i, trial_cfg)
+        new_cfg = np.where(active & ~bypassing, cfg_i, trial_cfg)
         scores = _rollout_rows(
             st, inst, new_cfg, new_free, level, i + 1, rollout_horizon
         )
@@ -708,19 +944,46 @@ def _chain_grid_decisions(
         st.config[live_insts] = new_cfg[best]
         st.free[live_insts] = new_free[best]
         st.barrier[live_insts] = level[best]
-        chosen.append((live_insts, split[best]))
+        # Installed state mirrors the executor's idle-split filter, like
+        # the per-instance loop.
+        st.installed[live_insts] = np.where(
+            (split[best] > _EPS_VOLUME) & ~bypassing[best],
+            st.step_cfg[live_insts, i][:, None],
+            st.installed[live_insts],
+        )
+        chosen.append((live_insts, split[best], byp_h[best]))
 
     splits: list[list[dict[int, float]]] = [[] for _ in range(b)]
-    for live_insts, split in chosen:
+    bypass_steps: list[list[tuple[BypassRoute, ...]]] = [
+        [] for _ in range(b)
+    ]
+    for live_insts, split, byph in chosen:
         for row, bi in enumerate(live_insts):
+            n_p = int(st.n_p[bi])
             splits[bi].append(
                 {
                     j: float(split[row, j])
-                    for j in range(int(st.n_p[bi]))
-                    if split[row, j] > 0.0
+                    for j in range(n_p)
+                    if split[row, j] > 0.0 and byph[row, j] < 2
                 }
             )
-    return [Decisions(tuple(s)) for s in splits]
+            bypass_steps[bi].append(
+                tuple(
+                    BypassRoute(
+                        planes=(j,) * int(byph[row, j]),
+                        volume=float(split[row, j]),
+                    )
+                    for j in range(n_p)
+                    if split[row, j] > 0.0 and byph[row, j] >= 2
+                )
+            )
+    return [
+        Decisions(
+            tuple(s),
+            bypass=tuple(bp) if with_bypass else None,
+        )
+        for s, bp in zip(splits, bypass_steps)
+    ]
 
 
 def _independent_grid_decisions(st: _GridState) -> list[Decisions]:
@@ -758,12 +1021,56 @@ def _independent_grid_decisions(st: _GridState) -> list[Decisions]:
     ]
 
 
+def _independent_split_grid_decisions(st: _GridState) -> list[Decisions]:
+    """Batched INDEPENDENT-mode water-fill splitting.
+
+    The instance-batched twin of ``independent_split_decisions``: every
+    live instance's step splits across its planes in ONE
+    ``waterfill_batch`` call with per-row volumes -- the
+    plane-heterogeneous path (straggler planes absorb proportionally
+    less), where argmin packing would stall whole steps on slow planes.
+    Padded planes are masked to ``_BIG`` ready times, so per-instance
+    levels and splits are bitwise identical to the per-instance loop.
+    """
+    b = len(st.cells)
+    chosen: list[tuple[np.ndarray, np.ndarray]] = []
+    for i in range(st.s_max):
+        live = i < st.n_s
+        if not live.any():
+            break
+        cfg_i = st.step_cfg[:, i][:, None]
+        extra = np.where(st.config == cfg_i, 0.0, st.t_recfg[:, None])
+        ready = np.where(st.real, st.free + extra, _BIG)
+        vol_i = np.where(live, st.step_vol[:, i], 0.0)
+        level, split = waterfill_batch(ready, st.bw, vol_i)
+        active = (split > 0.0) & live[:, None]
+        st.free = np.where(active, level[:, None], st.free)
+        st.config = np.where(active, cfg_i, st.config)
+        chosen.append((np.nonzero(live)[0], split))
+    splits: list[list[dict[int, float]]] = [[] for _ in range(b)]
+    for rows, split in chosen:
+        for bi in rows:
+            splits[bi].append(
+                {
+                    j: float(split[bi, j])
+                    for j in range(int(st.n_p[bi]))
+                    if split[bi, j] > 0.0
+                }
+            )
+    return [
+        Decisions(tuple(s), mode=DependencyMode.INDEPENDENT)
+        for s in splits
+    ]
+
+
 def swot_greedy_grid(
     cells: Sequence[tuple[OpticalFabric, Pattern]],
     rollout_horizon: int = 24,
     max_enumerated_planes: int = 8,
     backend: "str | TimingBackend | None" = None,
     mode: DependencyMode = DependencyMode.CHAIN,
+    bypass_depth: int = 0,
+    independent_split: bool = False,
 ) -> list[GridPlan]:
     """Plan a whole grid of (fabric, pattern) cells in one batched pass.
 
@@ -772,11 +1079,27 @@ def swot_greedy_grid(
     across ALL cells with one ``waterfill_batch`` + one row-batched
     rollout call, drawing candidates from a reserve-set table precomputed
     at grid construction; INDEPENDENT mode packs every cell's step by
-    least finish time in one batched argmin.  Per-cell decisions are
-    bitwise identical to ``swot_greedy_chain(..., polish=False)`` /
-    ``independent_decisions`` respectively (property-tested); the final
-    CCT/utilization scoring runs through ``batch_evaluate`` on the chosen
-    IR backend (``None`` = the ``REPRO_IR_BACKEND``/numpy default).
+    least finish time in one batched argmin -- or, with
+    ``independent_split=True``, water-fills every cell's step across its
+    planes in one per-row-volume ``waterfill_batch`` call (the
+    plane-heterogeneous path).  Per-cell decisions are bitwise identical
+    to ``swot_greedy_chain(..., polish=False)`` /
+    ``independent_decisions`` / ``independent_split_decisions``
+    respectively (property-tested); the final CCT/utilization scoring
+    runs through ``batch_evaluate`` on the chosen IR backend.
+
+    ``backend=None`` auto-selects jax once the grid reaches
+    ``REPRO_GRID_BACKEND_THRESHOLD`` cells (default
+    ``DEFAULT_GRID_BACKEND_THRESHOLD``; the arbiter's shared
+    `select_backend_by_size` policy), else follows the
+    ``REPRO_IR_BACKEND``/numpy default; an explicit ``backend`` always
+    wins.
+
+    ``bypass_depth >= 2`` (CHAIN mode) plans a Topology-Bypassing twin
+    grid and keeps, per cell, whichever decisions score the strictly
+    better CCT on the deterministic numpy backend -- the same guarded
+    pick as ``swot_greedy_chain``, so per-cell parity holds with
+    ``swot_greedy_chain(polish=False, bypass_depth=...)``.
 
     LP polish is deliberately per-instance-only (it solves one LP per
     cell), so the grid path trades it away for throughput; sweeps that
@@ -784,10 +1107,62 @@ def swot_greedy_grid(
     """
     if not cells:
         return []
+    if independent_split and mode is DependencyMode.CHAIN:
+        raise ValueError(
+            "independent_split=True requires mode=INDEPENDENT"
+        )
+    backend = select_backend_by_size(
+        len(cells),
+        ENV_GRID_BACKEND_THRESHOLD,
+        DEFAULT_GRID_BACKEND_THRESHOLD,
+        explicit=backend,
+    )
     st = _GridState(cells, mode=mode,
                     max_enumerated_planes=max_enumerated_planes)
     if mode is DependencyMode.CHAIN:
         decisions = _chain_grid_decisions(st, rollout_horizon)
+        st_byp = (
+            _GridState(
+                cells, mode=mode,
+                max_enumerated_planes=max_enumerated_planes,
+                bypass_depth=bypass_depth,
+            )
+            if bypass_depth >= 2
+            else None
+        )
+        # Mirror the per-instance `depth_tab.any()` guard: a grid with
+        # no self-relay opportunity anywhere (e.g. all xor pairings)
+        # skips the twin pass and its two scoring passes entirely.
+        if st_byp is not None and st_byp.depth_tab.any():
+            byp_decisions = _chain_grid_decisions(st_byp, rollout_horizon)
+            base_cct = batch_evaluate(
+                [
+                    BatchInstance(fabric, pattern, dec)
+                    for (fabric, pattern), dec in zip(cells, decisions)
+                ],
+                backend="numpy",
+            ).cct
+            byp_cct = batch_evaluate(
+                [
+                    BatchInstance(fabric, pattern, dec)
+                    for (fabric, pattern), dec in zip(cells, byp_decisions)
+                ],
+                backend="numpy",
+            ).cct
+            decisions = [
+                byp
+                if (
+                    byp.bypass is not None
+                    and any(byp.bypass)
+                    and byp_cct[bi] < base_cct[bi]
+                )
+                else base
+                for bi, (base, byp) in enumerate(
+                    zip(decisions, byp_decisions)
+                )
+            ]
+    elif independent_split:
+        decisions = _independent_split_grid_decisions(st)
     else:
         decisions = _independent_grid_decisions(st)
     result = batch_evaluate(

@@ -92,7 +92,10 @@ def pad_packed(
         "t_recfg": 0.0,
         "chain": False,
         "ready": 0.0,
+        "byp_vol": 0.0,
+        "byp_plane": -1,
     }
+    r_h = packed["byp_vol"].shape[2:] + packed["byp_plane"].shape[3:]
     tgt_shape = {
         "vol": (b_pad, s_pad, p_pad),
         "step_vol": (b_pad, s_pad),
@@ -104,6 +107,10 @@ def pad_packed(
         "t_recfg": (b_pad,),
         "chain": (b_pad,),
         "ready": (b_pad, p_pad),
+        # Route/hop counts are decision-determined (like the step count):
+        # only batch/steps pad, so bypass-free sweeps keep R = H = 0.
+        "byp_vol": (b_pad, s_pad) + r_h[:1],
+        "byp_plane": (b_pad, s_pad) + r_h,
     }
     for key, arr in packed.items():
         padded = np.full(tgt_shape[key], fill[key], dtype=arr.dtype)
@@ -118,12 +125,16 @@ def pad_packed(
 def _timing_numpy(p: dict[str, np.ndarray]) -> BatchResult:
     """Earliest-start timing over the packed batch, one step per loop turn.
 
-    Per-plane update order matches the object executor exactly (reconfigure
-    lazily at plane-free, transmit at ``max(barrier, free)`` in CHAIN mode
-    or plane-free in INDEPENDENT mode), so per-instance CCTs are bitwise
+    Per-plane update order matches the object executor exactly (bypass
+    relay hops first, riding installed configs; then lazy reconfigures at
+    plane-free; transmissions at ``max(barrier, free)`` in CHAIN mode or
+    plane-free in INDEPENDENT mode), so per-instance CCTs are bitwise
     identical to ``repro.core.simulator.execute``.
     """
-    b, s_max, _ = p["vol"].shape
+    b, s_max, n_p = p["vol"].shape
+    n_routes = p["byp_vol"].shape[2]
+    n_hops = p["byp_plane"].shape[3]
+    rows = np.arange(b)
     free = p["ready"].copy()
     held = p["init"].copy()
     barrier = np.zeros(b)
@@ -139,10 +150,42 @@ def _timing_numpy(p: dict[str, np.ndarray]) -> BatchResult:
         live = p["step_mask"][:, i]
         active = (v > EPS_VOLUME) & p["plane_mask"] & live[:, None]
         has = active.any(axis=1)
-        feasible &= ~(live & (p["step_vol"][:, i] > EPS_VOLUME) & ~has)
+        # Bypass relays run first (they ride installed configs, before
+        # this step's direct traffic forces reconfigurations): serialized
+        # store-and-forward hops, each occupying its plane's link.
+        byp_end = np.full(b, -np.inf)
+        has_byp = np.zeros(b, dtype=bool)
+        sent_byp = np.zeros(b)
+        for r in range(n_routes):
+            rv = p["byp_vol"][:, i, r]
+            route_live = (rv > EPS_VOLUME) & live
+            if not route_live.any():
+                continue
+            has_byp |= route_live
+            sent_byp += np.where(route_live, rv, 0.0)
+            prev_end = np.where(p["chain"], barrier, 0.0)
+            for h in range(n_hops):
+                j = p["byp_plane"][:, i, r, h]
+                upd = route_live & (j >= 0)
+                jj = np.clip(j, 0, n_p - 1)
+                free_j = free[rows, jj]
+                start = np.maximum(prev_end, free_j)
+                end = start + rv / p["bw"][rows, jj]
+                free[rows, jj] = np.where(upd, end, free_j)
+                busy[rows, jj] += np.where(upd, end - start, 0.0)
+                prev_end = np.where(upd, end, prev_end)
+            byp_end = np.maximum(
+                byp_end, np.where(route_live, prev_end, -np.inf)
+            )
+        feasible &= ~(
+            live
+            & (p["step_vol"][:, i] > EPS_VOLUME)
+            & ~has
+            & ~has_byp
+        )
         # Volume conservation (the object validator's Eq. 1 check, with
-        # the shared tolerance formula).
-        sent = np.where(active, v, 0.0).sum(axis=1)
+        # the shared tolerance formula); routes deliver once per route.
+        sent = np.where(active, v, 0.0).sum(axis=1) + sent_byp
         cons_tol = np.maximum(
             TOL, REL_TOL * np.maximum(p["step_vol"][:, i], 1.0)
         )
@@ -160,8 +203,10 @@ def _timing_numpy(p: dict[str, np.ndarray]) -> BatchResult:
         free = np.where(active, end, free)
         busy += np.where(active, end - start, 0.0)
         step_end = np.where(active, end, -np.inf).max(axis=1, initial=-np.inf)
-        barrier = np.where(has, np.maximum(barrier, step_end), barrier)
-        cct = np.where(has, np.maximum(cct, step_end), cct)
+        step_end = np.maximum(step_end, byp_end)
+        has_any = has | has_byp
+        barrier = np.where(has_any, np.maximum(barrier, step_end), barrier)
+        cct = np.where(has_any, np.maximum(cct, step_end), cct)
     return finalize_result(
         cct, n_recfg, busy, feasible, volume_ok, p["plane_mask"]
     )
@@ -197,21 +242,58 @@ def _build_jax_timing() -> Callable:
 
     def fn(
         vol, step_vol, step_cfg, step_mask, plane_mask, bw, init,
-        t_recfg, chain, ready,
+        t_recfg, chain, ready, byp_vol, byp_plane,
     ):
-        b = vol.shape[0]
+        b, _, n_p = vol.shape
+        n_routes = byp_vol.shape[2]
+        n_hops = byp_plane.shape[3]
         t_recfg_c = t_recfg[:, None]
         chain_c = chain[:, None]
+        plane_iota = jnp.arange(n_p)[None, :]
 
         def body(carry, xs):
             free, held, barrier, cct, busy, n_recfg, feasible, volume_ok = (
                 carry
             )
-            v, live, svol, scfg = xs
+            v, live, svol, scfg, bv, bp = xs
             active = (v > EPS_VOLUME) & plane_mask & live[:, None]
             has = jnp.any(active, axis=1)
-            feasible = feasible & ~(live & (svol > EPS_VOLUME) & ~has)
-            sent = jnp.where(active, v, 0.0).sum(axis=1)
+            # Bypass relays first (installed configs, store-and-forward
+            # hop serialization) -- the route/hop loops unroll at trace
+            # time (R and H are small, 0 for bypass-free sweeps).
+            byp_end = jnp.full(b, -jnp.inf, free.dtype)
+            has_byp = jnp.zeros(b, bool)
+            sent_byp = jnp.zeros(b, free.dtype)
+            for r in range(n_routes):
+                rv = bv[:, r]
+                route_live = (rv > EPS_VOLUME) & live
+                has_byp = has_byp | route_live
+                sent_byp = sent_byp + jnp.where(route_live, rv, 0.0)
+                prev_end = jnp.where(chain, barrier, 0.0)
+                for h in range(n_hops):
+                    j = bp[:, r, h]
+                    upd = route_live & (j >= 0)
+                    jj = jnp.clip(j, 0, n_p - 1)
+                    mask = (plane_iota == jj[:, None]) & upd[:, None]
+                    free_j = jnp.take_along_axis(
+                        free, jj[:, None], axis=1
+                    )[:, 0]
+                    start = jnp.maximum(prev_end, free_j)
+                    end = start + rv / jnp.take_along_axis(
+                        bw, jj[:, None], axis=1
+                    )[:, 0]
+                    free = jnp.where(mask, end[:, None], free)
+                    busy = busy + jnp.where(
+                        mask, (end - start)[:, None], 0.0
+                    )
+                    prev_end = jnp.where(upd, end, prev_end)
+                byp_end = jnp.maximum(
+                    byp_end, jnp.where(route_live, prev_end, -jnp.inf)
+                )
+            feasible = feasible & ~(
+                live & (svol > EPS_VOLUME) & ~has & ~has_byp
+            )
+            sent = jnp.where(active, v, 0.0).sum(axis=1) + sent_byp
             cons_tol = jnp.maximum(TOL, REL_TOL * jnp.maximum(svol, 1.0))
             volume_ok = volume_ok & (
                 ~live | (jnp.abs(sent - svol) <= cons_tol)
@@ -231,8 +313,12 @@ def _build_jax_timing() -> Callable:
             step_end = jnp.max(
                 jnp.where(active, end, -jnp.inf), axis=1, initial=-jnp.inf
             )
-            barrier = jnp.where(has, jnp.maximum(barrier, step_end), barrier)
-            cct = jnp.where(has, jnp.maximum(cct, step_end), cct)
+            step_end = jnp.maximum(step_end, byp_end)
+            has_any = has | has_byp
+            barrier = jnp.where(
+                has_any, jnp.maximum(barrier, step_end), barrier
+            )
+            cct = jnp.where(has_any, jnp.maximum(cct, step_end), cct)
             return (
                 free, held, barrier, cct, busy, n_recfg, feasible, volume_ok
             ), None
@@ -252,6 +338,8 @@ def _build_jax_timing() -> Callable:
             step_mask.T,
             step_vol.T,
             step_cfg.T,
+            jnp.swapaxes(byp_vol, 0, 1),  # (S, B, R)
+            jnp.swapaxes(byp_plane, 0, 1),  # (S, B, R, H)
         )
         (free, held, barrier, cct, busy, n_recfg, feasible, volume_ok), _ = (
             jax.lax.scan(body, carry, xs)
@@ -289,7 +377,7 @@ class JaxBackend(TimingBackend):
                 padded["vol"], padded["step_vol"], padded["step_cfg"],
                 padded["step_mask"], padded["plane_mask"], padded["bw"],
                 padded["init"], padded["t_recfg"], padded["chain"],
-                padded["ready"],
+                padded["ready"], padded["byp_vol"], padded["byp_plane"],
             )
         return finalize_result(
             np.asarray(cct)[:b],
@@ -341,6 +429,14 @@ class PallasBackend(TimingBackend):
     def derive_timing(self, packed: dict[str, np.ndarray]) -> BatchResult:
         from jax.experimental import enable_x64
 
+        if packed["byp_vol"].size and packed["byp_vol"].any():
+            # Bypass relay hops gather/scatter per-plane state by dynamic
+            # plane id, which the blocked-scan kernel does not lower yet;
+            # bypass-carrying batches take the numpy reference instead
+            # (same results -- the recurrences share one parity
+            # contract).  Bypass-free batches, including all the gated
+            # large-grid benchmarks, still run the kernel.
+            return _timing_numpy(packed)
         b, s, p = packed["vol"].shape
         padded = pad_packed(packed, _bucket(b), s, _bucket(p))
         with enable_x64():
@@ -410,3 +506,46 @@ def available_backends() -> tuple[str, ...]:
             continue
         names.append(name)
     return tuple(names)
+
+
+# Batch size at and above which the grid planners (`swot_greedy_grid` /
+# `plan_grid`) auto-select the jax backend for their scoring passes;
+# small grids stay on numpy (jit dispatch does not amortize).  Override
+# with the env var; <= 0 disables auto-selection.
+ENV_GRID_BACKEND_THRESHOLD = "REPRO_GRID_BACKEND_THRESHOLD"
+DEFAULT_GRID_BACKEND_THRESHOLD = 64
+
+
+def select_backend_by_size(
+    n_rows: int,
+    env_var: str,
+    default_threshold: int,
+    explicit: "str | TimingBackend | None" = None,
+) -> "str | TimingBackend | None":
+    """Threshold-based jax auto-selection for batched evaluation passes.
+
+    The single policy shared by the runtime arbiter's lease re-scoring
+    and the grid planners: an ``explicit`` backend always wins; otherwise
+    jax is selected once the batch reaches the threshold read from
+    ``env_var`` (falling back to ``default_threshold``) -- large batches
+    amortize jit dispatch while small ones are faster on the numpy
+    reference -- and ``None`` (the ``REPRO_IR_BACKEND`` env default) is
+    returned when jax is unavailable or the threshold is not met.  A
+    threshold <= 0 disables auto-selection.
+    """
+    if explicit is not None:
+        return explicit
+    raw = os.environ.get(env_var, "")
+    try:
+        threshold = int(raw) if raw else default_threshold
+    except ValueError as exc:
+        raise ValueError(
+            f"{env_var} must be an integer, got {raw!r}"
+        ) from exc
+    if threshold <= 0 or n_rows < threshold:
+        return None
+    try:
+        get_backend("jax")
+    except BackendUnavailable:
+        return None
+    return "jax"

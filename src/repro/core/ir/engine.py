@@ -9,9 +9,11 @@ This module is the struct-of-arrays twin:
   ``kind``, ``step``, ``config``, ``t_start``, ``t_end``, ``volume``) plus
   per-step / per-plane metadata, with **lossless** ``to_ir``/``from_ir``
   converters (activity order and every float preserved bit-for-bit).
-* ``validate_ir``   -- the paper's P1/P2/P3 legality properties plus
-  physical feasibility as vectorized interval/mask checks, for both CHAIN
-  and INDEPENDENT modes.  Accepts/rejects exactly like the object-path
+* ``validate_ir``   -- the paper's P1/P2/P3 legality properties, the
+  Topology-Bypassing relay property P4 (route composition + data-order
+  hop timing + once-per-route volume accounting), and physical
+  feasibility as vectorized interval/mask checks, for both CHAIN and
+  INDEPENDENT modes.  Accepts/rejects exactly like the object-path
   validator (which is kept as the debug oracle).
 * ``execute_ir``    -- CCT, reconfiguration count, and per-plane busy time
   via array reductions over the IR.
@@ -118,6 +120,8 @@ class ScheduleIR:
     t_start: np.ndarray  # float64
     t_end: np.ndarray  # float64
     volume: np.ndarray  # float64
+    route: np.ndarray  # int64; bypass route id, -1 = direct
+    hop: np.ndarray  # int64; hop index within a bypass route
     # Provenance (object handles for the lossless round trip).
     fabric: OpticalFabric
     pattern: Pattern
@@ -152,6 +156,8 @@ def to_ir(schedule: Schedule) -> ScheduleIR:
     volume = np.fromiter(
         (a.volume for a in acts), dtype=np.float64, count=n
     )
+    route = np.fromiter((a.route for a in acts), dtype=np.int64, count=n)
+    hop = np.fromiter((a.hop for a in acts), dtype=np.int64, count=n)
     plane_bw, initial = fabric_arrays(fabric)
     return ScheduleIR(
         n_planes=fabric.n_planes,
@@ -169,6 +175,8 @@ def to_ir(schedule: Schedule) -> ScheduleIR:
         t_start=t_start,
         t_end=t_end,
         volume=volume,
+        route=route,
+        hop=hop,
         fabric=fabric,
         pattern=pattern,
     )
@@ -185,6 +193,8 @@ def from_ir(ir: ScheduleIR) -> Schedule:
             end=float(ir.t_end[i]),
             config=int(ir.config[i]),
             volume=float(ir.volume[i]),
+            route=int(ir.route[i]),
+            hop=int(ir.hop[i]),
         )
         for i in range(ir.n_activities)
     )
@@ -217,7 +227,8 @@ def validate_ir(ir: ScheduleIR) -> None:
         raise ValueError("activity has invalid interval")
     if np.any((ir.step[xm] < 0) | (ir.step[xm] >= ir.n_steps)):
         raise ValueError("transmission for unknown step")
-    if np.any(ir.config[xm] != ir.step_config[ir.step[xm]]):
+    direct = xm & (ir.route < 0)
+    if np.any(ir.config[direct] != ir.step_config[ir.step[direct]]):
         raise ValueError("transmission tagged with wrong config")
     if np.any(ir.volume[xm] < -TOL):
         raise ValueError("negative transmission volume")
@@ -229,9 +240,11 @@ def validate_ir(ir: ScheduleIR) -> None:
     ):
         raise ValueError("reconfiguration shorter than t_recfg")
 
-    # Volume conservation (paper Eq. 1).
+    # Volume conservation (paper Eq. 1).  Relay routes deliver their
+    # volume once (hop 0); later hops re-carry the same bytes.
+    counted = xm & ((ir.route < 0) | (ir.hop == 0))
     sent = np.zeros(ir.n_steps)
-    np.add.at(sent, ir.step[xm], ir.volume[xm])
+    np.add.at(sent, ir.step[counted], ir.volume[counted])
     tol = np.maximum(TOL, REL_TOL * np.maximum(ir.step_volume, 1.0))
     if np.any(np.abs(sent - ir.step_volume) > tol):
         raise ValueError("scheduled volume != required step volume")
@@ -268,6 +281,67 @@ def validate_ir(ir: ScheduleIR) -> None:
             held = np.full(order.size, ir.initial_config[int(p)])
         if np.any(~is_r & (held != cfg)):
             raise ValueError(f"P1 violation on plane {int(p)}")
+
+    # P4: bypass relay legality, mirroring the object oracle's checks
+    # (contiguous hops, >= 2 of them, one step, equal volumes, pairing
+    # composition, data-order hop timing).  Routes are few; the per-route
+    # loop composes pairings as array gathers.
+    byp = xm & (ir.route >= 0)
+    if np.any(byp):
+        perms = {
+            s.config: np.asarray(s.perm, dtype=np.int64)
+            for s in ir.pattern.steps
+        }
+        rows = np.where(byp)[0]
+        order = rows[np.lexsort((ir.hop[rows], ir.route[rows]))]
+        rids = ir.route[order]
+        starts = np.nonzero(np.r_[True, rids[1:] != rids[:-1]])[0]
+        bounds = np.r_[starts, rids.size]
+        for s0, s1 in zip(bounds[:-1], bounds[1:]):
+            grp = order[s0:s1]
+            rid = int(rids[s0])
+            if not np.array_equal(ir.hop[grp], np.arange(grp.size)):
+                raise ValueError(
+                    f"P4 violation: route {rid} hops are not contiguous"
+                )
+            if grp.size < 2:
+                raise ValueError(
+                    f"P4 violation: route {rid} has fewer than 2 hops"
+                )
+            if np.unique(ir.step[grp]).size != 1:
+                raise ValueError(
+                    f"P4 violation: route {rid} spans multiple steps"
+                )
+            v0 = ir.volume[grp[0]]
+            if np.any(
+                np.abs(ir.volume[grp] - v0)
+                > max(TOL, REL_TOL * max(abs(v0), 1.0))
+            ):
+                raise ValueError(
+                    f"P4 violation: route {rid} hop volumes differ"
+                )
+            composed: np.ndarray | None = None
+            for c in ir.config[grp]:
+                if int(c) not in perms:
+                    raise ValueError(
+                        f"P4 violation: route {rid} hop config {int(c)} "
+                        "has no known pairing"
+                    )
+                p_arr = perms[int(c)]
+                composed = p_arr if composed is None else p_arr[composed]
+            target = perms[int(ir.step_config[ir.step[grp[0]]])]
+            if not np.array_equal(composed, target):
+                raise ValueError(
+                    f"P4 violation: route {rid} composition does not "
+                    "realize the step pairing"
+                )
+            if not np.all(
+                times_close_arr(ir.t_end[grp[:-1]], ir.t_start[grp[1:]])
+            ):
+                raise ValueError(
+                    f"P4 violation: route {rid} hop starts before its "
+                    "data arrives"
+                )
 
     # P3: cross-step synchronization (chain mode only).
     if ir.mode is DependencyMode.CHAIN:
@@ -493,6 +567,47 @@ def pack_instances(
     t_recfg = np.zeros(b)
     chain = np.zeros(b, dtype=bool)
     ready = np.zeros((b, p_max))
+    # Bypass relay routes: (B, S, R) delivered volumes + (B, S, R, H)
+    # hop plane ids (-1 pads).  R/H are 0 when no instance bypasses, so
+    # the recurrence's route loops vanish for bypass-free sweeps.  Idle
+    # routes (volume at or below EPS_VOLUME) are dropped like idle
+    # splits, mirroring the object executor.
+    r_max = h_max = 0
+    live_routes: list[list[list]] = []
+    for inst in instances:
+        byp = inst.decisions.bypass
+        per_step: list[list] = []
+        if byp is not None:
+            if len(byp) != inst.pattern.n_steps:
+                raise ValueError(
+                    f"bypass covers {len(byp)} steps, pattern has "
+                    f"{inst.pattern.n_steps}"
+                )
+            for routes in byp:
+                kept = [r for r in routes if r.volume > EPS_VOLUME]
+                for r in kept:
+                    if len(r.planes) < 2:
+                        raise ValueError(
+                            f"bypass route needs >= 2 hops, got {r.planes}"
+                        )
+                    if any(
+                        not 0 <= j < inst.fabric.n_planes
+                        for j in r.planes
+                    ):
+                        raise ValueError(
+                            f"unknown plane in bypass route {r.planes}"
+                        )
+                    h_max = max(h_max, len(r.planes))
+                r_max = max(r_max, len(kept))
+                per_step.append(kept)
+        live_routes.append(per_step)
+    byp_vol = np.zeros((b, s_max, r_max))
+    byp_plane = np.full((b, s_max, r_max, h_max), -1, dtype=np.int64)
+    for bi, per_step in enumerate(live_routes):
+        for i, kept in enumerate(per_step):
+            for r, route in enumerate(kept):
+                byp_vol[bi, i, r] = route.volume
+                byp_plane[bi, i, r, : len(route.planes)] = route.planes
     for bi, inst in enumerate(instances):
         fabric, pattern, dec = inst.fabric, inst.pattern, inst.decisions
         if len(dec.splits) != pattern.n_steps:
@@ -541,6 +656,8 @@ def pack_instances(
         "t_recfg": t_recfg,
         "chain": chain,
         "ready": ready,
+        "byp_vol": byp_vol,
+        "byp_plane": byp_plane,
     }
 
 

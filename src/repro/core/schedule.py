@@ -14,6 +14,14 @@ reconfigurations) realizing a collective ``Pattern`` on an ``OpticalFabric``.
   "independent" mode replaces the global barrier with true data
   dependencies (none, for pairwise all-to-all), validating only P1/P2 and
   volume conservation.
+* **P4  Bypass relay legality** -- a transmission whose config differs
+  from its step's config must belong to a relay route (Topology
+  Bypassing, `repro.core.bypass`): its hops ride *installed* circuits
+  (P1 enforces that per plane), carry equal volumes, run in data order
+  (hop ``k+1`` starts no earlier than hop ``k`` ends), and their
+  permutations compose to the step's pairing.  Delivered volume counts
+  once per route; each hop still consumes its plane's full link capacity
+  for its duration (P2 enforces that).
 
 Plus physical feasibility: transmission intervals are long enough for their
 volume at plane bandwidth, reconfigurations last at least ``t_recfg``, and
@@ -55,9 +63,15 @@ class PlaneActivity:
     """A timed activity on one optical plane.
 
     For XMIT: ``step`` is the pattern step served, ``volume`` the bytes
-    carried on this plane, ``config`` the required OCS setting.
+    carried on this plane, ``config`` the OCS setting the traffic rides.
     For RECFG: ``config`` is the setting being installed; ``step`` records
     the step that motivated it (bookkeeping only).
+
+    Bypass relays (Topology Bypassing): a transmission that is hop
+    ``hop`` of relay route ``route`` carries ``config`` equal to the
+    plane's *installed* setting rather than the step's; ``route`` is a
+    schedule-unique non-negative id grouping the hops, and ``route=-1``
+    marks an ordinary direct transmission.
     """
 
     plane: int
@@ -67,6 +81,8 @@ class PlaneActivity:
     end: float
     config: int
     volume: float = 0.0
+    route: int = -1
+    hop: int = 0
 
     @property
     def duration(self) -> float:
@@ -121,11 +137,15 @@ class Schedule:
             acts = sorted(by_plane[plane], key=lambda a: a.start)
             parts = []
             for a in acts:
-                tag = (
-                    f"R->c{a.config}"
-                    if a.kind is Kind.RECFG
-                    else f"S{a.step}:c{a.config}:{a.volume / 1e6:.2f}MB"
-                )
+                if a.kind is Kind.RECFG:
+                    tag = f"R->c{a.config}"
+                elif a.route >= 0:
+                    tag = (
+                        f"S{a.step}:byp{a.route}.{a.hop}:c{a.config}:"
+                        f"{a.volume / 1e6:.2f}MB"
+                    )
+                else:
+                    tag = f"S{a.step}:c{a.config}:{a.volume / 1e6:.2f}MB"
                 parts.append(
                     f"[{a.start * 1e6:8.1f},{a.end * 1e6:8.1f}]us {tag}"
                 )
@@ -155,7 +175,7 @@ def validate_object(schedule: Schedule) -> None:
             if not 0 <= a.step < n_steps:
                 raise ValueError(f"transmission for unknown step {a.step}")
             step = pattern.steps[a.step]
-            if a.config != step.config:
+            if a.route < 0 and a.config != step.config:
                 raise ValueError(
                     f"step {a.step} transmission tagged config {a.config}, "
                     f"pattern requires {step.config}"
@@ -175,10 +195,11 @@ def validate_object(schedule: Schedule) -> None:
                     f"reconfiguration shorter than t_recfg: {a}"
                 )
 
-    # Volume conservation (paper Eq. 1).
+    # Volume conservation (paper Eq. 1).  A relay route delivers its
+    # volume once, however many hops carry it: only hop 0 counts.
     sent = defaultdict(float)
     for a in acts:
-        if a.kind is Kind.XMIT:
+        if a.kind is Kind.XMIT and (a.route < 0 or a.hop == 0):
             sent[a.step] += a.volume
     for i, step in enumerate(pattern.steps):
         if abs(sent[i] - step.volume) > max(
@@ -215,6 +236,58 @@ def validate_object(schedule: Schedule) -> None:
                     )
             prev_end = max(prev_end, a.end)
 
+    # P4: bypass relay legality (Topology Bypassing).
+    routes: dict[int, list[PlaneActivity]] = defaultdict(list)
+    for a in acts:
+        if a.kind is Kind.XMIT and a.route >= 0:
+            routes[a.route].append(a)
+    if routes:
+        perms = {s.config: s.perm for s in pattern.steps}
+        for rid, hops in routes.items():
+            hops.sort(key=lambda a: a.hop)
+            if [a.hop for a in hops] != list(range(len(hops))):
+                raise ValueError(
+                    f"P4 violation: route {rid} hops are not contiguous"
+                )
+            if len(hops) < 2:
+                raise ValueError(
+                    f"P4 violation: route {rid} has fewer than 2 hops"
+                )
+            if len({a.step for a in hops}) != 1:
+                raise ValueError(
+                    f"P4 violation: route {rid} spans multiple steps"
+                )
+            v0 = hops[0].volume
+            for a in hops:
+                if abs(a.volume - v0) > max(
+                    _TOL, _REL_TOL * max(abs(v0), 1.0)
+                ):
+                    raise ValueError(
+                        f"P4 violation: route {rid} hop volumes differ"
+                    )
+            composed: tuple[int, ...] | None = None
+            for a in hops:
+                if a.config not in perms:
+                    raise ValueError(
+                        f"P4 violation: route {rid} hop config {a.config} "
+                        "has no known pairing"
+                    )
+                p = perms[a.config]
+                composed = p if composed is None else tuple(
+                    p[y] for y in composed
+                )
+            if composed != pattern.steps[hops[0].step].perm:
+                raise ValueError(
+                    f"P4 violation: route {rid} composition does not "
+                    "realize the step pairing"
+                )
+            for prev, nxt in zip(hops, hops[1:]):
+                if not _times_close(prev.end, nxt.start):
+                    raise ValueError(
+                        f"P4 violation: route {rid} hop starts before its "
+                        "data arrives"
+                    )
+
     # P3: cross-step synchronization (chain mode only).
     if schedule.mode is DependencyMode.CHAIN:
         prev_window_end = 0.0
@@ -236,6 +309,25 @@ validate = validate_object
 
 
 @dataclasses.dataclass(frozen=True)
+class BypassRoute:
+    """A relay route carrying one step's traffic over installed circuits.
+
+    ``planes`` lists the hop planes in forward data order; hop ``k``
+    forwards every node's chunk over plane ``planes[k]``'s *installed*
+    circuit, and the composition of the hops' permutations must equal the
+    step's pairing (P4).  ``volume`` is the bytes *delivered*: every hop
+    carries the full volume, so an ``h``-hop relay spends ``h x volume``
+    of link capacity and -- with the executor's store-and-forward
+    serialization -- delivers at ``bandwidth / h`` on a uniform fabric.
+    A single-plane route ``(j,) * h`` is the self-composition relay the
+    greedy enumerates (`repro.core.bypass.relay_depth_table`).
+    """
+
+    planes: tuple[int, ...]
+    volume: float
+
+
+@dataclasses.dataclass(frozen=True)
 class Decisions:
     """Discrete scheduling decisions; timing is derived by the executor.
 
@@ -245,7 +337,13 @@ class Decisions:
     as possible (immediately after its previous activity), which is optimal
     -- all timing constraints are lower bounds, so earliest-start timing
     minimizes every completion time for fixed discrete decisions.
+
+    ``bypass`` optionally adds Topology-Bypassing relays: per step, a
+    tuple of ``BypassRoute`` carried on planes' installed configs without
+    reconfiguring (``None`` means no bypassing anywhere -- the pre-bypass
+    decision format, kept as the default for back-compat).
     """
 
     splits: tuple[dict[int, float], ...]
     mode: DependencyMode = DependencyMode.CHAIN
+    bypass: tuple[tuple[BypassRoute, ...], ...] | None = None

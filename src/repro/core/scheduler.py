@@ -68,6 +68,7 @@ def swot_schedule(
     mode: DependencyMode = DependencyMode.CHAIN,
     milp_time_limit: float = 30.0,
     plane_ready: Sequence[float] | None = None,
+    bypass_depth: int = 0,
 ) -> tuple[Schedule, str]:
     """Schedule ``pattern`` on ``fabric`` with SWOT overlap optimization.
 
@@ -75,13 +76,19 @@ def swot_schedule(
     staggered-lease case).  The MILP anchors each plane's activity chain
     at its ready offset, so small re-plans stay exact; at scale the auto
     policy hands over to the greedy exactly as for fresh fabrics.
+
+    ``bypass_depth >= 2`` lets the greedy add Topology-Bypassing relay
+    candidates (`repro.core.bypass`) up to that many hops; the MILP does
+    not model relays, so under ``method="milp"`` a bypass-winning greedy
+    schedule is kept whenever it realizes the faster CCT.
     """
     if method == "auto":
         n_bin = 2 * pattern.n_steps * fabric.n_planes
         method = "milp" if n_bin <= _MILP_BINARY_BUDGET else "greedy"
     if method == "milp":
         greedy_schedule = swot_greedy(
-            fabric, pattern, mode=mode, plane_ready=plane_ready
+            fabric, pattern, mode=mode, plane_ready=plane_ready,
+            bypass_depth=bypass_depth,
         )
         try:
             milp_schedule = solve_milp(
@@ -93,14 +100,18 @@ def swot_schedule(
             ).schedule
         except RuntimeError:
             return greedy_schedule, "greedy"  # solver hiccup: greedy+LP
-        # The greedy occasionally matches MILP under a solver time limit;
-        # keep whichever realized schedule is faster.
+        # The greedy occasionally matches MILP under a solver time limit
+        # (or beats it via bypass relays the MILP cannot model); keep
+        # whichever realized schedule is faster.
         if greedy_schedule.cct < milp_schedule.cct:
             return greedy_schedule, "greedy"
         return milp_schedule, "milp"
     if method == "greedy":
         return (
-            swot_greedy(fabric, pattern, mode=mode, plane_ready=plane_ready),
+            swot_greedy(
+                fabric, pattern, mode=mode, plane_ready=plane_ready,
+                bypass_depth=bypass_depth,
+            ),
             "greedy",
         )
     raise ValueError(f"unknown method {method!r}")
@@ -161,22 +172,42 @@ def plan_grid(
     backend: "str | TimingBackend | None" = None,
     rollout_horizon: int = 24,
     mode: DependencyMode = DependencyMode.CHAIN,
+    bypass_depth: int = 0,
+    independent_split: bool = False,
 ) -> list[GridCellPlan]:
     """Plan a whole sweep grid in one instance-batched pass.
 
     The batched greedy plans every (fabric, pattern) cell together
     (`swot_greedy_grid`), then ONE more ``batch_evaluate`` pass scores the
     strawman-ICR baseline for every cell -- both on the selected IR
-    backend (``backend=None`` follows ``REPRO_IR_BACKEND``, default
-    numpy).  ``mode`` picks the per-cell planner: CHAIN (paper-faithful
-    reserve-set greedy) or INDEPENDENT (least-finish-time step packing,
-    bitwise-equal to per-instance ``swot_greedy_independent`` decisions).
-    Use this for message-size x ``t_recfg`` x plane-count sweeps; for
-    single collectives (or when LP polish matters) use
-    ``plan_collective``.
+    backend.  ``backend=None`` auto-selects jax once the grid reaches
+    ``REPRO_GRID_BACKEND_THRESHOLD`` cells (the arbiter's shared
+    ``select_backend_by_size`` policy; else the ``REPRO_IR_BACKEND``
+    env default), and an explicit ``backend`` always wins.  ``mode``
+    picks the per-cell planner: CHAIN (paper-faithful reserve-set
+    greedy, optionally with Topology-Bypassing relay candidates via
+    ``bypass_depth >= 2``) or INDEPENDENT (least-finish-time step
+    packing, or per-row-volume water-fill splitting with
+    ``independent_split=True`` for plane-heterogeneous fabrics) --
+    each bitwise-equal to its per-instance reference.  Use this for
+    message-size x ``t_recfg`` x plane-count sweeps; for single
+    collectives (or when LP polish matters) use ``plan_collective``.
     """
+    from repro.core.ir.backends import (
+        DEFAULT_GRID_BACKEND_THRESHOLD,
+        ENV_GRID_BACKEND_THRESHOLD,
+        select_backend_by_size,
+    )
+
+    backend = select_backend_by_size(
+        len(cells),
+        ENV_GRID_BACKEND_THRESHOLD,
+        DEFAULT_GRID_BACKEND_THRESHOLD,
+        explicit=backend,
+    )
     plans = swot_greedy_grid(
-        cells, rollout_horizon=rollout_horizon, backend=backend, mode=mode
+        cells, rollout_horizon=rollout_horizon, backend=backend, mode=mode,
+        bypass_depth=bypass_depth, independent_split=independent_split,
     )
     straw = batch_evaluate(
         [strawman_instance(fabric, pattern) for fabric, pattern in cells],

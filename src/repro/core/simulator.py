@@ -9,6 +9,11 @@ derives the unique earliest-start timed schedule:
   reconfiguration runs while *other* planes are still transmitting);
 * transmissions start at ``max(step barrier, plane ready)`` in CHAIN mode
   (paper's P3), or at plane-ready in INDEPENDENT mode;
+* bypass relays (``Decisions.bypass``) run BEFORE the step's direct
+  traffic -- they ride the planes' *installed* configs, so they must
+  precede any reconfiguration the direct splits force -- with
+  store-and-forward hop serialization: hop 0 starts like a direct
+  transmission, hop ``k+1`` at ``max(hop k end, plane ready)``;
 * CCT follows deterministically.
 
 Earliest-start timing is *optimal* for fixed discrete decisions: every
@@ -73,6 +78,14 @@ def execute(
         free = list(plane_ready)
     activities: list[PlaneActivity] = []
     barrier = 0.0  # end of previous step's window (CHAIN mode)
+    bypass = decisions.bypass
+    if bypass is not None and len(bypass) != pattern.n_steps:
+        raise ValueError(
+            f"bypass covers {len(bypass)} steps, pattern has "
+            f"{pattern.n_steps}"
+        )
+    chain = decisions.mode is DependencyMode.CHAIN
+    route_id = 0
 
     for i, step in enumerate(pattern.steps):
         split = decisions.splits[i]
@@ -80,8 +93,51 @@ def execute(
         active = sorted(
             (j, v) for j, v in split.items() if v > _EPS_VOLUME
         )
-        if not active and step.volume > _EPS_VOLUME:
+        routes = (
+            [r for r in bypass[i] if r.volume > _EPS_VOLUME]
+            if bypass is not None
+            else []
+        )
+        if not active and not routes and step.volume > _EPS_VOLUME:
             raise ValueError(f"step {i} has volume but no active planes")
+        # Bypass relays first: they ride installed configs, so they must
+        # precede any reconfiguration this step's direct splits force.
+        for route in routes:
+            if len(route.planes) < 2:
+                raise ValueError(
+                    f"step {i} bypass route needs >= 2 hops, got "
+                    f"{route.planes}"
+                )
+            prev_end = barrier if chain else 0.0
+            for hop, j in enumerate(route.planes):
+                if not 0 <= j < n_planes:
+                    raise ValueError(
+                        f"unknown plane {j} in step {i} bypass route"
+                    )
+                if config[j] is None:
+                    raise ValueError(
+                        f"step {i} bypass route rides unconfigured "
+                        f"plane {j}"
+                    )
+                start = max(prev_end, free[j])
+                end = start + route.volume / fabric.plane_bandwidth(j)
+                activities.append(
+                    PlaneActivity(
+                        plane=j,
+                        kind=Kind.XMIT,
+                        step=i,
+                        start=start,
+                        end=end,
+                        config=config[j],
+                        volume=route.volume,
+                        route=route_id,
+                        hop=hop,
+                    )
+                )
+                free[j] = end
+                prev_end = end
+            route_id += 1
+            step_end = max(step_end, prev_end)
         for j, volume in active:
             if not 0 <= j < n_planes:
                 raise ValueError(f"unknown plane {j} in step {i} split")

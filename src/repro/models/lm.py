@@ -192,11 +192,25 @@ def _moe_dims(cfg: ArchConfig, ep_size: int) -> MoeDims:
     )
 
 
-def _decoder_ffn(lp, h, cfg: ArchConfig, ctx: MeshContext):
-    """FFN half of a decoder layer; returns (out, aux_loss)."""
+def _decoder_ffn(
+    lp,
+    h,
+    cfg: ArchConfig,
+    ctx: MeshContext,
+    moe_pos=None,
+    moe_counts=None,
+    collect_counts: bool = False,
+):
+    """FFN half of a decoder layer; returns (out, aux_loss, moe_counts).
+
+    ``moe_pos`` / ``moe_counts`` thread the capacity-consistent decode
+    state (absolute positions + per-sequence expert-assignment totals)
+    through `repro.models.moe`; ``collect_counts`` asks for the updated
+    counts back (prefill and decode), ``None`` otherwise (training).
+    """
     if cfg.is_moe:
         dims = _moe_dims(cfg, ctx.tp_size)
-        y, aux, _drop = moe_ffn(
+        out = moe_ffn(
             h,
             lp["moe"],
             dims,
@@ -207,24 +221,40 @@ def _decoder_ffn(lp, h, cfg: ArchConfig, ctx: MeshContext):
             fsdp_experts=cfg.fsdp_experts,
             token_slice=cfg.moe_token_slice,
             seq_sharded=cfg.moe_token_slice and cfg.sequence_parallel,
+            base_pos=moe_pos,
+            expert_counts=moe_counts,
+            return_counts=collect_counts,
         )
+        if collect_counts:
+            y, aux, _drop, counts = out
+        else:
+            y, aux, _drop = out
+            counts = None
         if cfg.n_shared_experts:
             y = y + tfm.glu_fwd(lp["shared"], h, cfg.act)
-        return y, aux * cfg.aux_loss_coef
-    return tfm.glu_fwd(lp["ffn"], h, cfg.act), jnp.zeros((), jnp.float32)
+        return y, aux * cfg.aux_loss_coef, counts
+    return (
+        tfm.glu_fwd(lp["ffn"], h, cfg.act),
+        jnp.zeros((), jnp.float32),
+        None,
+    )
 
 
-def _decoder_layer_full(lp, x, cfg: ArchConfig, ctx: MeshContext):
-    """Training/prefill decoder layer; returns (x, aux, (k, v))."""
+def _decoder_layer_full(
+    lp, x, cfg: ArchConfig, ctx: MeshContext, collect_counts: bool = False
+):
+    """Training/prefill decoder layer; returns (x, aux, (k, v), counts)."""
     h = tfm.norm_fwd(lp["ln1"], x, cfg)
     s = x.shape[1]
     q, k, v = tfm.attention_qkv(lp["attn"], h, h, cfg, jnp.arange(s))
     ctx_out = tfm.attention_context(q, k, v, cfg, causal=True)
     x = x + tfm.attention_out(lp["attn"], ctx_out)
     h2 = tfm.norm_fwd(lp["ln2"], x, cfg)
-    y, aux = _decoder_ffn(lp, h2, cfg, ctx)
+    y, aux, counts = _decoder_ffn(
+        lp, h2, cfg, ctx, collect_counts=collect_counts
+    )
     x = ctx.constrain(x + y, ("batch", "seq_act", "embed"))
-    return x, aux, (k, v)
+    return x, aux, (k, v), counts
 
 
 def _swa_cache_len(cfg: ArchConfig, max_len: int) -> int:
@@ -247,7 +277,9 @@ def _ring_pack(k: jax.Array, w: int) -> jax.Array:
 def _decoder_layer_decode(
     lp, x, cache, length, cfg: ArchConfig, ctx: MeshContext
 ):
-    """One-token decoder layer; cache = {'k','v'} (B, Smax, Hkv, Dh)."""
+    """One-token decoder layer; cache = {'k','v'} (B, Smax, Hkv, Dh),
+    plus {'moe'}: (B, E_padded) expert-assignment counts for MoE layers
+    (the capacity-consistent decode state)."""
     h = tfm.norm_fwd(lp["ln1"], x, cfg)
     pos = length[:, None]  # (B, 1) absolute positions
     q, k, v = tfm.attention_qkv(lp["attn"], h, h, cfg, pos)
@@ -264,8 +296,20 @@ def _decoder_layer_decode(
     ctx_out = decode_attention(q, ck, cv, eff_len)
     x = x + tfm.attention_out(lp["attn"], ctx_out)
     h2 = tfm.norm_fwd(lp["ln2"], x, cfg)
-    y, _aux = _decoder_ffn(lp, h2, cfg, ctx)
-    return x + y, {"k": ck, "v": cv}
+    has_moe_state = "moe" in cache
+    y, _aux, counts = _decoder_ffn(
+        lp,
+        h2,
+        cfg,
+        ctx,
+        moe_pos=length if has_moe_state else None,
+        moe_counts=cache.get("moe"),
+        collect_counts=has_moe_state,
+    )
+    new_cache = {"k": ck, "v": cv}
+    if has_moe_state:
+        new_cache["moe"] = counts
+    return x + y, new_cache
 
 
 def _decoder_specs(cfg: ArchConfig, ctx: MeshContext) -> Pytree:
@@ -282,7 +326,7 @@ def _decoder_hidden(params, batch, cfg: ArchConfig, ctx: MeshContext):
     x = _fuse_image(x, batch, cfg)
 
     def body(lp, h):
-        h, aux, _kv = _decoder_layer_full(lp, h, cfg, ctx)
+        h, aux, _kv, _counts = _decoder_layer_full(lp, h, cfg, ctx)
         return h, aux
 
     x, aux = _scan_stack(params["layers"], x, body, cfg, cfg.n_layers)
@@ -290,11 +334,13 @@ def _decoder_hidden(params, batch, cfg: ArchConfig, ctx: MeshContext):
     return x, aux
 
 
-def _decoder_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+def _decoder_cache_specs(
+    cfg: ArchConfig, ctx: MeshContext, batch: int, max_len: int
+):
     hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
     w = _swa_cache_len(cfg, max_len)
     kv_axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
-    return {
+    specs = {
         "k": ParamSpec(
             (cfg.n_layers, batch, w, hkv, dh),
             kv_axes,
@@ -309,6 +355,17 @@ def _decoder_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
         ),
         "length": ParamSpec((batch,), ("batch",), init="zeros", dtype=jnp.int32),
     }
+    if cfg.is_moe:
+        # Per-layer per-sequence expert-assignment totals: the
+        # capacity-consistent decode state (see repro.models.moe).
+        e_pad = _moe_dims(cfg, ctx.tp_size).n_experts_padded
+        specs["moe_counts"] = ParamSpec(
+            (cfg.n_layers, batch, e_pad),
+            ("layers", "batch", None),
+            init="zeros",
+            dtype=jnp.int32,
+        )
+    return specs
 
 
 def _build_decoder_model(cfg: ArchConfig, ctx: MeshContext) -> Model:
@@ -325,13 +382,17 @@ def _build_decoder_model(cfg: ArchConfig, ctx: MeshContext) -> Model:
         x = _embed(params, batch["tokens"], cfg, ctx)
         x = _fuse_image(x, batch, cfg)
         s = batch["tokens"].shape[1]
+        b = batch["tokens"].shape[0]
         w = _swa_cache_len(cfg, s)
 
         def body(lp, h):
-            h, _aux, (k, v) = _decoder_layer_full(lp, h, cfg, ctx)
+            h, _aux, (k, v), counts = _decoder_layer_full(
+                lp, h, cfg, ctx, collect_counts=cfg.is_moe
+            )
             if cfg.sliding_window is not None:
                 k, v = _ring_pack(k, w), _ring_pack(v, w)
-            return h, (k.astype(COMPUTE_DTYPE), v.astype(COMPUTE_DTYPE))
+            kv = (k.astype(COMPUTE_DTYPE), v.astype(COMPUTE_DTYPE))
+            return h, kv + ((counts,) if cfg.is_moe else ())
 
         if cfg.scan_layers and cfg.n_layers:
 
@@ -339,27 +400,35 @@ def _build_decoder_model(cfg: ArchConfig, ctx: MeshContext) -> Model:
                 h, kv = body(lp, h)
                 return h, kv
 
-            x, (ks, vs) = jax.lax.scan(scan_body, x, params["layers"])
+            x, ys = jax.lax.scan(scan_body, x, params["layers"])
+            if cfg.is_moe:
+                ks, vs, counts = ys
+            else:
+                ks, vs = ys
+                counts = None
         else:
-            ks, vs = [], []
+            ks, vs, cts = [], [], []
             for i in range(cfg.n_layers):
                 lp = jax.tree.map(lambda p: p[i], params["layers"])
-                x, (k, v) = body(lp, x)
-                ks.append(k)
-                vs.append(v)
+                x, kv = body(lp, x)
+                ks.append(kv[0])
+                vs.append(kv[1])
+                if cfg.is_moe:
+                    cts.append(kv[2])
             hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
-            b0 = batch["tokens"].shape[0]
-            empty = jnp.zeros((0, b0, w, hkv, dh), COMPUTE_DTYPE)
+            empty = jnp.zeros((0, b, w, hkv, dh), COMPUTE_DTYPE)
             ks = jnp.stack(ks) if ks else empty
             vs = jnp.stack(vs) if vs else empty
+            counts = jnp.stack(cts) if cts else None
         x = tfm.norm_fwd(params["final_norm"], x, cfg)
         logits = _logits(params, x[:, -1:], cfg, ctx)[:, 0]
-        b = batch["tokens"].shape[0]
         cache = {
             "k": ks,
             "v": vs,
             "length": jnp.full((b,), s, jnp.int32),
         }
+        if cfg.is_moe:
+            cache["moe_counts"] = counts
         return logits, cache
 
     def decode_step(params, cache, tokens):
@@ -373,23 +442,30 @@ def _build_decoder_model(cfg: ArchConfig, ctx: MeshContext) -> Model:
             )
             return h, new_cache
 
+        layer_cache = {"k": cache["k"], "v": cache["v"]}
+        if cfg.is_moe:
+            layer_cache["moe"] = cache["moe_counts"]
         if cfg.n_layers == 0:
-            kv = {"k": cache["k"], "v": cache["v"]}
+            kv = layer_cache
         elif cfg.scan_layers:
             x, kv = jax.lax.scan(
                 body,
                 x,
-                (params["layers"], {"k": cache["k"], "v": cache["v"]}),
+                (params["layers"], layer_cache),
             )
         else:
-            ks, vs = [], []
+            ks, vs, cts = [], [], []
             for i in range(cfg.n_layers):
                 lp = jax.tree.map(lambda p: p[i], params["layers"])
-                lc = {"k": cache["k"][i], "v": cache["v"][i]}
+                lc = {k: v[i] for k, v in layer_cache.items()}
                 x, nc = _decoder_layer_decode(lp, x, lc, length, cfg, ctx)
                 ks.append(nc["k"])
                 vs.append(nc["v"])
+                if cfg.is_moe:
+                    cts.append(nc["moe"])
             kv = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+            if cfg.is_moe:
+                kv["moe"] = jnp.stack(cts)
         x = tfm.norm_fwd(params["final_norm"], x, cfg)
         logits = _logits(params, x, cfg, ctx)[:, 0]
         new_cache = {
@@ -397,6 +473,8 @@ def _build_decoder_model(cfg: ArchConfig, ctx: MeshContext) -> Model:
             "v": kv["v"],
             "length": length + 1,
         }
+        if cfg.is_moe:
+            new_cache["moe_counts"] = kv["moe"]
         return logits, new_cache
 
     return Model(
@@ -407,7 +485,7 @@ def _build_decoder_model(cfg: ArchConfig, ctx: MeshContext) -> Model:
         loss_fn=loss_fn,
         prefill=prefill,
         decode_step=decode_step,
-        cache_specs=functools.partial(_decoder_cache_specs, cfg),
+        cache_specs=functools.partial(_decoder_cache_specs, cfg, ctx),
     )
 
 

@@ -16,6 +16,21 @@ TPU expert parallelism:
 Expert count is padded up to a multiple of the EP axis size (padded
 experts are masked out of routing); the padding overhead is reported by
 ``padded_experts``.
+
+**Capacity consistency.**  The drop rule is *causal and per-sequence*: a
+token at absolute position ``p`` keeps its expert assignment iff the
+number of prior assignments to that expert within its own sequence
+(positions ``< p``, plus earlier top-k slots of the same token, plus the
+``expert_counts`` carried in from earlier chunks) is below the
+position-dependent capacity ``max(8, ceil((p+1) * top_k *
+capacity_factor / n_experts))``.  Because the rule never looks at other
+sequences or at future positions, batched prefill and per-token decode
+drop the *same* tokens -- thread ``base_pos`` (absolute position of each
+sequence's first token) and ``expert_counts`` (per-sequence running
+assignment totals, returned with ``return_counts=True``) through decode
+and the two paths agree exactly.  Token-sliced / sequence-sharded EP
+dispatch approximates the rule shard-locally (slices restart the causal
+count), so capacity-consistent decode requires the plain dispatch path.
 """
 
 from __future__ import annotations
@@ -76,22 +91,57 @@ def moe_param_specs(dims: MoeDims, fsdp_experts: bool) -> dict[str, Any]:
 def _dispatch_indices(
     logits: jax.Array,  # (T, E) fp32, padded experts already masked
     top_k: int,
-    capacity: int,
+    n_seqs: int,
+    base_pos: jax.Array,  # (n_seqs,) int32 absolute first positions
+    prior_counts: jax.Array,  # (n_seqs, E) int32 carried-in assignments
+    capacity_factor: float,
+    n_experts: int,
 ):
-    """Top-k routing with per-expert capacity positions.
+    """Causal per-sequence top-k routing with positional capacity.
 
-    Returns (expert_ids, gates, positions, keep) each shaped (T*k,).
+    Rows are ``n_seqs`` contiguous sequences of ``T / n_seqs`` tokens.  A
+    token's assignment ranks against prior same-sequence assignments only
+    (earlier positions + earlier slots of the same token + carried-in
+    ``prior_counts``), and keeps iff the rank is below the
+    position-dependent capacity -- the batch-shape-invariant rule that
+    makes prefill and decode drop identically.  Buffer positions are
+    ranks among *kept* assignments over the whole call, so distinct kept
+    tokens land in distinct (expert, slot) cells.
+
+    Returns ``(expert_ids, gates, buffer_pos, keep)`` each shaped
+    ``(T*k,)`` plus the updated ``(n_seqs, E)`` assignment counts.
     """
     t, e = logits.shape
+    s_loc = t // n_seqs
     top_logits, top_idx = jax.lax.top_k(logits, top_k)  # (T, k)
     gates = jax.nn.softmax(top_logits, axis=-1)
     e_flat = top_idx.reshape(-1)
     g_flat = gates.reshape(-1)
     onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)  # (T*k, E)
-    ranks = jnp.cumsum(onehot, axis=0) - onehot
-    pos = jnp.take_along_axis(ranks, e_flat[:, None], axis=1)[:, 0]
-    keep = pos < capacity
-    return e_flat, g_flat, pos, keep
+    per_seq = onehot.reshape(n_seqs, s_loc * top_k, e)
+    prior = jnp.cumsum(per_seq, axis=1) - per_seq
+    prior = prior + prior_counts[:, None, :]
+    rank = jnp.take_along_axis(
+        prior.reshape(t * top_k, e), e_flat[:, None], axis=1
+    )[:, 0]
+    pos = base_pos[:, None] + jnp.arange(s_loc, dtype=jnp.int32)
+    cap = jnp.maximum(
+        8,
+        jnp.ceil(
+            (pos + 1).astype(jnp.float32)
+            * top_k
+            * capacity_factor
+            / n_experts
+        ).astype(jnp.int32),
+    )
+    keep = rank < jnp.repeat(cap.reshape(-1), top_k)
+    kept = onehot * keep[:, None].astype(jnp.int32)
+    buf_rank = jnp.cumsum(kept, axis=0) - kept
+    buf_pos = jnp.take_along_axis(
+        buf_rank, e_flat[:, None], axis=1
+    )[:, 0]
+    new_counts = prior_counts + per_seq.sum(axis=1)
+    return e_flat, g_flat, buf_pos, keep, new_counts
 
 
 def _local_moe(
@@ -104,21 +154,43 @@ def _local_moe(
     act_name: str,
     ep_axis: str | None,
     fsdp_axis: str | None,
+    n_seqs: int,
+    base_pos: jax.Array,  # (n_seqs,) int32
+    prior_counts: jax.Array,  # (n_seqs, E) int32
+    zero_base: bool,
 ):
-    """Per-device MoE body (runs inside shard_map)."""
+    """Per-device MoE body (runs inside shard_map).
+
+    ``zero_base`` (static) asserts every sequence starts at position 0
+    with no carried-in counts, which lets the dispatch buffer use the
+    tighter end-of-call capacity bound instead of the all-kept worst
+    case.
+    """
     t, d = x.shape
     e = dims.n_experts_padded
     act = activation(act_name)
-    capacity = max(
-        8, math.ceil(t * dims.top_k * dims.capacity_factor / e)
-    )
+    # Static per-expert buffer bound on *kept* assignments: per sequence
+    # at most s_loc * k slots, and with zero-base positions at most the
+    # end-of-call positional capacity.
+    s_loc = t // n_seqs
+    per_seq = s_loc * dims.top_k
+    if zero_base:
+        per_seq = min(
+            per_seq,
+            max(8, math.ceil(per_seq * dims.capacity_factor / e)),
+        )
+    capacity = max(1, n_seqs * per_seq)
 
     logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))
     if dims.n_experts != e:
         pad_mask = jnp.arange(e) < dims.n_experts
         logits = jnp.where(pad_mask[None], logits, -1e30)
-    e_flat, g_flat, pos, keep = _dispatch_indices(
-        logits, dims.top_k, capacity
+    # The positional-capacity denominator is the padded expert count --
+    # the same normalization as the buffer bound above, so kept
+    # assignments can never overflow the (E, C, D) scatter buffer.
+    e_flat, g_flat, pos, keep, new_counts = _dispatch_indices(
+        logits, dims.top_k, n_seqs, base_pos, prior_counts,
+        dims.capacity_factor, e,
     )
     t_flat = jnp.repeat(jnp.arange(t), dims.top_k)
 
@@ -174,7 +246,7 @@ def _local_moe(
     y = jax.ops.segment_sum(
         gathered * weights[:, None], t_flat, num_segments=t
     )
-    return y.astype(x.dtype), aux_loss, drop_frac
+    return y.astype(x.dtype), aux_loss, drop_frac, new_counts
 
 
 def moe_ffn(
@@ -189,7 +261,10 @@ def moe_ffn(
     fsdp_experts: bool = False,
     token_slice: bool = False,
     seq_sharded: bool = False,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+    base_pos: jax.Array | None = None,
+    expert_counts: jax.Array | None = None,
+    return_counts: bool = False,
+):
     """Expert-parallel MoE FFN: returns (y, aux_loss, drop_frac).
 
     ``token_slice`` (beyond-baseline Perf lever): activations are
@@ -203,11 +278,32 @@ def moe_ffn(
     stream already sharded over the EP axis on the sequence dim -- the
     SP shard IS the token slice, so neither the input all-gather nor the
     output re-assembly collective is needed at all.
+
+    Capacity-consistent decode (the causal drop rule, module docstring):
+    ``base_pos`` (B,) gives each sequence's absolute first position
+    (``None`` = 0) and ``expert_counts`` (B, E_padded) the per-sequence
+    assignment totals carried in from earlier chunks; with
+    ``return_counts=True`` a fourth output returns the updated counts to
+    thread through a decode cache.  The counts contract holds on the
+    plain dispatch path; sliced/sequence-sharded dispatch returns the
+    input counts unchanged (shard-local causal approximation).
     """
     b, s, d = x.shape
+    e_pad = dims.n_experts_padded
     ep_size = mesh.shape[ep_axis]
     ep = ep_axis if ep_size > 1 else None
     seq_sharded = seq_sharded and ep is not None and s % ep_size == 0
+    zero_base = base_pos is None and expert_counts is None
+    bpos = (
+        jnp.zeros((b,), jnp.int32)
+        if base_pos is None
+        else base_pos.astype(jnp.int32)
+    )
+    counts_in = (
+        jnp.zeros((b, e_pad), jnp.int32)
+        if expert_counts is None
+        else expert_counts.astype(jnp.int32)
+    )
     fsdp_axis = None
     expert_ffn_spec: str | None = None
     if fsdp_experts:
@@ -219,8 +315,10 @@ def moe_ffn(
     x_spec = P(dp_spec, ep_axis if seq_sharded else None, None)
     expert_spec = P(ep_axis if ep_size > 1 else None, None, expert_ffn_spec)
     down_spec = P(ep_axis if ep_size > 1 else None, expert_ffn_spec, None)
+    seq_state_spec = P(dp_spec)
+    counts_spec = P(dp_spec, None)
 
-    def body(xb, router, w_gate, w_up, w_down):
+    def body(xb, router, w_gate, w_up, w_down, bp, counts):
         xt = xb.reshape(-1, d)
         t_full = xt.shape[0]
         sliced = (
@@ -233,7 +331,25 @@ def moe_ffn(
             rank = jax.lax.axis_index(ep_axis)
             t_loc = t_full // ep_size
             xt = jax.lax.dynamic_slice_in_dim(xt, rank * t_loc, t_loc)
-        y, aux, drop = _local_moe(
+        if seq_sharded:
+            # Per-rank sequence shard: positions offset by the shard
+            # start; the causal rule applies within the shard only.
+            n_seqs = xb.shape[0]
+            bp_loc = bp + jax.lax.axis_index(ep_axis) * xb.shape[1]
+            counts_loc = counts
+            zb = False
+        elif sliced:
+            # Flat token slice: one anonymous zero-based sequence block.
+            n_seqs = 1
+            bp_loc = jnp.zeros((1,), jnp.int32)
+            counts_loc = jnp.zeros((1, e_pad), jnp.int32)
+            zb = True
+        else:
+            n_seqs = xb.shape[0]
+            bp_loc = bp
+            counts_loc = counts
+            zb = zero_base
+        y, aux, drop, new_counts = _local_moe(
             xt,
             router,
             w_gate,
@@ -243,10 +359,18 @@ def moe_ffn(
             act_name,
             ep,
             fsdp_axis if fsdp_experts else None,
+            n_seqs,
+            bp_loc,
+            counts_loc,
+            zb,
         )
         if sliced:
             # Rank-ordered slices reassemble with one all_gather.
             y = jax.lax.all_gather(y, ep_axis, axis=0, tiled=True)
+        if sliced or seq_sharded:
+            # Shard-local counts are partial; the consistency contract is
+            # documented for the plain path only.
+            new_counts = counts
         # Average the scalar diagnostics over the data axes (plus the EP
         # axis when token slices differ per rank).
         stat_axes = dp_axes + (
@@ -254,20 +378,28 @@ def moe_ffn(
         )
         aux = jax.lax.pmean(aux, stat_axes)
         drop = jax.lax.pmean(drop, stat_axes)
-        return y.reshape(xb.shape), aux, drop
+        return y.reshape(xb.shape), aux, drop, new_counts
 
     # check_vma=False: every device in a data row holds identical tokens
     # (x replicated over the model axis), so y/aux/drop are replicated over
     # 'model' by construction -- but the static varying-axes checker cannot
     # see through all_to_all.  The redundant per-row dispatch compute this
     # implies is a recorded Perf lever (EP token slicing, EXPERIMENTS.md).
-    y, aux, drop = shard_map_compat(
+    y, aux, drop, counts_out = shard_map_compat(
         body,
         mesh=mesh,
-        in_specs=(x_spec, P(), expert_spec, expert_spec, down_spec),
-        out_specs=(x_spec, P(), P()),
+        in_specs=(
+            x_spec, P(), expert_spec, expert_spec, down_spec,
+            seq_state_spec, counts_spec,
+        ),
+        out_specs=(x_spec, P(), P(), counts_spec),
         check_vma=False,
-    )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+    )(
+        x, params["router"], params["w_gate"], params["w_up"],
+        params["w_down"], bpos, counts_in,
+    )
+    if return_counts:
+        return y, aux, drop, counts_out
     return y, aux, drop
 
 

@@ -42,16 +42,14 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-import os
 
 from repro.core.baselines import strawman_instance
 from repro.core.fabric import OpticalFabric
 from repro.core.ir import (
-    BackendUnavailable,
     BatchInstance,
     batch_evaluate,
-    get_backend,
 )
+from repro.core.ir.backends import select_backend_by_size
 from repro.core.patterns import Pattern, get_pattern
 from repro.core.schedule import DependencyMode, Kind, Schedule
 from repro.core.scheduler import swot_schedule
@@ -467,27 +465,16 @@ class FabricArbiter:
         An explicit arbiter ``backend`` always wins.  Otherwise the jax
         backend is auto-selected once the candidate batch reaches
         ``REPRO_ARBITER_BACKEND_THRESHOLD`` rows (default
-        ``_DEFAULT_BACKEND_THRESHOLD``) -- large batches amortize jit
-        dispatch while small ones are faster on the numpy reference --
-        falling back to the env-default (numpy) when jax is unavailable
-        on this host.  A threshold <= 0 disables auto-selection.
+        ``_DEFAULT_BACKEND_THRESHOLD``) -- the shared
+        `repro.core.ir.backends.select_backend_by_size` policy, which the
+        grid planners apply with their own threshold env too.
         """
-        if self.backend is not None:
-            return self.backend
-        raw = os.environ.get(ENV_BACKEND_THRESHOLD, "")
-        try:
-            threshold = int(raw) if raw else _DEFAULT_BACKEND_THRESHOLD
-        except ValueError as exc:
-            raise ValueError(
-                f"{ENV_BACKEND_THRESHOLD} must be an integer, got {raw!r}"
-            ) from exc
-        if threshold <= 0 or n_candidates < threshold:
-            return None  # env default: numpy unless REPRO_IR_BACKEND says
-        try:
-            get_backend("jax")
-        except BackendUnavailable:
-            return None
-        return "jax"
+        return select_backend_by_size(
+            n_candidates,
+            ENV_BACKEND_THRESHOLD,
+            _DEFAULT_BACKEND_THRESHOLD,
+            explicit=self.backend,
+        )
 
     # -- plan surgery -------------------------------------------------------
     def _cut_plan(self, job: _Job, cutoff: float) -> None:

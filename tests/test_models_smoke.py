@@ -91,13 +91,13 @@ def test_grads_finite(arch):
 
 
 def test_prefill_decode_consistency(arch):
-    """prefill(S) last-logits == prefill(S-k) + k decode steps."""
+    """prefill(S) last-logits == prefill(S-k) + k decode steps.
+
+    MoE archs included: the capacity-consistent decode path (causal
+    per-sequence drops + expert-count cache threading) makes batched
+    prefill and per-token decode drop identical tokens.
+    """
     cfg, model, params = arch
-    if cfg.is_moe:
-        # Pre-existing divergence: MoE expert-capacity drops differ
-        # between batched prefill and per-token decode, shifting logits
-        # past tolerance.  Tracked in ROADMAP open items.
-        pytest.xfail("MoE prefill/decode capacity divergence (known)")
     batch = make_batch(cfg, PREFILL_CELL, jax.random.PRNGKey(3))
     tokens = batch["tokens"]
     s = tokens.shape[1]
