@@ -17,6 +17,11 @@ What is gated (and why):
   the guarded pick): a bypass CCT reduction that shrinks past the band
   fails here, on top of the strict in-run gate ``ir_sweep.bypass_sweep``
   asserts at the documented high-``t_recfg`` point.
+* **Higher-is-better points** -- deterministic rows named
+  ``*_overlap_eff`` (attributed fraction of reconfiguration time the
+  schedule hides behind transmission) and ``*_hit_rate`` (bypass
+  steps served by relays): these fail when the current value falls
+  *below* baseline by more than the band.
 * **Speedup ratios** -- ``speedup_vs_numpy`` per backend from
   ``BENCH_backends.json`` and the INDEPENDENT-grid
   ``speedup_vs_per_instance``.  Ratios compare two timings from the
@@ -53,11 +58,26 @@ import pathlib
 import re
 import sys
 
-# Sweep rows whose us_per_call is a wall-clock measurement (machine
-# dependent): excluded from the deterministic-point comparison.
-_TIMING_ROW = re.compile(
-    r"(wall_time|ir_sweep_|indep_grid_|ir_backend_|_solve_time|_us$)"
+sys.path.insert(
+    0, str(pathlib.Path(__file__).resolve().parent.parent / "src")
 )
+
+from repro.obs import get_logger  # noqa: E402
+
+log = get_logger("check_regression")
+
+# Sweep rows whose us_per_call is a wall-clock measurement (machine
+# dependent): excluded from the deterministic-point comparison.  The
+# ``_us$`` suffix covers the per-phase timing rows and
+# ``events_per_sec`` the replay-throughput row (wall-clock derived).
+_TIMING_ROW = re.compile(
+    r"(wall_time|ir_sweep_|indep_grid_|ir_backend_|_solve_time|_us$"
+    r"|events_per_sec)"
+)
+# Deterministic sweep rows where LARGER is better (overlap efficiency,
+# bypass hit rate): gated on falling below baseline instead of rising
+# above it.
+_HIGHER_BETTER = re.compile(r"(overlap_eff|hit_rate)$")
 # Backends whose speedup ratio is not meaningful on CI hosts.
 _UNGATED_BACKENDS = frozenset({"pallas"})
 
@@ -120,14 +140,21 @@ def compare(
             failures.append(f"sweep point {name!r} missing from current run")
             continue
         cur = cur_sweep[name]
-        if base > 0 and cur > base * (1.0 + tolerance):
+        if _HIGHER_BETTER.search(name):
+            if base > 0 and cur < base * (1.0 - tolerance):
+                failures.append(
+                    f"sweep point {name!r} regressed: {cur:.3f} vs "
+                    f"baseline {base:.3f} ({cur / base - 1.0:.0%}, "
+                    f"higher-is-better band is {tolerance:.0%})"
+                )
+        elif base > 0 and cur > base * (1.0 + tolerance):
             failures.append(
                 f"sweep point {name!r} regressed: {cur:.3f} vs baseline "
                 f"{base:.3f} (+{cur / base - 1.0:.0%}, band is "
                 f"{tolerance:.0%})"
             )
     for name in sorted(set(cur_sweep) - set(base_sweep)):
-        print(f"note: new sweep point {name!r} (no baseline yet)")
+        log.info(f"note: new sweep point {name!r} (no baseline yet)")
 
     base_ratio = _speedup_ratios(_load(baseline_dir / BACKENDS_NAME))
     cur_ratio = _speedup_ratios(_load(current_dir / BACKENDS_NAME))
@@ -146,10 +173,11 @@ def compare(
                 f"{tolerance:.0%})"
             )
     for name in sorted(set(cur_ratio) - set(base_ratio)):
-        print(f"note: new ratio {name!r} (no baseline yet)")
+        log.info(f"note: new ratio {name!r} (no baseline yet)")
 
     n_checked = len(base_sweep) + len(base_ratio)
-    print(
+    # The verdict is the script's contract (CI greps it): data channel.
+    log.data(
         f"checked {len(base_sweep)} sweep points + {len(base_ratio)} "
         f"throughput ratios against {baseline_dir} "
         f"(band {tolerance:.0%}): "
@@ -182,7 +210,7 @@ def main(argv: list[str] | None = None) -> int:
     args = parser.parse_args(argv)
     failures = compare(args.baseline, args.current, args.tolerance)
     for failure in failures:
-        print(f"REGRESSION: {failure}", file=sys.stderr)
+        log.warning(f"REGRESSION: {failure}")
     return 1 if failures else 0
 
 

@@ -55,8 +55,9 @@ from repro.core import (
 )
 from repro.core.ir import BackendUnavailable, get_backend, resolve_backend
 from repro.core.ir.engine import pack_instances
-from repro.core.schedule import DependencyMode, validate_object
+from repro.core.schedule import DependencyMode, Kind, validate_object
 from repro.core.simulator import execute
+from repro.obs import attribute
 
 
 def _object_path_cct(inst: BatchInstance) -> float:
@@ -130,7 +131,7 @@ def run(
             t_batch * 1e6 / n,
             f"speedup={speedup:.1f}x max_cct_err={err:.1e}",
         ),
-    ] + independent_grid_rows() + bypass_rows()
+    ] + independent_grid_rows() + bypass_rows() + attribution_rows()
 
 
 # INDEPENDENT-mode grid: 16 sizes x 16 delays of 64-node pairwise
@@ -312,11 +313,122 @@ def bypass_sweep(quick: bool = False) -> list[tuple[str, float, str]]:
                 1 for a in schedule.activities if a.route >= 0
             )
             assert n_relays > 0, "gate point used no relays"
+            # Bypass hit rate: of the steps that needed a circuit
+            # change, the fraction served by relaying over installed
+            # circuits instead of reconfiguring.  Deterministic and
+            # gated HIGHER-is-better by check_regression.
+            relay_steps = {
+                a.step for a in schedule.activities if a.route >= 0
+            }
+            recfg_steps = {
+                a.step
+                for a in schedule.activities
+                if a.kind is Kind.RECFG
+            }
+            denom = len(relay_steps | recfg_steps)
+            rows.append(
+                (
+                    f"{label}_t{t_us:.0f}_bypass_hit_rate",
+                    len(relay_steps) / denom if denom else 0.0,
+                    f"{len(relay_steps)} relay vs {len(recfg_steps)} "
+                    "reconfig steps",
+                )
+            )
     return rows
 
 
 # Back-compat friendly alias used by ``run``.
 bypass_rows = bypass_sweep
+
+
+# CCT-attribution sweep: overlap efficiency of the greedy plans across
+# the t_recfg axis for the two headline algorithms.  Simulated
+# quantities (deterministic on any machine), gated HIGHER-is-better by
+# check_regression: an overlap-efficiency drop past the band means a
+# scheduler change stopped hiding reconfigurations it used to hide.
+_ATTR_NODES = 8
+_ATTR_PLANES = 4
+_ATTR_SIZE = 8e6
+_ATTR_RECFGS = (50e-6, 200e-6, 3.2e-3)
+_ATTR_ALGS = (
+    ("rab", rabenseifner_allreduce),
+    ("pw", pairwise_alltoall),
+)
+
+
+def attribution_rows(quick: bool = False) -> list[tuple[str, float, str]]:
+    """Overlap-efficiency rows from attributed greedy plans.
+
+    One ``swot_greedy_grid`` pass plans every cell; every available
+    timing backend then re-evaluates the batch with
+    ``attribution=True``.  In-run gates: components must sum *bitwise*
+    to the CCT on every backend, efficiencies must agree across
+    backends within 1e-9, and the object-walk oracle
+    (``repro.obs.attribute`` over ``execute``) must agree per cell.
+    """
+    del quick  # 6 cells; the sweep IS the CI smoke test
+    cells = []
+    labels = []
+    for tag, make in _ATTR_ALGS:
+        pattern = make(_ATTR_NODES, _ATTR_SIZE)
+        for t_recfg in _ATTR_RECFGS:
+            fabric = OpticalFabric(
+                _ATTR_NODES, _ATTR_PLANES, t_recfg=t_recfg
+            ).prestaged(pattern.steps[0].config)
+            cells.append((fabric, pattern))
+            labels.append(
+                f"attr_{tag}{_ATTR_NODES}x{_ATTR_PLANES}"
+                f"_t{t_recfg * 1e6:.0f}_overlap_eff"
+            )
+    plans = swot_greedy_grid(cells, backend="numpy")
+    instances = [
+        BatchInstance(p.fabric, p.pattern, p.decisions) for p in plans
+    ]
+    eff = hidden = exposed = None
+    for name in ("numpy", "jax", "pallas"):
+        try:
+            get_backend(name)
+        except BackendUnavailable:
+            continue
+        result = batch_evaluate(instances, backend=name, attribution=True)
+        att = result.attribution
+        total = np.where(att.plane_mask, att.plane_total, 0.0)
+        want = np.where(att.plane_mask, result.cct[:, None], 0.0)
+        assert np.array_equal(total, want), (
+            f"{name} attribution components do not sum bitwise to CCT"
+        )
+        if eff is None:
+            eff = att.overlap_efficiency
+            hidden, exposed = att.hidden_recfg, att.exposed_recfg
+        else:
+            err = float(np.max(np.abs(att.overlap_efficiency - eff)))
+            assert err <= 1e-9, (
+                f"{name} overlap efficiency diverges from numpy by {err}"
+            )
+    assert eff is not None
+    rows = []
+    for label, inst, plan, e, h, x in zip(
+        labels, instances, plans, eff, hidden, exposed
+    ):
+        # Object-walk oracle parity per cell.
+        schedule = execute(
+            inst.fabric, inst.pattern, inst.decisions, validate=False
+        )
+        oracle = attribute(schedule)
+        o_eff = float(oracle.overlap_efficiency)
+        assert abs(o_eff - float(e)) <= 1e-9, (
+            f"{label}: object-walk efficiency {o_eff} vs batched {e}"
+        )
+        rows.append(
+            (
+                label,
+                float(e),
+                f"hidden={float(h) * 1e6:.1f}us "
+                f"exposed={float(x) * 1e6:.1f}us "
+                f"cct={plan.cct * 1e6:.1f}us",
+            )
+        )
+    return rows
 
 
 # Large grid: 32 sizes x 32 delays of 128-node pairwise all-to-all
@@ -442,5 +554,8 @@ if __name__ == "__main__":
         "(default: REPRO_IR_BACKEND env, else numpy)",
     )
     cli = parser.parse_args()
+    from repro.obs import get_logger
+
+    log = get_logger("ir_sweep")
     for name, us, note in run(backend=cli.backend) + backend_rows():
-        print(f"{name},{us:.1f},{note}")
+        log.data(f"{name},{us:.1f},{note}")

@@ -55,6 +55,11 @@ def _tenant_mixes(n_tenants: int):
 def run(quick: bool = False) -> list[tuple[str, float, str]]:
     rows: list[tuple[str, float, str]] = []
     t_wall = time.perf_counter()
+    # Per-phase wall-clock accounting (the ``_us``-suffixed rows below):
+    # where a multi-tenant bench run actually spends its time, and the
+    # replay events/sec throughput that seeds ROADMAP item 2's gate.
+    t_ref_phase = t_trace_phase = t_replay_phase = 0.0
+    events_total = 0
     if quick:
         cells = [(2, 4, 200e-6)]
         rate, horizon = 30.0, 0.25
@@ -69,6 +74,7 @@ def run(quick: bool = False) -> list[tuple[str, float, str]]:
     # Whole-sweep lockstep-ICR reference: every (cell, collective
     # signature) pair becomes one row of a single batched IR evaluation
     # (timing backend follows REPRO_IR_BACKEND, like every IR sweep).
+    t0 = time.perf_counter()
     ref_keys: list[tuple[int, tuple]] = []
     ref_instances: list[BatchInstance] = []
     for idx, (n_tenants, n_planes, t_recfg) in enumerate(cells):
@@ -88,16 +94,22 @@ def run(quick: bool = False) -> list[tuple[str, float, str]]:
     straw_by_cell: dict[int, list[float]] = {}
     for (idx, _sig), cct in zip(ref_keys, ref_ccts):
         straw_by_cell.setdefault(idx, []).append(float(cct))
+    t_ref_phase = time.perf_counter() - t0
 
     for idx, (n_tenants, n_planes, t_recfg) in enumerate(cells):
         fabric = OpticalFabric(_N_NODES, n_planes, t_recfg=t_recfg)
+        t0 = time.perf_counter()
         trace = poisson_trace(
             _tenant_mixes(n_tenants),
             rate=rate,
             horizon=horizon,
             seed=7,
         )
+        t_trace_phase += time.perf_counter() - t0
+        t0 = time.perf_counter()
         report = replay(trace, fabric, method="greedy")
+        t_replay_phase += time.perf_counter() - t0
+        events_total += report.events_fired
         cell = (
             f"mt_t{n_tenants}_p{n_planes}_r{t_recfg * 1e6:.0f}us"
         )
@@ -123,6 +135,35 @@ def run(quick: bool = False) -> list[tuple[str, float, str]]:
         )
     rows.append(
         (
+            "mt_phase_solo_ref_us",
+            t_ref_phase * 1e6,
+            f"{len(ref_instances)} solo-reference instances (wall)",
+        )
+    )
+    rows.append(
+        (
+            "mt_phase_tracegen_us",
+            t_trace_phase * 1e6,
+            f"{len(cells)} cells (wall)",
+        )
+    )
+    rows.append(
+        (
+            "mt_phase_replay_us",
+            t_replay_phase * 1e6,
+            f"{events_total} sim events (wall)",
+        )
+    )
+    rows.append(
+        (
+            "mt_events_per_sec",
+            events_total / t_replay_phase if t_replay_phase else 0.0,
+            f"{events_total} events in {t_replay_phase * 1e3:.1f}ms "
+            "of replay (wall)",
+        )
+    )
+    rows.append(
+        (
             "multi_tenant_wall_time",
             (time.perf_counter() - t_wall) * 1e6,
             "bench runtime",
@@ -132,5 +173,8 @@ def run(quick: bool = False) -> list[tuple[str, float, str]]:
 
 
 if __name__ == "__main__":
+    from repro.obs import get_logger
+
+    log = get_logger("multi_tenant_bench")
     for name, us, note in run():
-        print(f"{name},{us:.1f},{note}")
+        log.data(f"{name},{us:.1f},{note}")

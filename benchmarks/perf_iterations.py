@@ -19,6 +19,10 @@ os.environ.setdefault(
 import argparse
 import json
 
+from repro.obs import get_logger
+
+log = get_logger("perf_iterations")
+
 # Cumulative optimization ladders per hillclimbed cell.  Each entry:
 # (variant_name, config_overrides, hypothesis)
 LADDERS = {
@@ -208,7 +212,7 @@ def report(records: list[dict]) -> None:
         if prev is not None:
             db = r[prev["dominant"] + "_s"] / prev[prev["dominant"] + "_s"]
             line += f"  (dominant term x{db:.2f})"
-        print(line)
+        log.info(line)
         prev = r
 
 
@@ -220,9 +224,9 @@ def main() -> None:
     args = parser.parse_args()
     names = list(LADDERS) if args.cell == "all" else [args.cell]
     for name in names:
-        print(f"=== perf ladder: {name} ===")
+        log.info(f"=== perf ladder: {name} ===")
         report(run_ladder(name, force=args.force))
-        print()
+        log.info("")
 
 
 if __name__ == "__main__":

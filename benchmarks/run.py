@@ -43,6 +43,11 @@ import sys
 import time
 
 _REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO_ROOT / "src"))
+
+from repro.obs import get_logger  # noqa: E402
+
+log = get_logger("benchmarks")
 
 
 def main() -> None:
@@ -73,7 +78,10 @@ def main() -> None:
     only = args[0] if args else None
     points: list[dict] = []
     module_wall: dict[str, float] = {}
-    print("name,us_per_call,derived")
+    # CSV rows are the program's machine-readable contract -- they go
+    # through the always-on data channel; REPRO_LOG only affects the
+    # narrative channel.
+    log.data("name,us_per_call,derived")
     for module in modules:
         if only and only not in module.__name__:
             continue
@@ -91,7 +99,7 @@ def main() -> None:
             rows = module.run()
         module_wall[module.__name__] = time.perf_counter() - t_wall
         for name, us, note in rows:
-            print(f"{name},{us:.1f},{note}", flush=True)
+            log.data(f"{name},{us:.1f},{note}")
             points.append(
                 {"name": name, "us_per_call": round(us, 3), "note": note}
             )
@@ -110,7 +118,7 @@ def main() -> None:
             f"speedup={entry['speedup_vs_numpy']}x"
         )
         us = entry.get("us_per_instance", 0.0)
-        print(f"ir_backend_{name},{us:.1f},{note}", flush=True)
+        log.data(f"ir_backend_{name},{us:.1f},{note}")
     backends_name = (
         "BENCH_backends.json" if quick else "BENCH_backends_full.json"
     )

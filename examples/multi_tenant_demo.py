@@ -7,16 +7,28 @@ growing leases at step boundaries; the replay prints per-job realized
 CCT, queueing delay, and fabric utilization -- then contrasts the same
 trace on a serial (one-collective-at-a-time) fabric.
 
-    PYTHONPATH=src python examples/multi_tenant_demo.py
+``--trace out.json`` records the replay with ``repro.obs.ChromeTracer``
+and writes Chrome trace-event JSON: load it at https://ui.perfetto.dev
+to see per-plane transmit/reconfigure spans, lease churn, and queue
+depth over simulated time.  Narrative output goes through the
+``repro.obs`` logger (``REPRO_LOG=quiet`` silences it, ``=json``
+renders JSON lines).
+
+    PYTHONPATH=src python examples/multi_tenant_demo.py [--trace out.json]
 """
+
+import argparse
 
 from repro.configs.registry import get_config
 from repro.core import OpticalFabric, get_pattern, swot_schedule
+from repro.obs import ChromeTracer, get_logger
 from repro.runtime import arch_request_mix, poisson_trace, replay
 
 N_NODES = 8
 N_PLANES = 4
 SIZE_SCALE = 1 / 256  # demo-scale messages (full DP syncs are GBs)
+
+log = get_logger("multi_tenant_demo")
 
 
 def scaled_mix(name: str):
@@ -30,6 +42,14 @@ def scaled_mix(name: str):
 
 
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--trace",
+        metavar="OUT.json",
+        default=None,
+        help="write the replay as Chrome trace-event JSON (Perfetto)",
+    )
+    args = parser.parse_args()
     fabric = OpticalFabric(N_NODES, N_PLANES)
     tenants = [
         ("qwen3_4b", scaled_mix("qwen3_4b")),
@@ -42,18 +62,19 @@ def main() -> None:
         seed=7,
         priorities={"qwen3_4b": 1},  # dense job preempts queue order
     )
-    print(
+    log.info(
         f"{len(trace)} collectives from {len(tenants)} tenants on "
         f"{N_NODES} nodes x {N_PLANES} planes\n"
     )
 
-    report = replay(trace, fabric, method="greedy")
-    print("== shared fabric (arbitrated) ==")
-    print(report.summary())
+    tracer = ChromeTracer() if args.trace else None
+    report = replay(trace, fabric, method="greedy", tracer=tracer)
+    log.info("== shared fabric (arbitrated) ==")
+    log.info(report.summary())
 
-    print("\nper-job timeline (first 10):")
+    log.info("\nper-job timeline (first 10):")
     for r in report.records[:10]:
-        print(
+        log.info(
             f"  t={r.arrival * 1e3:7.2f}ms {r.tag:32s} "
             f"wait={r.queueing_delay * 1e6:8.1f}us "
             f"cct={r.cct * 1e6:8.1f}us "
@@ -74,12 +95,19 @@ def main() -> None:
         serial_busy += schedule.cct
     last_arrival = max(s.arrival for s in trace)
     serial_makespan = max(last_arrival, serial_busy)
-    print(
+    log.info(
         f"\n== serial fabric (one collective at a time) ==\n"
         f"sum of solo CCTs {serial_busy * 1e3:.2f} ms "
         f"(makespan >= {serial_makespan * 1e3:.2f} ms vs arbitrated "
         f"{report.makespan * 1e3:.2f} ms)"
     )
+
+    if tracer is not None:
+        tracer.write(args.trace)
+        log.info(
+            f"\nwrote {len(tracer.events)} trace events to {args.trace} "
+            "(open at https://ui.perfetto.dev)"
+        )
 
 
 if __name__ == "__main__":

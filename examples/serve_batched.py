@@ -7,8 +7,11 @@ import jax
 
 from repro.configs.registry import smoke_config
 from repro.models.lm import build_model
+from repro.obs import get_logger
 from repro.serve.engine import Request, ServeEngine
 from repro.sharding.rules import single_device_context
+
+log = get_logger("serve_batched")
 
 
 def main() -> None:
@@ -26,7 +29,7 @@ def main() -> None:
     ]
     completions = engine.generate(requests)
     for i, c in enumerate(completions):
-        print(f"request {i}: prompt={c.prompt} -> tokens={c.tokens}")
+        log.info(f"request {i}: prompt={c.prompt} -> tokens={c.tokens}")
 
 
 if __name__ == "__main__":

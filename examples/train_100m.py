@@ -16,11 +16,14 @@ from repro.configs.base import ArchConfig, ShapeCell
 from repro.data.pipeline import SyntheticPipeline
 from repro.models.common import param_count
 from repro.models.lm import build_model
+from repro.obs import get_logger
 from repro.optim.adamw import AdamWConfig
 from repro.sharding.rules import single_device_context
 from repro.train.checkpoint import latest_step, restore_checkpoint
 from repro.train.ft import run_with_restarts
 from repro.train.loop import Trainer
+
+log = get_logger("train_100m")
 
 PRESETS = {
     # ~100M params: 12L x 640d, SwiGLU 2560, 10 heads, 32k vocab.
@@ -68,7 +71,7 @@ def main() -> None:
     cfg = PRESETS[args.preset]
     ctx = single_device_context()
     model = build_model(cfg, ctx)
-    print(f"{cfg.name}: {param_count(model.specs) / 1e6:.1f}M parameters")
+    log.info(f"{cfg.name}: {param_count(model.specs) / 1e6:.1f}M parameters")
     cell = ShapeCell("train", "train", args.seq, args.batch)
     trainer = Trainer(
         model=model,
@@ -82,7 +85,7 @@ def main() -> None:
     )
     resumed = latest_step(args.ckpt_dir)
     if resumed is not None:
-        print(f"resuming from checkpoint at step {resumed}")
+        log.info(f"resuming from checkpoint at step {resumed}")
     state, restarts = run_with_restarts(
         trainer,
         lambda: SyntheticPipeline(cfg, cell, seed=0),
@@ -94,7 +97,7 @@ def main() -> None:
     state2, data_state = restore_checkpoint(args.ckpt_dir, model)
     pipeline.restore(data_state)
     _, history = trainer.run(state2, pipeline, n_steps=3, log_every=1)
-    print(
+    log.info(
         f"finished at step {int(state.step)} (restarts={restarts}); "
         f"latest losses: {[round(h['loss'], 4) for h in history]}"
     )

@@ -53,11 +53,20 @@ class BackendUnavailable(RuntimeError):
 
 
 class TimingBackend:
-    """One implementation of the batched per-step timing recurrence."""
+    """One implementation of the batched per-step timing recurrence.
+
+    ``attribution=True`` asks for the per-(instance, step, plane) CCT
+    component arrays (`repro.obs.attribution`) alongside the scalar
+    outputs; backends that compute them hand the raw arrays to the shared
+    ``finalize_result`` epilogue, which closes the decomposition with the
+    idle term so conservation is bitwise everywhere.
+    """
 
     name: str = "abstract"
 
-    def derive_timing(self, packed: dict[str, np.ndarray]) -> BatchResult:
+    def derive_timing(
+        self, packed: dict[str, np.ndarray], attribution: bool = False
+    ) -> BatchResult:
         raise NotImplementedError
 
 
@@ -122,7 +131,9 @@ def pad_packed(
 # ---------------------------------------------------------------------------
 # NumPy reference backend
 # ---------------------------------------------------------------------------
-def _timing_numpy(p: dict[str, np.ndarray]) -> BatchResult:
+def _timing_numpy(
+    p: dict[str, np.ndarray], attribution: bool = False
+) -> BatchResult:
     """Earliest-start timing over the packed batch, one step per loop turn.
 
     Per-plane update order matches the object executor exactly (bypass
@@ -145,6 +156,12 @@ def _timing_numpy(p: dict[str, np.ndarray]) -> BatchResult:
     volume_ok = np.ones(b, dtype=bool)
     t_recfg = p["t_recfg"][:, None]
     chain = p["chain"][:, None]
+    att_xmit = att_byp = att_wait = att_hidden = None
+    if attribution:
+        att_xmit = np.zeros((b, s_max, n_p))
+        att_byp = np.zeros((b, s_max, n_p))
+        att_wait = np.zeros((b, s_max, n_p))
+        att_hidden = np.zeros((b, s_max, n_p))
     for i in range(s_max):
         v = p["vol"][:, i, :]
         live = p["step_mask"][:, i]
@@ -173,6 +190,10 @@ def _timing_numpy(p: dict[str, np.ndarray]) -> BatchResult:
                 end = start + rv / p["bw"][rows, jj]
                 free[rows, jj] = np.where(upd, end, free_j)
                 busy[rows, jj] += np.where(upd, end - start, 0.0)
+                if attribution:
+                    # One hop touches one plane per row, so the fancy
+                    # index has no duplicates within this statement.
+                    att_byp[rows, i, jj] += np.where(upd, end - start, 0.0)
                 prev_end = np.where(upd, end, prev_end)
             byp_end = np.maximum(
                 byp_end, np.where(route_live, prev_end, -np.inf)
@@ -194,12 +215,25 @@ def _timing_numpy(p: dict[str, np.ndarray]) -> BatchResult:
         )
         cfg = p["step_cfg"][:, i][:, None]
         need = active & (held != cfg)
+        free_before = free  # post-bypass, pre-reconfiguration plane state
         free = np.where(need, free + t_recfg, free)
         held = np.where(need, cfg, held)
         busy += np.where(need, t_recfg, 0.0)
         n_recfg += need.sum(axis=1)
         start = np.where(chain, np.maximum(barrier[:, None], free), free)
         end = start + v / p["bw"]
+        if attribution:
+            # Exposed reconfiguration: how much the reconfigure delayed
+            # this plane's transmission beyond the barrier it would have
+            # waited at anyway; the rest of t_recfg ran hidden under the
+            # previous step's window (the paper's overlap, measured).
+            start_nr = np.where(
+                chain, np.maximum(barrier[:, None], free_before), free_before
+            )
+            wait = np.where(need, start - start_nr, 0.0)
+            att_wait[:, i, :] = wait
+            att_hidden[:, i, :] = np.where(need, t_recfg - wait, 0.0)
+            att_xmit[:, i, :] = np.where(active, end - start, 0.0)
         free = np.where(active, end, free)
         busy += np.where(active, end - start, 0.0)
         step_end = np.where(active, end, -np.inf).max(axis=1, initial=-np.inf)
@@ -208,7 +242,16 @@ def _timing_numpy(p: dict[str, np.ndarray]) -> BatchResult:
         barrier = np.where(has_any, np.maximum(barrier, step_end), barrier)
         cct = np.where(has_any, np.maximum(cct, step_end), cct)
     return finalize_result(
-        cct, n_recfg, busy, feasible, volume_ok, p["plane_mask"]
+        cct,
+        n_recfg,
+        busy,
+        feasible,
+        volume_ok,
+        p["plane_mask"],
+        attribution=(
+            (att_xmit, att_byp, att_wait, att_hidden) if attribution else None
+        ),
+        step_mask=p["step_mask"] if attribution else None,
     )
 
 
@@ -217,8 +260,10 @@ class NumpyBackend(TimingBackend):
 
     name = "numpy"
 
-    def derive_timing(self, packed: dict[str, np.ndarray]) -> BatchResult:
-        return _timing_numpy(packed)
+    def derive_timing(
+        self, packed: dict[str, np.ndarray], attribution: bool = False
+    ) -> BatchResult:
+        return _timing_numpy(packed, attribution=attribution)
 
 
 # ---------------------------------------------------------------------------
@@ -234,9 +279,17 @@ def _require_jax():
     return jax
 
 
-def _build_jax_timing() -> Callable:
+def _build_jax_timing(attribution: bool = False) -> Callable:
     """The scan-lowered recurrence (built lazily so numpy users never
-    import jax)."""
+    import jax).
+
+    With ``attribution=True`` the scan additionally emits the per-step
+    component rows as ``ys`` -- stacked to (S, B, P) and transposed on
+    device -- from the same traced expressions the carry update uses, so
+    components match the scalar outputs float-for-float.  A separate
+    traced program per flag keeps the default path's compiled code
+    untouched.
+    """
     jax = _require_jax()
     import jax.numpy as jnp
 
@@ -264,6 +317,7 @@ def _build_jax_timing() -> Callable:
             byp_end = jnp.full(b, -jnp.inf, free.dtype)
             has_byp = jnp.zeros(b, bool)
             sent_byp = jnp.zeros(b, free.dtype)
+            att_byp = jnp.zeros_like(free)
             for r in range(n_routes):
                 rv = bv[:, r]
                 route_live = (rv > EPS_VOLUME) & live
@@ -286,6 +340,10 @@ def _build_jax_timing() -> Callable:
                     busy = busy + jnp.where(
                         mask, (end - start)[:, None], 0.0
                     )
+                    if attribution:
+                        att_byp = att_byp + jnp.where(
+                            mask, (end - start)[:, None], 0.0
+                        )
                     prev_end = jnp.where(upd, end, prev_end)
                 byp_end = jnp.maximum(
                     byp_end, jnp.where(route_live, prev_end, -jnp.inf)
@@ -300,6 +358,7 @@ def _build_jax_timing() -> Callable:
             )
             cfg = scfg[:, None]
             need = active & (held != cfg)
+            free_before = free
             free = jnp.where(need, free + t_recfg_c, free)
             held = jnp.where(need, cfg, held)
             busy = busy + jnp.where(need, t_recfg_c, 0.0)
@@ -308,6 +367,20 @@ def _build_jax_timing() -> Callable:
                 chain_c, jnp.maximum(barrier[:, None], free), free
             )
             end = start + v / bw
+            ys = None
+            if attribution:
+                start_nr = jnp.where(
+                    chain_c,
+                    jnp.maximum(barrier[:, None], free_before),
+                    free_before,
+                )
+                wait = jnp.where(need, start - start_nr, 0.0)
+                ys = (
+                    jnp.where(active, end - start, 0.0),
+                    att_byp,
+                    wait,
+                    jnp.where(need, t_recfg_c - wait, 0.0),
+                )
             free = jnp.where(active, end, free)
             busy = busy + jnp.where(active, end - start, 0.0)
             step_end = jnp.max(
@@ -321,7 +394,7 @@ def _build_jax_timing() -> Callable:
             cct = jnp.where(has_any, jnp.maximum(cct, step_end), cct)
             return (
                 free, held, barrier, cct, busy, n_recfg, feasible, volume_ok
-            ), None
+            ), ys
 
         carry = (
             ready,
@@ -341,9 +414,14 @@ def _build_jax_timing() -> Callable:
             jnp.swapaxes(byp_vol, 0, 1),  # (S, B, R)
             jnp.swapaxes(byp_plane, 0, 1),  # (S, B, R, H)
         )
-        (free, held, barrier, cct, busy, n_recfg, feasible, volume_ok), _ = (
+        (free, held, barrier, cct, busy, n_recfg, feasible, volume_ok), ys = (
             jax.lax.scan(body, carry, xs)
         )
+        if attribution:
+            # ys arrive stacked (S, B, P); batch-major like everything else.
+            return (cct, n_recfg, busy, feasible, volume_ok) + tuple(
+                jnp.moveaxis(y, 0, 1) for y in ys
+            )
         return cct, n_recfg, busy, feasible, volume_ok
 
     return jax.jit(fn)
@@ -356,7 +434,9 @@ class JaxBackend(TimingBackend):
 
     def __init__(self) -> None:
         _require_jax()
-        self._fn: Callable | None = None
+        # One compiled program per attribution flag (the ys outputs
+        # change the traced computation's signature).
+        self._fns: dict[bool, Callable] = {}
 
     def _padded(self, packed: dict[str, np.ndarray]):
         # Bucket the dimensions that vary continuously with sweep size
@@ -366,19 +446,26 @@ class JaxBackend(TimingBackend):
         b, s, p = packed["vol"].shape
         return pad_packed(packed, _bucket(b), s, _bucket(p)), (b, p)
 
-    def derive_timing(self, packed: dict[str, np.ndarray]) -> BatchResult:
+    def derive_timing(
+        self, packed: dict[str, np.ndarray], attribution: bool = False
+    ) -> BatchResult:
         from jax.experimental import enable_x64
 
-        if self._fn is None:
-            self._fn = _build_jax_timing()
+        fn = self._fns.get(attribution)
+        if fn is None:
+            fn = self._fns[attribution] = _build_jax_timing(attribution)
         padded, (b, p) = self._padded(packed)
         with enable_x64():
-            cct, n_recfg, busy, feasible, volume_ok = self._fn(
+            out = fn(
                 padded["vol"], padded["step_vol"], padded["step_cfg"],
                 padded["step_mask"], padded["plane_mask"], padded["bw"],
                 padded["init"], padded["t_recfg"], padded["chain"],
                 padded["ready"], padded["byp_vol"], padded["byp_plane"],
             )
+        cct, n_recfg, busy, feasible, volume_ok = out[:5]
+        att = None
+        if attribution:
+            att = tuple(np.asarray(a)[:b, :, :p] for a in out[5:])
         return finalize_result(
             np.asarray(cct)[:b],
             np.asarray(n_recfg)[:b],
@@ -386,6 +473,8 @@ class JaxBackend(TimingBackend):
             np.asarray(feasible)[:b],
             np.asarray(volume_ok)[:b],
             packed["plane_mask"],
+            attribution=att,
+            step_mask=packed["step_mask"] if attribution else None,
         )
 
 
@@ -426,7 +515,9 @@ class PallasBackend(TimingBackend):
             return self._interpret_override
         return os.environ.get(ENV_PALLAS_INTERPRET, "1") != "0"
 
-    def derive_timing(self, packed: dict[str, np.ndarray]) -> BatchResult:
+    def derive_timing(
+        self, packed: dict[str, np.ndarray], attribution: bool = False
+    ) -> BatchResult:
         from jax.experimental import enable_x64
 
         if packed["byp_vol"].size and packed["byp_vol"].any():
@@ -436,13 +527,20 @@ class PallasBackend(TimingBackend):
             # (same results -- the recurrences share one parity
             # contract).  Bypass-free batches, including all the gated
             # large-grid benchmarks, still run the kernel.
-            return _timing_numpy(packed)
+            return _timing_numpy(packed, attribution=attribution)
         b, s, p = packed["vol"].shape
         padded = pad_packed(packed, _bucket(b), s, _bucket(p))
         with enable_x64():
-            cct, n_recfg, busy, feasible, volume_ok = self._kernel(
-                padded, interpret=self.interpret
+            out = self._kernel(
+                padded, interpret=self.interpret, attribution=attribution
             )
+        cct, n_recfg, busy, feasible, volume_ok = out[:5]
+        att = None
+        if attribution:
+            # The kernel path never carries bypass routes (delegated
+            # above), so the relay component is exactly zero.
+            ax, aw, ah = (np.asarray(a)[:b, :, :p] for a in out[5:])
+            att = (ax, np.zeros_like(ax), aw, ah)
         return finalize_result(
             np.asarray(cct)[:b],
             np.asarray(n_recfg)[:b],
@@ -450,6 +548,8 @@ class PallasBackend(TimingBackend):
             np.asarray(feasible)[:b],
             np.asarray(volume_ok)[:b],
             packed["plane_mask"],
+            attribution=att,
+            step_mask=packed["step_mask"] if attribution else None,
         )
 
 

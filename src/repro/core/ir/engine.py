@@ -62,6 +62,7 @@ from repro.core.tolerances import (
 
 if TYPE_CHECKING:
     from repro.core.ir.backends import TimingBackend
+    from repro.obs.attribution import Attribution
 
 KIND_XMIT = 0
 KIND_RECFG = 1
@@ -506,6 +507,10 @@ class BatchResult:
     utilization: np.ndarray  # (B,)
     feasible: np.ndarray  # (B,) bool: every non-zero step had a server
     volume_ok: np.ndarray  # (B,) bool: splits conserve per-step volume
+    # CCT decomposition (``batch_evaluate(..., attribution=True)`` only):
+    # per-(instance, step, plane) component arrays summing bitwise to
+    # ``cct``.  See `repro.obs.attribution`.
+    attribution: "Attribution | None" = None
 
     def __len__(self) -> int:
         return int(self.cct.shape[0])
@@ -518,11 +523,18 @@ def finalize_result(
     feasible: np.ndarray,
     volume_ok: np.ndarray,
     plane_mask: np.ndarray,
+    attribution: tuple[np.ndarray, ...] | None = None,
+    step_mask: np.ndarray | None = None,
 ) -> BatchResult:
     """Assemble a ``BatchResult`` from raw recurrence outputs.
 
     One shared epilogue for every backend, so the utilization formula (and
     its tolerance behavior) cannot drift between numpy, jax, and Pallas.
+    ``attribution`` optionally carries the raw ``(t_xmit, t_bypass,
+    t_recfg_wait, t_recfg_hidden)`` component arrays, each (B, S, P);
+    the closing idle term is derived *here* (one canonical float
+    expression, `repro.obs.attribution.closing_idle`) so conservation is
+    bitwise on every backend by construction.
     """
     cct = np.asarray(cct, dtype=np.float64)
     busy = np.asarray(busy, dtype=np.float64)
@@ -532,6 +544,15 @@ def finalize_result(
         / np.maximum(cct * plane_mask.sum(axis=1), EPS),
         0.0,
     )
+    att = None
+    if attribution is not None:
+        from repro.obs.attribution import build_attribution
+
+        if step_mask is None:
+            raise ValueError("attribution requires step_mask")
+        att = build_attribution(
+            cct, *attribution, plane_mask=plane_mask, step_mask=step_mask
+        )
     return BatchResult(
         cct=cct,
         n_reconfigurations=np.asarray(n_recfg, dtype=np.int64),
@@ -539,6 +560,7 @@ def finalize_result(
         utilization=util,
         feasible=np.asarray(feasible, dtype=bool),
         volume_ok=np.asarray(volume_ok, dtype=bool),
+        attribution=att,
     )
 
 
@@ -669,6 +691,7 @@ def batch_evaluate(
     instances: Sequence[BatchInstance],
     plane_ready: Sequence[Sequence[float]] | None = None,
     backend: "str | TimingBackend | None" = None,
+    attribution: bool = False,
 ) -> BatchResult:
     """Evaluate many (fabric, pattern, decisions) cells in one array pass.
 
@@ -677,11 +700,24 @@ def batch_evaluate(
     per-instance plane ready-time offsets (the arbiter's re-planning case).
     ``backend`` selects the timing engine (``"numpy"`` | ``"jax"`` |
     ``"pallas"``, a ``TimingBackend`` instance, or ``None`` for the
-    ``REPRO_IR_BACKEND`` env default).
+    ``REPRO_IR_BACKEND`` env default).  ``attribution=True`` additionally
+    returns the per-(instance, step, plane) CCT decomposition on
+    ``BatchResult.attribution`` (`repro.obs.attribution`); the default
+    leaves the hot path untouched.
     """
     from repro.core.ir.backends import resolve_backend
 
     if not instances:
+        att = None
+        if attribution:
+            from repro.obs.attribution import build_attribution
+
+            att = build_attribution(
+                np.zeros(0),
+                *(np.zeros((0, 0, 0)) for _ in range(4)),
+                plane_mask=np.zeros((0, 0), dtype=bool),
+                step_mask=np.zeros((0, 0), dtype=bool),
+            )
         return BatchResult(
             cct=np.zeros(0),
             n_reconfigurations=np.zeros(0, dtype=np.int64),
@@ -689,9 +725,10 @@ def batch_evaluate(
             utilization=np.zeros(0),
             feasible=np.ones(0, dtype=bool),
             volume_ok=np.ones(0, dtype=bool),
+            attribution=att,
         )
     return resolve_backend(backend).derive_timing(
-        pack_instances(instances, plane_ready)
+        pack_instances(instances, plane_ready), attribution=attribution
     )
 
 

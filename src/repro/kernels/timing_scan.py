@@ -50,8 +50,9 @@ def _kernel(
     busy_ref,  # (blk, P) float
     feas_ref,  # (blk, 1) int32
     volok_ref,  # (blk, 1) int32
-    *,
+    *att_refs,  # attribution=True: xmit/wait/hidden, each (blk, S, P)
     n_steps: int,
+    attribution: bool = False,
 ):
     vol = vol_ref[...]
     step_vol = step_vol_ref[...]
@@ -66,7 +67,10 @@ def _kernel(
     fdtype = vol.dtype
 
     def body(i, carry):
-        free, held, barrier, cct, busy, n_recfg, feasible, volume_ok = carry
+        (
+            free, held, barrier, cct, busy, n_recfg, feasible, volume_ok,
+            att,
+        ) = carry
         v = jax.lax.dynamic_slice_in_dim(vol, i, 1, axis=1)[:, 0, :]
         live = jax.lax.dynamic_slice_in_dim(step_mask, i, 1, axis=1)
         svol = jax.lax.dynamic_slice_in_dim(step_vol, i, 1, axis=1)
@@ -82,6 +86,7 @@ def _kernel(
             ~live | (jnp.abs(sent - svol) <= cons_tol)
         )
         need = active & (held != scfg)
+        free_before = free
         free = jnp.where(need, free + t_recfg, free)
         held = jnp.where(need, scfg, held)
         busy = busy + jnp.where(need, t_recfg, 0.0)
@@ -90,6 +95,26 @@ def _kernel(
         )
         start = jnp.where(chain, jnp.maximum(barrier, free), free)
         end = start + v / bw
+        if attribution:
+            # Same expressions as the numpy/jax backends: exposed wait =
+            # barrier-relative delay the reconfigure added, hidden = the
+            # rest of t_recfg.  Rows land in the carried (blk, S, P)
+            # accumulators at step i.
+            start_nr = jnp.where(
+                chain, jnp.maximum(barrier, free_before), free_before
+            )
+            wait = jnp.where(need, start - start_nr, 0.0)
+            rows = (
+                jnp.where(active, end - start, 0.0),
+                wait,
+                jnp.where(need, t_recfg - wait, 0.0),
+            )
+            att = tuple(
+                jax.lax.dynamic_update_slice_in_dim(
+                    acc, row[:, None, :], i, axis=1
+                )
+                for acc, row in zip(att, rows)
+            )
         free = jnp.where(active, end, free)
         busy = busy + jnp.where(active, end - start, 0.0)
         step_end = jnp.max(
@@ -97,8 +122,12 @@ def _kernel(
         )
         barrier = jnp.where(has, jnp.maximum(barrier, step_end), barrier)
         cct = jnp.where(has, jnp.maximum(cct, step_end), cct)
-        return free, held, barrier, cct, busy, n_recfg, feasible, volume_ok
+        return (
+            free, held, barrier, cct, busy, n_recfg, feasible, volume_ok,
+            att,
+        )
 
+    n_att = 3 if attribution else 0
     carry = (
         ready_ref[...],
         init_ref[...],
@@ -108,32 +137,54 @@ def _kernel(
         jnp.zeros((blk, 1), jnp.int32),  # n_recfg
         jnp.ones((blk, 1), bool),  # feasible
         jnp.ones((blk, 1), bool),  # volume_ok
+        tuple(jnp.zeros_like(vol) for _ in range(n_att)),  # attribution
     )
-    free, held, barrier, cct, busy, n_recfg, feasible, volume_ok = (
-        jax.lax.fori_loop(0, n_steps, body, carry)
-    )
+    (
+        free, held, barrier, cct, busy, n_recfg, feasible, volume_ok, att
+    ) = jax.lax.fori_loop(0, n_steps, body, carry)
     cct_ref[...] = cct
     n_recfg_ref[...] = n_recfg
     busy_ref[...] = busy
     feas_ref[...] = feasible.astype(jnp.int32)
     volok_ref[...] = volume_ok.astype(jnp.int32)
+    for ref, acc in zip(att_refs, att):
+        ref[...] = acc
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "interpret")
+    jax.jit, static_argnames=("block_b", "interpret", "attribution")
 )
 def _timing_scan_call(
     vol, step_vol, step_cfg, step_mask, plane_mask, bw, init,
     t_recfg, chain, ready, *, block_b: int, interpret: bool,
+    attribution: bool,
 ):
     b, s, p = vol.shape
     fdtype = vol.dtype
     row = lambda width: pl.BlockSpec((block_b, width), lambda i: (i, 0))
+    cube = pl.BlockSpec((block_b, s, p), lambda i: (i, 0, 0))
+    out_specs = [row(1), row(1), row(p), row(1), row(1)]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, 1), fdtype),  # cct
+        jax.ShapeDtypeStruct((b, 1), jnp.int32),  # n_recfg
+        jax.ShapeDtypeStruct((b, p), fdtype),  # busy
+        jax.ShapeDtypeStruct((b, 1), jnp.int32),  # feasible
+        jax.ShapeDtypeStruct((b, 1), jnp.int32),  # volume_ok
+    ]
+    if attribution:
+        # xmit / exposed-wait / hidden component cubes; together with the
+        # input volume tile they grow the per-block VMEM working set 4x,
+        # so attribution sweeps on real hardware may need a smaller
+        # block_b (interpret mode is indifferent).
+        out_specs = out_specs + [cube, cube, cube]
+        out_shape = out_shape + [
+            jax.ShapeDtypeStruct((b, s, p), fdtype) for _ in range(3)
+        ]
     out = pl.pallas_call(
-        functools.partial(_kernel, n_steps=s),
+        functools.partial(_kernel, n_steps=s, attribution=attribution),
         grid=(b // block_b,),
         in_specs=[
-            pl.BlockSpec((block_b, s, p), lambda i: (i, 0, 0)),  # vol
+            cube,  # vol
             row(s),  # step_vol
             row(s),  # step_cfg
             row(s),  # step_mask
@@ -144,14 +195,8 @@ def _timing_scan_call(
             row(1),  # chain
             row(p),  # ready
         ],
-        out_specs=[row(1), row(1), row(p), row(1), row(1)],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, 1), fdtype),  # cct
-            jax.ShapeDtypeStruct((b, 1), jnp.int32),  # n_recfg
-            jax.ShapeDtypeStruct((b, p), fdtype),  # busy
-            jax.ShapeDtypeStruct((b, 1), jnp.int32),  # feasible
-            jax.ShapeDtypeStruct((b, 1), jnp.int32),  # volume_ok
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(
         vol, step_vol, step_cfg, step_mask, plane_mask, bw, init,
@@ -161,14 +206,19 @@ def _timing_scan_call(
 
 
 def timing_scan(
-    packed: dict, *, block_b: int = 8, interpret: bool = True
+    packed: dict, *, block_b: int = 8, interpret: bool = True,
+    attribution: bool = False,
 ):
     """Run the blocked-scan kernel over a packed (and padded) batch.
 
     ``packed`` is the `repro.core.ir.engine.pack_instances` layout, already
     padded so the batch dimension is a power of two (the backend's bucket
     padding guarantees this).  Returns ``(cct (B,), n_recfg (B,),
-    busy (B, P), feasible (B,), volume_ok (B,))`` as jax arrays.
+    busy (B, P), feasible (B,), volume_ok (B,))`` as jax arrays; with
+    ``attribution=True`` three (B, S, P) component cubes -- direct-xmit
+    time, exposed reconfiguration wait, overlapped reconfiguration --
+    are appended (the bypass component is structurally zero here: the
+    backend routes bypass-carrying batches to the numpy reference).
     """
     b = packed["vol"].shape[0]
     block = min(block_b, b)
@@ -176,7 +226,7 @@ def timing_scan(
         raise ValueError(
             f"batch {b} not a multiple of block {block}; bucket-pad first"
         )
-    cct, n_recfg, busy, feasible, volume_ok = _timing_scan_call(
+    out = _timing_scan_call(
         jnp.asarray(packed["vol"]),
         jnp.asarray(packed["step_vol"]),
         jnp.asarray(packed["step_cfg"], jnp.int32),
@@ -189,5 +239,8 @@ def timing_scan(
         jnp.asarray(packed["ready"]),
         block_b=block,
         interpret=interpret,
+        attribution=attribution,
     )
-    return cct[:, 0], n_recfg[:, 0], busy, feasible[:, 0], volume_ok[:, 0]
+    cct, n_recfg, busy, feasible, volume_ok = out[:5]
+    base = (cct[:, 0], n_recfg[:, 0], busy, feasible[:, 0], volume_ok[:, 0])
+    return base + tuple(out[5:]) if attribution else base

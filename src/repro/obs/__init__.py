@@ -1,0 +1,56 @@
+"""Observability: CCT attribution, fabric tracing, structured logging.
+
+Three answers to "where did the time go":
+
+* `repro.obs.attribution` -- per-(instance, step, plane) CCT
+  decomposition (transmit / bypass / exposed vs. hidden reconfiguration /
+  idle) with a bitwise conservation guarantee, from both the vectorized
+  engine (``batch_evaluate(..., attribution=True)``) and an object-walk
+  oracle (``attribute(schedule)``); the derived *overlap efficiency*
+  metric measures the paper's headline directly.
+* `repro.obs.trace` -- span/counter instrumentation for the multi-tenant
+  runtime behind a no-op default, exported as Chrome trace-event JSON
+  (Perfetto-loadable; pid ``fabric``, one thread row per plane).
+* `repro.obs.log` -- the structured logger the examples and benchmark
+  drivers use (``REPRO_LOG=`` plain | json | debug | quiet).
+
+See DESIGN.md section 16.
+"""
+
+from repro.obs.attribution import (
+    Attribution,
+    attribute,
+    build_attribution,
+    closing_idle,
+    component_sum,
+)
+from repro.obs.log import ENV_LOG, ObsLogger, get_logger
+from repro.obs.trace import (
+    JOBS_LANE,
+    NULL_TRACER,
+    ChromeTracer,
+    NullTracer,
+    Tracer,
+    trace_schedule,
+    validate_trace,
+    validate_trace_file,
+)
+
+__all__ = [
+    "Attribution",
+    "ChromeTracer",
+    "ENV_LOG",
+    "JOBS_LANE",
+    "NULL_TRACER",
+    "NullTracer",
+    "ObsLogger",
+    "Tracer",
+    "attribute",
+    "build_attribution",
+    "closing_idle",
+    "component_sum",
+    "get_logger",
+    "trace_schedule",
+    "validate_trace",
+    "validate_trace_file",
+]

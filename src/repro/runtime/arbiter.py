@@ -54,6 +54,7 @@ from repro.core.patterns import Pattern, get_pattern
 from repro.core.schedule import DependencyMode, Kind, Schedule
 from repro.core.scheduler import swot_schedule
 from repro.core.shim import _INDEPENDENT_SAFE, CollectiveRequest
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.runtime.engine import SimEngine
 from repro.core.tolerances import EPS as _EPS
 
@@ -166,6 +167,7 @@ class FabricArbiter:
         allow_independent: bool = False,
         rebalance: bool = True,
         backend: str | None = None,
+        tracer: Tracer | None = None,
     ) -> None:
         if min_planes < 1 or min_planes > fabric.n_planes:
             raise ValueError(
@@ -184,6 +186,10 @@ class FabricArbiter:
         # REPRO_ARBITER_BACKEND_THRESHOLD rows, the REPRO_IR_BACKEND env
         # default (numpy) below it (see `_select_backend`).
         self.backend = backend
+        # Structured tracing (repro.obs.trace).  The default NULL_TRACER
+        # has enabled=False; every site below guards on that flag, so the
+        # untraced cost is one attribute load per lifecycle event.
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self.stats = ArbiterStats()
         self.records: dict[int, JobRecord] = {}
         self._free: set[int] = set(range(fabric.n_planes))
@@ -198,6 +204,13 @@ class FabricArbiter:
         self._waiting: list[tuple[int, int, _Job]] = []  # (-prio, seq, job)
         self._ids = itertools.count()
         self._wait_seq = itertools.count()
+
+    def _trace_gauges(self) -> None:
+        """Sample the fabric-level counter tracks (queue/free/running)."""
+        now = self.engine.now
+        self.tracer.counter("queue_depth", now, len(self._waiting))
+        self.tracer.counter("free_planes", now, len(self._free))
+        self.tracer.counter("running_jobs", now, len(self._running))
 
     # -- physical prestaging ------------------------------------------------
     def prestage(self, req: CollectiveRequest) -> None:
@@ -257,12 +270,31 @@ class FabricArbiter:
             record=record,
             method=method or self.method,
         )
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "job_arrival",
+                self.engine.now,
+                job=job_id,
+                tag=record.tag,
+                algorithm=req.algorithm,
+                n_nodes=req.n_nodes,
+                size=req.size,
+                priority=priority,
+            )
         if (
             self.max_queue_depth is not None
             and len(self._waiting) >= self.max_queue_depth
         ):
             record.rejected = True
             self.stats.rejected += 1
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "backpressure_reject",
+                    self.engine.now,
+                    job=job_id,
+                    queue_depth=len(self._waiting),
+                )
+                self._trace_gauges()
             return record
         heapq.heappush(
             self._waiting, (-priority, next(self._wait_seq), job)
@@ -270,6 +302,8 @@ class FabricArbiter:
         # _drain_queue admits the job now or, if the fabric is full,
         # requests shrinks from over-share running jobs.
         self._drain_queue()
+        if self.tracer.enabled:
+            self._trace_gauges()
         return record
 
     def run_collective(
@@ -354,6 +388,16 @@ class FabricArbiter:
         job.record.planes_max = len(job.planes)
         self._running[job.job_id] = job
         self.stats.admitted += 1
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "lease_grant",
+                now,
+                job=job.job_id,
+                tag=job.record.tag,
+                planes=list(job.planes),
+                queueing_delay=now - job.record.arrival,
+            )
+            self._trace_gauges()
         self._plan(job)
 
     def _sub_fabric(
@@ -488,6 +532,7 @@ class FabricArbiter:
         assert job.plan is not None
         sub_fabric = job.plan.fabric
         rel_cutoff = cutoff - job.plan_t0  # plan times are plan-relative
+        trace = self.tracer.enabled
         for j, p in enumerate(job.planes):
             config = sub_fabric.initial_config(j)
             free_at = self._plane_free_at[p]
@@ -504,6 +549,27 @@ class FabricArbiter:
                     recfgs += 1
                 busy += a.duration
                 free_at = max(free_at, job.plan_t0 + a.end)
+                if trace:
+                    # Retired activities are the ones that actually ran:
+                    # emitting here (not at plan time) means superseded
+                    # plan tails never pollute the trace.  Thread row =
+                    # the *physical* plane id, so concurrent jobs
+                    # interleave on shared rows exactly as the fabric
+                    # executed them.
+                    if a.kind is Kind.RECFG:
+                        name = f"reconfig->c{a.config}"
+                    elif a.route >= 0:
+                        name = f"bypass r{a.route}h{a.hop}"
+                    else:
+                        name = f"{job.record.tag} s{job.plan_base_step + a.step}"
+                    self.tracer.span(
+                        name,
+                        job.plan_t0 + a.start,
+                        job.plan_t0 + a.end,
+                        tid=p,
+                        job=job.job_id,
+                        step=job.plan_base_step + a.step,
+                    )
             if config is not None:
                 self._plane_state[p] = (job.key, config)
             self._plane_free_at[p] = max(free_at, cutoff)
@@ -578,6 +644,7 @@ class FabricArbiter:
         return candidates[best_idx]
 
     def _apply_resize(self, job: _Job, now: float) -> None:
+        before = job.planes
         self._cut_plan(job, now)
         # Absorb reserved grow planes first, then shrink to target.
         lease = sorted(job.planes + job.pending_planes)
@@ -588,6 +655,19 @@ class FabricArbiter:
                 lease.remove(p)
                 self._free.add(p)
         job.planes = tuple(sorted(lease))
+        if self.tracer.enabled and job.planes != before:
+            kind = "lease_grow" if len(job.planes) > len(before) else (
+                "lease_shrink"
+            )
+            self.tracer.instant(
+                kind,
+                now,
+                job=job.job_id,
+                tag=job.record.tag,
+                planes_before=list(before),
+                planes_after=list(job.planes),
+            )
+            self._trace_gauges()
         job.target_planes = len(job.planes)
         job.record.planes_min = min(job.record.planes_min, len(job.planes))
         job.record.planes_max = max(job.record.planes_max, len(job.planes))
@@ -604,7 +684,18 @@ class FabricArbiter:
         self._free.update(job.pending_planes)
         job.planes = ()
         job.pending_planes = ()
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "job_complete",
+                now,
+                job=job.job_id,
+                tag=job.record.tag,
+                cct=job.record.cct,
+                replans=job.record.replans,
+            )
         self._drain_queue()
+        if self.tracer.enabled:
+            self._trace_gauges()
 
     # -- introspection ------------------------------------------------------
     @property

@@ -53,13 +53,22 @@ class EventHandle:
 
 
 class SimEngine:
-    """Event heap + simulated clock."""
+    """Event heap + simulated clock.
 
-    def __init__(self) -> None:
+    ``tracer`` (default: the no-op ``NULL_TRACER``) samples the
+    ``sim_events`` counter at every fired event, giving traces an
+    event-density track; the disabled cost is one attribute check per
+    event.
+    """
+
+    def __init__(self, tracer=None) -> None:
+        from repro.obs.trace import NULL_TRACER
+
         self.now = 0.0
         self._heap: list[_Entry] = []
         self._seq = 0
         self.events_fired = 0
+        self.tracer = NULL_TRACER if tracer is None else tracer
 
     def at(self, time: float, fn: Callable[[], Any]) -> EventHandle:
         """Schedule ``fn`` to run at absolute simulated ``time``."""
@@ -99,6 +108,10 @@ class SimEngine:
             heapq.heappop(self._heap)
             self.now = max(self.now, entry.time)
             self.events_fired += 1
+            if self.tracer.enabled:
+                self.tracer.counter(
+                    "sim_events", self.now, self.events_fired
+                )
             entry.fn()
         if until is not None:
             self.now = max(self.now, until)
@@ -112,6 +125,10 @@ class SimEngine:
                 continue
             self.now = max(self.now, entry.time)
             self.events_fired += 1
+            if self.tracer.enabled:
+                self.tracer.counter(
+                    "sim_events", self.now, self.events_fired
+                )
             entry.fn()
             return True
         return False

@@ -147,6 +147,7 @@ class ReplayReport:
     stats: ArbiterStats
     makespan: float
     solo_cct: dict[tuple, float]  # signature -> whole-fabric solo CCT
+    events_fired: int = 0  # simulation events the replay processed
 
     @property
     def completed(self) -> list[JobRecord]:
@@ -213,9 +214,15 @@ def replay(
     allow_independent: bool = False,
     rebalance: bool = True,
     backend: str | None = None,
+    tracer=None,
 ) -> ReplayReport:
-    """Replay ``trace`` through a fresh engine + arbiter; returns stats."""
-    engine = SimEngine()
+    """Replay ``trace`` through a fresh engine + arbiter; returns stats.
+
+    ``tracer`` (e.g. ``repro.obs.ChromeTracer()``) records the fabric's
+    lifecycle -- arrivals, lease grants/resizes, per-plane activity
+    spans, completions -- for Perfetto; the default is the no-op tracer.
+    """
+    engine = SimEngine(tracer=tracer)
     arbiter = FabricArbiter(
         engine,
         fabric,
@@ -225,6 +232,7 @@ def replay(
         allow_independent=allow_independent,
         rebalance=rebalance,
         backend=backend,
+        tracer=tracer,
     )
     specs = sorted(trace, key=lambda s: s.arrival)
     records: list[JobRecord] = []
@@ -260,4 +268,5 @@ def replay(
         stats=arbiter.stats,
         makespan=engine.now,
         solo_cct=solo,
+        events_fired=engine.events_fired,
     )

@@ -32,6 +32,20 @@ _SWEEP = {
         {"name": "fig5_wall_time", "us_per_call": 9e5, "note": ""},
         {"name": "ir_sweep_batched_numpy", "us_per_call": 25.0, "note": ""},
         {"name": "indep_grid_batched", "us_per_call": 200.0, "note": ""},
+        # Higher-is-better observability rows: gated on *falling*.
+        {
+            "name": "attr_rab8x4_t200_overlap_eff",
+            "us_per_call": 0.85,
+            "note": "",
+        },
+        {
+            "name": "bypass_pairwise8x4_t3200_bypass_hit_rate",
+            "us_per_call": 0.33,
+            "note": "",
+        },
+        # Per-phase wall-clock + replay throughput: machine-dependent.
+        {"name": "mt_phase_replay_us", "us_per_call": 2.6e6, "note": ""},
+        {"name": "mt_events_per_sec", "us_per_call": 40.0, "note": ""},
     ],
 }
 _BACKENDS = {
@@ -110,6 +124,46 @@ def test_wall_clock_and_pallas_rows_are_ignored(baseline, tmp_path):
     backends["backends"]["pallas"]["speedup_vs_numpy"] = 0.01
     current = tmp_path / "current"
     _write(current, sweep, backends)
+    assert check_regression.compare(baseline, current, 0.25) == []
+
+
+def test_higher_better_drop_fails(baseline, tmp_path):
+    """overlap_eff / hit_rate rows regress by FALLING below the band."""
+    sweep = copy.deepcopy(_SWEEP)
+    for pt in sweep["points"]:
+        if check_regression._HIGHER_BETTER.search(pt["name"]):
+            pt["us_per_call"] *= 0.5  # -50%, past the 25% band
+    current = tmp_path / "current"
+    _write(current, sweep, _BACKENDS)
+    failures = check_regression.compare(baseline, current, 0.25)
+    assert len(failures) == 2
+    assert any("overlap_eff" in f for f in failures)
+    assert any("hit_rate" in f for f in failures)
+
+
+def test_higher_better_rise_passes(baseline, tmp_path):
+    """A doubled efficiency would trip the lower-is-better branch; the
+    suffix must route it to the higher-is-better one instead."""
+    sweep = copy.deepcopy(_SWEEP)
+    for pt in sweep["points"]:
+        if check_regression._HIGHER_BETTER.search(pt["name"]):
+            pt["us_per_call"] *= 2.0
+    current = tmp_path / "current"
+    _write(current, sweep, _BACKENDS)
+    assert check_regression.compare(baseline, current, 0.25) == []
+
+
+def test_phase_timing_and_throughput_rows_are_ignored(baseline, tmp_path):
+    """``mt_phase_*_us`` and ``mt_events_per_sec`` are wall-clock derived:
+    arbitrary machine-to-machine swings must not gate."""
+    sweep = copy.deepcopy(_SWEEP)
+    for pt in sweep["points"]:
+        if pt["name"] == "mt_phase_replay_us":
+            pt["us_per_call"] *= 10.0
+        if pt["name"] == "mt_events_per_sec":
+            pt["us_per_call"] *= 0.1
+    current = tmp_path / "current"
+    _write(current, sweep, _BACKENDS)
     assert check_regression.compare(baseline, current, 0.25) == []
 
 
