@@ -23,10 +23,12 @@ What is gated (and why):
   steps served by relays): these fail when the current value falls
   *below* baseline by more than the band.
 * **Speedup ratios** -- ``speedup_vs_numpy`` per backend from
-  ``BENCH_backends.json`` and the INDEPENDENT-grid
-  ``speedup_vs_per_instance``.  Ratios compare two timings from the
-  SAME run on the SAME host, so they transfer across runner hardware
-  where absolute microseconds do not.  A ratio falling below baseline
+  ``BENCH_backends.json``, the INDEPENDENT-grid
+  ``speedup_vs_per_instance``, and the fused-planner
+  ``speedup_vs_per_step`` (fused ``lax.scan`` CHAIN planner vs the
+  per-step numpy loop).  Ratios compare two timings from the SAME run
+  on the SAME host, so they transfer across runner hardware where
+  absolute microseconds do not.  A ratio falling below baseline
   by more than the band fails -- with the floor clamped to the
   benchmark's own in-run hard gate (>= 2x), so a baseline captured on
   a fast host can never fail a slower runner that still clears the
@@ -35,7 +37,8 @@ What is gated (and why):
 What is deliberately NOT gated:
 
 * absolute wall-clock rows (``*_wall_time``, ``ir_sweep_*``,
-  ``indep_grid_*``, ``ir_backend_*`` microsecond columns) -- runner
+  ``indep_grid_*``, ``ir_backend_*``, ``fused_grid_*`` microsecond
+  columns, including the ``*_compile`` cold-start rows) -- runner
   hardware varies run to run;
 * the ``pallas`` backend ratio -- interpret mode on CPU times the
   interpreter, not the kernel.
@@ -71,8 +74,8 @@ log = get_logger("check_regression")
 # ``_us$`` suffix covers the per-phase timing rows and
 # ``events_per_sec`` the replay-throughput row (wall-clock derived).
 _TIMING_ROW = re.compile(
-    r"(wall_time|ir_sweep_|indep_grid_|ir_backend_|_solve_time|_us$"
-    r"|events_per_sec)"
+    r"(wall_time|ir_sweep_|indep_grid_|ir_backend_|fused_grid_"
+    r"|_solve_time|_us$|events_per_sec)"
 )
 # Deterministic sweep rows where LARGER is better (overlap efficiency,
 # bypass hit rate): gated on falling below baseline instead of rising
@@ -90,6 +93,7 @@ _UNGATED_BACKENDS = frozenset({"pallas"})
 _RATIO_HARD_GATES = {
     "backend_speedup:jax": 2.0,
     "independent_grid_speedup": 2.0,
+    "fused_grid_speedup": 2.0,
 }
 
 SWEEP_NAME = "BENCH_sweep.json"
@@ -122,6 +126,9 @@ def _speedup_ratios(payload: dict) -> dict[str, float]:
         ratios["independent_grid_speedup"] = float(
             grid["speedup_vs_per_instance"]
         )
+    fused = payload.get("fused_grid", {})
+    if "speedup_vs_per_step" in fused:
+        ratios["fused_grid_speedup"] = float(fused["speedup_vs_per_step"])
     return ratios
 
 

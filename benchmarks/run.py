@@ -31,7 +31,10 @@ change.
 
 Unfiltered runs additionally write the IR timing-backend throughput
 comparison (numpy vs jax vs pallas-interpret on the large ``ir_sweep``
-grid, including the >= 2x jax-vs-numpy acceptance gate):
+grid, cold/compile and warm timed separately, including the >= 2x
+jax-vs-numpy acceptance gate) plus the fused on-device planner gate
+(``fused_grid``: the whole CHAIN greedy loop as one jitted ``lax.scan``,
+>= 2x warm vs the per-step numpy loop with 0 decision mismatches):
 ``BENCH_backends.json`` for ``--quick`` (the tracked, CI-comparable
 flavor) and ``BENCH_backends_full.json`` otherwise, so backend speedups
 are tracked across PRs alongside the sweep numbers.
@@ -115,10 +118,20 @@ def main() -> None:
             "unavailable"
             if "ms" not in entry
             else f"total={entry['ms']:.1f}ms "
-            f"speedup={entry['speedup_vs_numpy']}x"
+            f"speedup={entry['speedup_vs_numpy']}x "
+            f"compile={entry['compile_ms']:.1f}ms"
         )
         us = entry.get("us_per_instance", 0.0)
         log.data(f"ir_backend_{name},{us:.1f},{note}")
+    fused = backends_payload["fused_grid"]
+    log.data(
+        f"fused_grid,{fused['us_per_cell']:.1f},"
+        f"per_step={fused['per_step_ms']:.0f}ms "
+        f"warm={fused['fused_warm_ms']:.0f}ms "
+        f"cold={fused['fused_cold_ms']:.0f}ms "
+        f"speedup={fused['speedup_vs_per_step']}x "
+        f"mismatches={fused['decision_mismatches']}"
+    )
     backends_name = (
         "BENCH_backends.json" if quick else "BENCH_backends_full.json"
     )

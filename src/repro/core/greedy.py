@@ -73,6 +73,7 @@ from repro.core.ir.backends import (
     DEFAULT_GRID_BACKEND_THRESHOLD,
     ENV_GRID_BACKEND_THRESHOLD,
     select_backend_by_size,
+    select_planner_by_size,
 )
 from repro.core.patterns import Pattern
 from repro.core.schedule import (
@@ -543,6 +544,11 @@ class GridPlan:
     cct: float
     n_reconfigurations: int
     utilization: float
+    # Per-cell CCT decomposition (``attribution=True`` only): an
+    # `repro.obs.attribution.Attribution` with (S, P) component arrays
+    # sliced from the batch scoring pass -- identical for the step and
+    # fused planners, since their decisions are bitwise-equal.
+    attribution: "object | None" = None
 
     def schedule(self) -> Schedule:
         """Materialize the activity-object schedule (validated)."""
@@ -850,16 +856,18 @@ def _rollout_rows(
     return np.where(has_tail, barrier + tail_rec, barrier)
 
 
-def _chain_grid_decisions(
+def _chain_grid_chosen(
     st: _GridState, rollout_horizon: int
-) -> list[Decisions]:
+) -> list[tuple[np.ndarray, np.ndarray, np.ndarray]]:
     """The batched CHAIN per-step loop: no per-instance Python inside.
 
     Each step costs ONE `_reserve_rows` (batched candidate construction
     from the precomputed reserve-set table), ONE ``waterfill_batch``, ONE
     row-batched rollout, and ONE instance-keyed lexsort selecting every
     live instance's winner at once.  Chosen splits land in per-step
-    arrays; the Decisions dicts are materialized after the loop.
+    ``(live_insts, split, byp_h)`` tuples -- the same structure the fused
+    on-device planner (`repro.core.ir.fused`) emits, so both planners
+    share one Decisions materialization epilogue.
     """
     b = len(st.cells)
     with_bypass = st.bypass_depth >= 2
@@ -952,6 +960,28 @@ def _chain_grid_decisions(
             st.installed[live_insts],
         )
         chosen.append((live_insts, split[best], byp_h[best]))
+    return chosen
+
+
+def _chain_grid_decisions(
+    st: _GridState, rollout_horizon: int, planner: str = "step"
+) -> list[Decisions]:
+    """Materialize CHAIN-mode grid Decisions from either planner.
+
+    ``planner="step"`` runs the per-step numpy loop
+    (`_chain_grid_chosen`); ``"fused"`` runs the whole loop as one jitted
+    ``lax.scan`` on device (`repro.core.ir.fused`) -- bitwise-identical
+    chosen splits by contract (property-tested), so the materialization
+    below is shared verbatim.
+    """
+    b = len(st.cells)
+    with_bypass = st.bypass_depth >= 2
+    if planner == "fused":
+        from repro.core.ir.fused import fused_chain_grid_chosen
+
+        chosen = fused_chain_grid_chosen(st, rollout_horizon)
+    else:
+        chosen = _chain_grid_chosen(st, rollout_horizon)
 
     splits: list[list[dict[int, float]]] = [[] for _ in range(b)]
     bypass_steps: list[list[tuple[BypassRoute, ...]]] = [
@@ -986,31 +1016,42 @@ def _chain_grid_decisions(
     ]
 
 
-def _independent_grid_decisions(st: _GridState) -> list[Decisions]:
+def _independent_grid_decisions(
+    st: _GridState, planner: str = "step"
+) -> list[Decisions]:
     """Batched INDEPENDENT-mode step packing (least-finish-time).
 
     The instance-batched twin of ``independent_decisions``: every live
     instance's argmin-packing decision for step ``i`` comes from one
     (batch, planes) finish-time computation.  Padded/dead rows are masked
     to +inf, so per-instance argmins -- and the resulting splits -- are
-    bitwise identical to the per-instance loop.
+    bitwise identical to the per-instance loop.  ``planner="fused"``
+    replaces the loop with the one-program device scan
+    (`repro.core.ir.fused`), same chosen tuples by contract.
     """
     b = len(st.cells)
     chosen: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
-    for i in range(st.s_max):
-        live = i < st.n_s
-        if not live.any():
-            break
-        cfg_i = st.step_cfg[:, i][:, None]
-        extra = np.where(st.config == cfg_i, 0.0, st.t_recfg[:, None])
-        finish = st.free + extra + st.step_vol[:, i][:, None] / st.bw
-        finish = np.where(st.real, finish, np.inf)
-        j = np.argmin(finish, axis=1)
-        rows = np.nonzero(live)[0]
-        jl = j[rows]
-        st.free[rows, jl] = finish[rows, jl]
-        st.config[rows, jl] = st.step_cfg[rows, i]
-        chosen.append((rows, jl, st.step_vol[rows, i]))
+    if planner == "fused":
+        from repro.core.ir.fused import fused_independent_grid_chosen
+
+        chosen = fused_independent_grid_chosen(st)
+    else:
+        for i in range(st.s_max):
+            live = i < st.n_s
+            if not live.any():
+                break
+            cfg_i = st.step_cfg[:, i][:, None]
+            extra = np.where(
+                st.config == cfg_i, 0.0, st.t_recfg[:, None]
+            )
+            finish = st.free + extra + st.step_vol[:, i][:, None] / st.bw
+            finish = np.where(st.real, finish, np.inf)
+            j = np.argmin(finish, axis=1)
+            rows = np.nonzero(live)[0]
+            jl = j[rows]
+            st.free[rows, jl] = finish[rows, jl]
+            st.config[rows, jl] = st.step_cfg[rows, i]
+            chosen.append((rows, jl, st.step_vol[rows, i]))
     splits: list[list[dict[int, float]]] = [[] for _ in range(b)]
     for rows, jl, vols in chosen:
         for bi, j, v in zip(rows, jl, vols):
@@ -1021,7 +1062,9 @@ def _independent_grid_decisions(st: _GridState) -> list[Decisions]:
     ]
 
 
-def _independent_split_grid_decisions(st: _GridState) -> list[Decisions]:
+def _independent_split_grid_decisions(
+    st: _GridState, planner: str = "step"
+) -> list[Decisions]:
     """Batched INDEPENDENT-mode water-fill splitting.
 
     The instance-batched twin of ``independent_split_decisions``: every
@@ -1031,22 +1074,33 @@ def _independent_split_grid_decisions(st: _GridState) -> list[Decisions]:
     less), where argmin packing would stall whole steps on slow planes.
     Padded planes are masked to ``_BIG`` ready times, so per-instance
     levels and splits are bitwise identical to the per-instance loop.
+    ``planner="fused"`` runs the same recurrence as one device scan
+    (`repro.core.ir.fused`), same chosen tuples by contract.
     """
     b = len(st.cells)
     chosen: list[tuple[np.ndarray, np.ndarray]] = []
-    for i in range(st.s_max):
-        live = i < st.n_s
-        if not live.any():
-            break
-        cfg_i = st.step_cfg[:, i][:, None]
-        extra = np.where(st.config == cfg_i, 0.0, st.t_recfg[:, None])
-        ready = np.where(st.real, st.free + extra, _BIG)
-        vol_i = np.where(live, st.step_vol[:, i], 0.0)
-        level, split = waterfill_batch(ready, st.bw, vol_i)
-        active = (split > 0.0) & live[:, None]
-        st.free = np.where(active, level[:, None], st.free)
-        st.config = np.where(active, cfg_i, st.config)
-        chosen.append((np.nonzero(live)[0], split))
+    if planner == "fused":
+        from repro.core.ir.fused import (
+            fused_independent_split_grid_chosen,
+        )
+
+        chosen = fused_independent_split_grid_chosen(st)
+    else:
+        for i in range(st.s_max):
+            live = i < st.n_s
+            if not live.any():
+                break
+            cfg_i = st.step_cfg[:, i][:, None]
+            extra = np.where(
+                st.config == cfg_i, 0.0, st.t_recfg[:, None]
+            )
+            ready = np.where(st.real, st.free + extra, _BIG)
+            vol_i = np.where(live, st.step_vol[:, i], 0.0)
+            level, split = waterfill_batch(ready, st.bw, vol_i)
+            active = (split > 0.0) & live[:, None]
+            st.free = np.where(active, level[:, None], st.free)
+            st.config = np.where(active, cfg_i, st.config)
+            chosen.append((np.nonzero(live)[0], split))
     splits: list[list[dict[int, float]]] = [[] for _ in range(b)]
     for rows, split in chosen:
         for bi in rows:
@@ -1071,6 +1125,8 @@ def swot_greedy_grid(
     mode: DependencyMode = DependencyMode.CHAIN,
     bypass_depth: int = 0,
     independent_split: bool = False,
+    planner: str | None = None,
+    attribution: bool = False,
 ) -> list[GridPlan]:
     """Plan a whole grid of (fabric, pattern) cells in one batched pass.
 
@@ -1101,6 +1157,21 @@ def swot_greedy_grid(
     pick as ``swot_greedy_chain``, so per-cell parity holds with
     ``swot_greedy_chain(polish=False, bypass_depth=...)``.
 
+    ``planner`` picks how the per-step loop executes: ``"step"`` (the
+    numpy loop, one batched dispatch per step), ``"fused"`` (the whole
+    loop as ONE jitted ``lax.scan`` device program,
+    `repro.core.ir.fused` -- bitwise-identical decisions by contract),
+    or ``None`` to auto-select fused once the grid reaches
+    ``REPRO_FUSED_PLANNER_THRESHOLD`` cells
+    (`select_planner_by_size`).
+
+    ``attribution=True`` threads the CCT decomposition through the final
+    scoring pass: each returned ``GridPlan.attribution`` carries its
+    cell's (S, P) `repro.obs.attribution.Attribution` slice.  Composes
+    with every planner/backend combination (the fused planner's
+    decisions are bitwise-equal, and all timing backends emit the
+    component cubes).
+
     LP polish is deliberately per-instance-only (it solves one LP per
     cell), so the grid path trades it away for throughput; sweeps that
     need polished cells can re-run the winners through ``swot_greedy``.
@@ -1117,10 +1188,11 @@ def swot_greedy_grid(
         DEFAULT_GRID_BACKEND_THRESHOLD,
         explicit=backend,
     )
+    planner = select_planner_by_size(len(cells), explicit=planner)
     st = _GridState(cells, mode=mode,
                     max_enumerated_planes=max_enumerated_planes)
     if mode is DependencyMode.CHAIN:
-        decisions = _chain_grid_decisions(st, rollout_horizon)
+        decisions = _chain_grid_decisions(st, rollout_horizon, planner)
         st_byp = (
             _GridState(
                 cells, mode=mode,
@@ -1134,7 +1206,9 @@ def swot_greedy_grid(
         # no self-relay opportunity anywhere (e.g. all xor pairings)
         # skips the twin pass and its two scoring passes entirely.
         if st_byp is not None and st_byp.depth_tab.any():
-            byp_decisions = _chain_grid_decisions(st_byp, rollout_horizon)
+            byp_decisions = _chain_grid_decisions(
+                st_byp, rollout_horizon, planner
+            )
             base_cct = batch_evaluate(
                 [
                     BatchInstance(fabric, pattern, dec)
@@ -1162,15 +1236,16 @@ def swot_greedy_grid(
                 )
             ]
     elif independent_split:
-        decisions = _independent_split_grid_decisions(st)
+        decisions = _independent_split_grid_decisions(st, planner)
     else:
-        decisions = _independent_grid_decisions(st)
+        decisions = _independent_grid_decisions(st, planner)
     result = batch_evaluate(
         [
             BatchInstance(fabric, pattern, dec)
             for (fabric, pattern), dec in zip(st.cells, decisions)
         ],
         backend=backend,
+        attribution=attribution,
     )
     return [
         GridPlan(
@@ -1180,8 +1255,30 @@ def swot_greedy_grid(
             cct=float(result.cct[bi]),
             n_reconfigurations=int(result.n_reconfigurations[bi]),
             utilization=float(result.utilization[bi]),
+            attribution=(
+                _slice_attribution(result.attribution, bi)
+                if attribution
+                else None
+            ),
         )
         for bi, ((fabric, pattern), dec) in enumerate(
             zip(st.cells, decisions)
         )
     ]
+
+
+def _slice_attribution(att, bi: int):
+    """One cell's (S, P) Attribution view from the batch decomposition."""
+    import dataclasses as _dc
+
+    return _dc.replace(
+        att,
+        t_xmit=att.t_xmit[bi],
+        t_bypass=att.t_bypass[bi],
+        t_recfg_wait=att.t_recfg_wait[bi],
+        t_recfg_hidden=att.t_recfg_hidden[bi],
+        t_idle=att.t_idle[bi],
+        cct=att.cct[bi],
+        step_mask=att.step_mask[bi],
+        plane_mask=att.plane_mask[bi],
+    )

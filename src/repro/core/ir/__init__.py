@@ -9,6 +9,11 @@ The package splits the pre-refactor ``repro.core.ir`` module in two:
   backend interface: ``numpy`` (reference), ``jax`` (jit + scan over
   power-of-two buckets), ``pallas`` (blocked-scan kernel in
   `repro.kernels.timing_scan`, interpret mode on CPU).
+* `repro.core.ir.fused`    -- the fused on-device grid planner: the
+  whole per-step greedy loop (`repro.core.greedy.swot_greedy_grid`) as
+  one jitted ``lax.scan``, bitwise-identical to the per-step numpy
+  planner.  Auto-selected above ``REPRO_FUSED_PLANNER_THRESHOLD``
+  cells (`select_planner_by_size`).
 
 Every pre-refactor import (``from repro.core.ir import batch_evaluate``)
 keeps working; ``batch_evaluate``/``evaluate_decisions`` gained a
@@ -26,6 +31,8 @@ from repro.core.ir.backends import (
     default_backend_name,
     get_backend,
     resolve_backend,
+    select_backend_by_size,
+    select_planner_by_size,
 )
 from repro.core.ir.engine import (
     _BIG,
@@ -78,6 +85,8 @@ __all__ = [
     "pack_instances",
     "resolve_backend",
     "rollout_batch",
+    "select_backend_by_size",
+    "select_planner_by_size",
     "to_ir",
     "validate_ir",
     "waterfill_batch",

@@ -520,14 +520,6 @@ class PallasBackend(TimingBackend):
     ) -> BatchResult:
         from jax.experimental import enable_x64
 
-        if packed["byp_vol"].size and packed["byp_vol"].any():
-            # Bypass relay hops gather/scatter per-plane state by dynamic
-            # plane id, which the blocked-scan kernel does not lower yet;
-            # bypass-carrying batches take the numpy reference instead
-            # (same results -- the recurrences share one parity
-            # contract).  Bypass-free batches, including all the gated
-            # large-grid benchmarks, still run the kernel.
-            return _timing_numpy(packed, attribution=attribution)
         b, s, p = packed["vol"].shape
         padded = pad_packed(packed, _bucket(b), s, _bucket(p))
         with enable_x64():
@@ -537,10 +529,9 @@ class PallasBackend(TimingBackend):
         cct, n_recfg, busy, feasible, volume_ok = out[:5]
         att = None
         if attribution:
-            # The kernel path never carries bypass routes (delegated
-            # above), so the relay component is exactly zero.
-            ax, aw, ah = (np.asarray(a)[:b, :, :p] for a in out[5:])
-            att = (ax, np.zeros_like(ax), aw, ah)
+            # Four component cubes straight from the kernel (xmit,
+            # bypass, exposed wait, hidden), already in finalize order.
+            att = tuple(np.asarray(a)[:b, :, :p] for a in out[5:])
         return finalize_result(
             np.asarray(cct)[:b],
             np.asarray(n_recfg)[:b],
@@ -647,5 +638,62 @@ def select_backend_by_size(
     try:
         get_backend("jax")
     except BackendUnavailable:
+        # Large batch but no jax: fall through to the env default --
+        # EXCEPT when that default is the pallas interpreter, which on a
+        # large batch times the interpreter, not the kernel.  Route
+        # those to the numpy reference instead (auto-selection must
+        # never choose pallas-interpret for large batches).
+        if default_backend_name() == "pallas":
+            try:
+                if get_backend("pallas").interpret:
+                    return "numpy"
+            except BackendUnavailable:
+                pass
         return None
     return "jax"
+
+
+# Grid-cell count at and above which ``swot_greedy_grid`` / ``plan_grid``
+# auto-select the FUSED on-device planner (`repro.core.ir.fused`): the
+# whole per-step greedy loop as one jitted lax.scan.  Below it the
+# per-step numpy loop wins (trace+compile does not amortize; the two are
+# bitwise-identical, so the threshold is purely a performance knob).
+# Override with the env var; <= 0 disables fused auto-selection.
+ENV_FUSED_PLANNER_THRESHOLD = "REPRO_FUSED_PLANNER_THRESHOLD"
+DEFAULT_FUSED_PLANNER_THRESHOLD = 256
+
+
+def select_planner_by_size(
+    n_cells: int, explicit: str | None = None
+) -> str:
+    """Threshold policy for the grid planner implementation.
+
+    Returns ``"fused"`` (one-program ``lax.scan`` planner) once the grid
+    reaches ``REPRO_FUSED_PLANNER_THRESHOLD`` cells (default
+    ``DEFAULT_FUSED_PLANNER_THRESHOLD``) and jax is importable, else
+    ``"step"`` (the per-step numpy loop).  An ``explicit`` planner always
+    wins; a threshold <= 0 disables auto-selection.
+    """
+    if explicit is not None:
+        if explicit not in ("step", "fused"):
+            raise ValueError(
+                f"unknown planner {explicit!r}; choose 'step' or 'fused'"
+            )
+        return explicit
+    raw = os.environ.get(ENV_FUSED_PLANNER_THRESHOLD, "")
+    try:
+        threshold = (
+            int(raw) if raw else DEFAULT_FUSED_PLANNER_THRESHOLD
+        )
+    except ValueError as exc:
+        raise ValueError(
+            f"{ENV_FUSED_PLANNER_THRESHOLD} must be an integer, "
+            f"got {raw!r}"
+        ) from exc
+    if threshold <= 0 or n_cells < threshold:
+        return "step"
+    try:
+        get_backend("jax")
+    except BackendUnavailable:
+        return "step"
+    return "fused"

@@ -28,7 +28,11 @@ This module is the struct-of-arrays twin:
 * ``waterfill_batch`` / ``rollout_batch`` -- the greedy scheduler's
   water-filling and rollout scoring, vectorized over candidate reserve
   sets (used by `repro.core.greedy`) and over lease candidates (used by
-  `repro.runtime.arbiter`).
+  `repro.runtime.arbiter`).  ``waterfill_batch`` is also the bitwise
+  reference for the fused on-device planner's water-fill
+  (`repro.core.ir.fused`), which re-derives the same closed form with
+  FMA-contraction guards so one ``lax.scan`` can plan whole grids
+  without leaving the device.
 
 The packed batch layout is deliberately jit-friendly (flat float64/int64
 arrays, static shapes after padding): the jax and Pallas backends consume

@@ -174,6 +174,8 @@ def plan_grid(
     mode: DependencyMode = DependencyMode.CHAIN,
     bypass_depth: int = 0,
     independent_split: bool = False,
+    planner: str | None = None,
+    attribution: bool = False,
 ) -> list[GridCellPlan]:
     """Plan a whole sweep grid in one instance-batched pass.
 
@@ -192,6 +194,15 @@ def plan_grid(
     each bitwise-equal to its per-instance reference.  Use this for
     message-size x ``t_recfg`` x plane-count sweeps; for single
     collectives (or when LP polish matters) use ``plan_collective``.
+
+    ``planner`` picks the loop implementation: ``"step"`` (per-step
+    numpy), ``"fused"`` (the whole loop as one jitted ``lax.scan`` on
+    device, `repro.core.ir.fused` -- bitwise-identical decisions), or
+    ``None`` to auto-select fused at ``REPRO_FUSED_PLANNER_THRESHOLD``
+    cells.  ``attribution=True`` threads the per-cell CCT decomposition
+    (`repro.obs.attribution.Attribution`) through the scoring pass onto
+    each ``GridCellPlan.plan.attribution`` -- composes with both
+    planners and every backend.
     """
     from repro.core.ir.backends import (
         DEFAULT_GRID_BACKEND_THRESHOLD,
@@ -208,6 +219,7 @@ def plan_grid(
     plans = swot_greedy_grid(
         cells, rollout_horizon=rollout_horizon, backend=backend, mode=mode,
         bypass_depth=bypass_depth, independent_split=independent_split,
+        planner=planner, attribution=attribution,
     )
     straw = batch_evaluate(
         [strawman_instance(fabric, pattern) for fabric, pattern in cells],

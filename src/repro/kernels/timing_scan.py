@@ -13,14 +13,24 @@ the update is the max-plus recurrence the paper's CCT derivation implies:
     end     = start + volume / bandwidth
     barrier = max over active planes of end
 
+Topology-Bypassing relays run first within each step (store-and-forward
+hops riding installed configs, before direct traffic forces
+reconfigurations): the packed ``byp_vol``/``byp_plane`` routes unroll at
+trace time (R and H are small decision-determined constants, 0 for
+bypass-free sweeps), and each hop's dynamic plane id is resolved with a
+one-hot compare mask -- a broadcast select, not a gather/scatter, so the
+same kernel lowers on TPU.  The hop arithmetic reads the selected
+plane's state via a masked max (plane free times are finite and
+non-negative, so the one-hot max IS the gather, bitwise).
+
 All state lives in VMEM for the block; no HBM traffic inside the scan.
 The step dimension stays whole per block (the recurrence is sequential
 in steps), so VMEM holds the (block, S, P) volume tile -- with float64
 cells, ``block = 8`` keeps the working set under ~1 MB for S, P <= 128.
 
 Validated in interpret mode on CPU against the numpy backend
-(tests/test_ir_backends.py); the TPU path compiles the same kernel with
-``interpret=False``.
+(tests/test_ir_backends.py, tests/test_fused_grid.py); the TPU path
+compiles the same kernel with ``interpret=False``.
 """
 
 from __future__ import annotations
@@ -45,13 +55,17 @@ def _kernel(
     t_recfg_ref,  # (blk, 1) float
     chain_ref,  # (blk, 1) int32 (0/1)
     ready_ref,  # (blk, P) float
+    byp_vol_ref,  # (blk, S, R') float; R' = max(R, 1)
+    byp_plane_ref,  # (blk, S, R'*H') int32; -1 = no hop
     cct_ref,  # (blk, 1) float
     n_recfg_ref,  # (blk, 1) int32
     busy_ref,  # (blk, P) float
     feas_ref,  # (blk, 1) int32
     volok_ref,  # (blk, 1) int32
-    *att_refs,  # attribution=True: xmit/wait/hidden, each (blk, S, P)
+    *att_refs,  # attribution=True: xmit/bypass/wait/hidden, (blk, S, P)
     n_steps: int,
+    n_routes: int,
+    n_hops: int,
     attribution: bool = False,
 ):
     vol = vol_ref[...]
@@ -62,9 +76,16 @@ def _kernel(
     bw = bw_ref[...]
     t_recfg = t_recfg_ref[...]  # (blk, 1)
     chain = chain_ref[...] != 0  # (blk, 1)
+    byp_vol = byp_vol_ref[...]
+    byp_plane = byp_plane_ref[...]
 
     blk = vol.shape[0]
+    n_planes = vol.shape[2]
     fdtype = vol.dtype
+    # 2D iota (1D iota does not lower on TPU): plane ids per block row.
+    plane_iota = jax.lax.broadcasted_iota(
+        byp_plane.dtype, (blk, n_planes), 1
+    )
 
     def body(i, carry):
         (
@@ -77,9 +98,58 @@ def _kernel(
         scfg = jax.lax.dynamic_slice_in_dim(step_cfg, i, 1, axis=1)
         active = (v > EPS_VOLUME) & plane_mask & live
         has = jnp.any(active, axis=1, keepdims=True)  # (blk, 1)
-        feasible = feasible & ~(live & (svol > EPS_VOLUME) & ~has)
-        sent = jnp.sum(
-            jnp.where(active, v, 0.0), axis=1, keepdims=True
+        # Bypass relays first (installed configs, store-and-forward hop
+        # serialization), mirroring the numpy reference's update order.
+        byp_end = jnp.full((blk, 1), -jnp.inf, fdtype)
+        has_byp = jnp.zeros((blk, 1), bool)
+        sent_byp = jnp.zeros((blk, 1), fdtype)
+        att_byp_row = jnp.zeros_like(bw)
+        if n_routes:
+            bv = jax.lax.dynamic_slice_in_dim(byp_vol, i, 1, axis=1)[
+                :, 0, :
+            ]
+            bp = jax.lax.dynamic_slice_in_dim(byp_plane, i, 1, axis=1)[
+                :, 0, :
+            ]
+            for r in range(n_routes):
+                rv = bv[:, r : r + 1]  # (blk, 1)
+                route_live = (rv > EPS_VOLUME) & live
+                has_byp = has_byp | route_live
+                sent_byp = sent_byp + jnp.where(route_live, rv, 0.0)
+                prev_end = jnp.where(chain, barrier, 0.0)
+                for h in range(n_hops):
+                    j = bp[:, r * n_hops + h : r * n_hops + h + 1]
+                    upd = route_live & (j >= 0)
+                    onehot = plane_iota == jnp.clip(j, 0, n_planes - 1)
+                    sel = onehot & upd
+                    # One-hot max IS the plane gather: free/bw are
+                    # finite and the mask selects exactly one column.
+                    free_j = jnp.max(
+                        jnp.where(onehot, free, -jnp.inf),
+                        axis=1, keepdims=True,
+                    )
+                    bw_j = jnp.max(
+                        jnp.where(onehot, bw, -jnp.inf),
+                        axis=1, keepdims=True,
+                    )
+                    start = jnp.maximum(prev_end, free_j)
+                    end = start + rv / bw_j
+                    free = jnp.where(sel, end, free)
+                    busy = busy + jnp.where(sel, end - start, 0.0)
+                    if attribution:
+                        att_byp_row = att_byp_row + jnp.where(
+                            sel, end - start, 0.0
+                        )
+                    prev_end = jnp.where(upd, end, prev_end)
+                byp_end = jnp.maximum(
+                    byp_end, jnp.where(route_live, prev_end, -jnp.inf)
+                )
+        feasible = feasible & ~(
+            live & (svol > EPS_VOLUME) & ~has & ~has_byp
+        )
+        sent = (
+            jnp.sum(jnp.where(active, v, 0.0), axis=1, keepdims=True)
+            + sent_byp
         )
         cons_tol = jnp.maximum(TOL, REL_TOL * jnp.maximum(svol, 1.0))
         volume_ok = volume_ok & (
@@ -106,6 +176,7 @@ def _kernel(
             wait = jnp.where(need, start - start_nr, 0.0)
             rows = (
                 jnp.where(active, end - start, 0.0),
+                att_byp_row,
                 wait,
                 jnp.where(need, t_recfg - wait, 0.0),
             )
@@ -120,14 +191,18 @@ def _kernel(
         step_end = jnp.max(
             jnp.where(active, end, -jnp.inf), axis=1, keepdims=True
         )
-        barrier = jnp.where(has, jnp.maximum(barrier, step_end), barrier)
-        cct = jnp.where(has, jnp.maximum(cct, step_end), cct)
+        step_end = jnp.maximum(step_end, byp_end)
+        has_any = has | has_byp
+        barrier = jnp.where(
+            has_any, jnp.maximum(barrier, step_end), barrier
+        )
+        cct = jnp.where(has_any, jnp.maximum(cct, step_end), cct)
         return (
             free, held, barrier, cct, busy, n_recfg, feasible, volume_ok,
             att,
         )
 
-    n_att = 3 if attribution else 0
+    n_att = 4 if attribution else 0
     carry = (
         ready_ref[...],
         init_ref[...],
@@ -152,17 +227,25 @@ def _kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "interpret", "attribution")
+    jax.jit,
+    static_argnames=(
+        "block_b", "interpret", "attribution", "n_routes", "n_hops",
+    ),
 )
 def _timing_scan_call(
     vol, step_vol, step_cfg, step_mask, plane_mask, bw, init,
-    t_recfg, chain, ready, *, block_b: int, interpret: bool,
-    attribution: bool,
+    t_recfg, chain, ready, byp_vol, byp_plane, *, block_b: int,
+    interpret: bool, attribution: bool, n_routes: int, n_hops: int,
 ):
     b, s, p = vol.shape
     fdtype = vol.dtype
+    rh = byp_plane.shape[2]
     row = lambda width: pl.BlockSpec((block_b, width), lambda i: (i, 0))
     cube = pl.BlockSpec((block_b, s, p), lambda i: (i, 0, 0))
+    cube_r = pl.BlockSpec(
+        (block_b, s, byp_vol.shape[2]), lambda i: (i, 0, 0)
+    )
+    cube_rh = pl.BlockSpec((block_b, s, rh), lambda i: (i, 0, 0))
     out_specs = [row(1), row(1), row(p), row(1), row(1)]
     out_shape = [
         jax.ShapeDtypeStruct((b, 1), fdtype),  # cct
@@ -172,16 +255,19 @@ def _timing_scan_call(
         jax.ShapeDtypeStruct((b, 1), jnp.int32),  # volume_ok
     ]
     if attribution:
-        # xmit / exposed-wait / hidden component cubes; together with the
-        # input volume tile they grow the per-block VMEM working set 4x,
-        # so attribution sweeps on real hardware may need a smaller
-        # block_b (interpret mode is indifferent).
-        out_specs = out_specs + [cube, cube, cube]
+        # xmit / bypass / exposed-wait / hidden component cubes; together
+        # with the input volume tile they grow the per-block VMEM working
+        # set 5x, so attribution sweeps on real hardware may need a
+        # smaller block_b (interpret mode is indifferent).
+        out_specs = out_specs + [cube, cube, cube, cube]
         out_shape = out_shape + [
-            jax.ShapeDtypeStruct((b, s, p), fdtype) for _ in range(3)
+            jax.ShapeDtypeStruct((b, s, p), fdtype) for _ in range(4)
         ]
     out = pl.pallas_call(
-        functools.partial(_kernel, n_steps=s, attribution=attribution),
+        functools.partial(
+            _kernel, n_steps=s, n_routes=n_routes, n_hops=n_hops,
+            attribution=attribution,
+        ),
         grid=(b // block_b,),
         in_specs=[
             cube,  # vol
@@ -194,13 +280,15 @@ def _timing_scan_call(
             row(1),  # t_recfg
             row(1),  # chain
             row(p),  # ready
+            cube_r,  # byp_vol
+            cube_rh,  # byp_plane (hops flattened to R'*H')
         ],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
     )(
         vol, step_vol, step_cfg, step_mask, plane_mask, bw, init,
-        t_recfg, chain, ready,
+        t_recfg, chain, ready, byp_vol, byp_plane,
     )
     return out
 
@@ -215,17 +303,36 @@ def timing_scan(
     padded so the batch dimension is a power of two (the backend's bucket
     padding guarantees this).  Returns ``(cct (B,), n_recfg (B,),
     busy (B, P), feasible (B,), volume_ok (B,))`` as jax arrays; with
-    ``attribution=True`` three (B, S, P) component cubes -- direct-xmit
-    time, exposed reconfiguration wait, overlapped reconfiguration --
-    are appended (the bypass component is structurally zero here: the
-    backend routes bypass-carrying batches to the numpy reference).
+    ``attribution=True`` four (B, S, P) component cubes -- direct-xmit
+    time, bypass relay carry, exposed reconfiguration wait, overlapped
+    reconfiguration -- are appended, matching ``finalize_result``'s
+    component order.
+
+    Bypass routes run inside the kernel: ``byp_plane`` is flattened to
+    ``(B, S, R*H)`` for the block spec, and bypass-free batches pass an
+    inert one-route placeholder with ``n_routes = 0`` so the unrolled
+    hop loops vanish from the traced program entirely.
     """
-    b = packed["vol"].shape[0]
+    b, s, _ = packed["vol"].shape
     block = min(block_b, b)
     if b % block:
         raise ValueError(
             f"batch {b} not a multiple of block {block}; bucket-pad first"
         )
+    n_routes = packed["byp_vol"].shape[2]
+    n_hops = packed["byp_plane"].shape[3]
+    if n_routes == 0 or n_hops == 0:
+        # Zero-width arrays make zero-size block specs; substitute an
+        # inert placeholder column (never read: the route loop unrolls
+        # to nothing with n_routes = 0).
+        byp_vol = jnp.zeros((b, s, 1), packed["vol"].dtype)
+        byp_plane = jnp.full((b, s, 1), -1, jnp.int32)
+        n_routes, n_hops = 0, 1
+    else:
+        byp_vol = jnp.asarray(packed["byp_vol"])
+        byp_plane = jnp.asarray(
+            packed["byp_plane"], jnp.int32
+        ).reshape(b, s, n_routes * n_hops)
     out = _timing_scan_call(
         jnp.asarray(packed["vol"]),
         jnp.asarray(packed["step_vol"]),
@@ -237,9 +344,13 @@ def timing_scan(
         jnp.asarray(packed["t_recfg"])[:, None],
         jnp.asarray(packed["chain"], jnp.int32)[:, None],
         jnp.asarray(packed["ready"]),
+        byp_vol,
+        byp_plane,
         block_b=block,
         interpret=interpret,
         attribution=attribution,
+        n_routes=n_routes,
+        n_hops=n_hops,
     )
     cct, n_recfg, busy, feasible, volume_ok = out[:5]
     base = (cct[:, 0], n_recfg[:, 0], busy, feasible[:, 0], volume_ok[:, 0])

@@ -115,6 +115,19 @@ def composite(fn):
     return factory
 
 
+class HealthCheck:
+    """Stand-ins for hypothesis' suppressible health-check tags.
+
+    The stub runs no health checks, so these only need to exist for
+    ``settings(suppress_health_check=[...])`` call sites to import.
+    """
+
+    function_scoped_fixture = "function_scoped_fixture"
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
 class settings:
     """Decorator recording example-count knobs for ``@given``."""
 

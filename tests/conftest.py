@@ -19,6 +19,7 @@ def _install_hypothesis_stub() -> None:
     module = types.ModuleType("hypothesis")
     module.given = hypothesis_stub.given
     module.settings = hypothesis_stub.settings
+    module.HealthCheck = hypothesis_stub.HealthCheck
     module.strategies = hypothesis_stub
     module.__stub__ = True
     sys.modules["hypothesis"] = module
