@@ -24,22 +24,31 @@ What is gated (and why):
   *below* baseline by more than the band.
 * **Speedup ratios** -- ``speedup_vs_numpy`` per backend from
   ``BENCH_backends.json``, the INDEPENDENT-grid
-  ``speedup_vs_per_instance``, and the fused-planner
+  ``speedup_vs_per_instance``, the fused-planner
   ``speedup_vs_per_step`` (fused ``lax.scan`` CHAIN planner vs the
-  per-step numpy loop).  Ratios compare two timings from the SAME run
-  on the SAME host, so they transfer across runner hardware where
-  absolute microseconds do not.  A ratio falling below baseline
-  by more than the band fails -- with the floor clamped to the
-  benchmark's own in-run hard gate (>= 2x), so a baseline captured on
-  a fast host can never fail a slower runner that still clears the
-  gate.
+  per-step numpy loop), and the runtime-scale
+  ``multi_tenant_scale.speedup_vs_serial_path`` (warm memoized replay
+  of the 10k-job heavy-tailed trace vs the legacy per-event planning
+  path).  Ratios compare two timings from the SAME run on the SAME
+  host, so they transfer across runner hardware where absolute
+  microseconds do not.  A ratio falling below baseline by more than
+  the band fails -- with the floor clamped to the benchmark's own
+  in-run hard gate (>= 2x for the backend gates, >= 50x for the
+  runtime-scale gate), so a baseline captured on a fast host can
+  never fail a slower runner that still clears the gate.
+* **Throughput rows, wide band** -- ``*_events_per_sec`` and
+  ``*_speedup`` sweep rows are wall-clock derived, so absolute values
+  move with runner hardware; they get a deliberately wide
+  higher-is-better band (fail only below 10%% of baseline) that still
+  catches an order-of-magnitude collapse -- e.g. the hot path
+  silently falling back to per-event planning.
 
 What is deliberately NOT gated:
 
 * absolute wall-clock rows (``*_wall_time``, ``ir_sweep_*``,
   ``indep_grid_*``, ``ir_backend_*``, ``fused_grid_*`` microsecond
-  columns, including the ``*_compile`` cold-start rows) -- runner
-  hardware varies run to run;
+  columns, including the ``*_compile`` cold-start rows and the
+  ``*_us`` phase rows) -- runner hardware varies run to run;
 * the ``pallas`` backend ratio -- interpret mode on CPU times the
   interpreter, not the kernel.
 
@@ -71,16 +80,21 @@ log = get_logger("check_regression")
 
 # Sweep rows whose us_per_call is a wall-clock measurement (machine
 # dependent): excluded from the deterministic-point comparison.  The
-# ``_us$`` suffix covers the per-phase timing rows and
-# ``events_per_sec`` the replay-throughput row (wall-clock derived).
+# ``_us$`` suffix covers the per-phase timing rows.
 _TIMING_ROW = re.compile(
     r"(wall_time|ir_sweep_|indep_grid_|ir_backend_|fused_grid_"
-    r"|_solve_time|_us$|events_per_sec)"
+    r"|_solve_time|_us$)"
 )
 # Deterministic sweep rows where LARGER is better (overlap efficiency,
-# bypass hit rate): gated on falling below baseline instead of rising
-# above it.
+# bypass/cache hit rate): gated on falling below baseline instead of
+# rising above it.
 _HIGHER_BETTER = re.compile(r"(overlap_eff|hit_rate)$")
+# Wall-clock-derived throughput rows (events/sec, speedup ratios):
+# higher is better, but absolute values track runner hardware, so the
+# band is deliberately wide -- only an order-of-magnitude collapse
+# (below 10% of baseline) fails.
+_WIDE_BAND_ROW = re.compile(r"(events_per_sec|_speedup)$")
+_WIDE_BAND = 0.90
 # Backends whose speedup ratio is not meaningful on CI hosts.
 _UNGATED_BACKENDS = frozenset({"pallas"})
 
@@ -94,6 +108,7 @@ _RATIO_HARD_GATES = {
     "backend_speedup:jax": 2.0,
     "independent_grid_speedup": 2.0,
     "fused_grid_speedup": 2.0,
+    "mt_scale_speedup": 50.0,
 }
 
 SWEEP_NAME = "BENCH_sweep.json"
@@ -129,6 +144,11 @@ def _speedup_ratios(payload: dict) -> dict[str, float]:
     fused = payload.get("fused_grid", {})
     if "speedup_vs_per_step" in fused:
         ratios["fused_grid_speedup"] = float(fused["speedup_vs_per_step"])
+    scale = payload.get("multi_tenant_scale", {})
+    if "speedup_vs_serial_path" in scale:
+        ratios["mt_scale_speedup"] = float(
+            scale["speedup_vs_serial_path"]
+        )
     return ratios
 
 
@@ -147,7 +167,14 @@ def compare(
             failures.append(f"sweep point {name!r} missing from current run")
             continue
         cur = cur_sweep[name]
-        if _HIGHER_BETTER.search(name):
+        if _WIDE_BAND_ROW.search(name):
+            if base > 0 and cur < base * (1.0 - _WIDE_BAND):
+                failures.append(
+                    f"throughput point {name!r} collapsed: {cur:.1f} vs "
+                    f"baseline {base:.1f} ({cur / base - 1.0:.0%}, "
+                    f"wide band is {_WIDE_BAND:.0%})"
+                )
+        elif _HIGHER_BETTER.search(name):
             if base > 0 and cur < base * (1.0 - tolerance):
                 failures.append(
                     f"sweep point {name!r} regressed: {cur:.3f} vs "

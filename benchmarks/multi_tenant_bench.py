@@ -1,4 +1,4 @@
-"""Multi-tenant fabric arbitration sweep: tenants x planes x t_recfg.
+"""Multi-tenant fabric arbitration sweep + fleet-scale runtime gate.
 
 Replays Poisson traces of model-config-derived collectives through the
 ``repro.runtime`` arbiter and reports, per cell:
@@ -11,6 +11,21 @@ The degenerate 1-tenant cell doubles as a regression anchor: with one job
 in flight at a time the arbiter must realize exactly the serial
 scheduler's CCT (asserted in tests/test_runtime.py; here it shows up as
 slowdown 1.00x for hot circuits).
+
+Two runtime-scale sections follow the sweep (ROADMAP item 2):
+
+* **Parity reference** -- the canonical 19-job quick-cell trace replayed
+  with the arbiter's memoized/batched path OFF (the legacy serial path)
+  and ON; the two reports are asserted bit-identical in-run, and the
+  legacy events/sec becomes the denominator for the speedup gate.
+* **Scale** -- a 10,000-job heavy-tailed/diurnal trace
+  (``heavy_tailed_trace``) replayed cold (empty plan cache; wall time
+  includes all one-time planning) and warm (second replay against the
+  now-populated shared cache -- the steady state a million-event serving
+  run operates in).  ``mt_scale_speedup`` (warm events/sec over legacy
+  events/sec, both measured in this process so the ratio is
+  machine-independent) is asserted >= 50x in-run and hard-gated in
+  ``check_regression.py``; the cold ratio and cache hit rate ride along.
 """
 
 from __future__ import annotations
@@ -25,7 +40,23 @@ from repro.core import (
     get_pattern,
     strawman_instance,
 )
-from repro.runtime import arch_request_mix, poisson_trace, replay
+from repro.runtime import (
+    PlanCache,
+    arch_request_mix,
+    heavy_tailed_trace,
+    poisson_trace,
+    replay,
+)
+
+# Fleet-scale trace defaults (the gated 10k-job heavy-tailed replay).
+_SCALE_JOBS = 10_000
+_SCALE_RATE = 60.0  # arrivals/s: bursty overlap without miss blowup
+_SCALE_SIGMA = 0.8  # lognormal size spread (pow2-snapped, see workload)
+_SCALE_SEED = 11
+# Hard floor asserted in-run and gated in check_regression.py: warm
+# steady-state events/sec must beat the legacy per-job planning path by
+# this factor on the same machine in the same process.
+_SCALE_SPEEDUP_FLOOR = 50.0
 
 # Tenant pool: one training job per architecture family (dense, MoE).
 _TENANT_ARCHS = ("qwen3_4b", "gemma_2b", "qwen2_moe_a2_7b", "qwen2_1_5b")
@@ -52,7 +83,43 @@ def _tenant_mixes(n_tenants: int):
     return tenants
 
 
-def run(quick: bool = False) -> list[tuple[str, float, str]]:
+def _record_key(report):
+    """Everything the bit-identical parity contract covers, per job."""
+    return [
+        (
+            r.job_id,
+            r.tag,
+            r.start,
+            r.finish,
+            r.cct,
+            r.queueing_delay,
+            r.replans,
+            r.planes_min,
+            r.planes_max,
+            r.rejected,
+        )
+        for r in report.records
+    ]
+
+
+def _assert_parity(legacy, optimized) -> None:
+    """Bit-identical ``ReplayReport`` with the memoized path on vs off."""
+    assert _record_key(legacy) == _record_key(optimized), (
+        "memoized replay diverged from the legacy path (records)"
+    )
+    assert legacy.makespan == optimized.makespan
+    assert legacy.stats == optimized.stats, (
+        "memoized replay diverged from the legacy path (stats)"
+    )
+    assert legacy.events_fired == optimized.events_fired
+
+
+def run(
+    quick: bool = False,
+    jobs: int | None = None,
+    arrival: float | None = None,
+    tracer=None,
+) -> list[tuple[str, float, str]]:
     rows: list[tuple[str, float, str]] = []
     t_wall = time.perf_counter()
     # Per-phase wall-clock accounting (the ``_us``-suffixed rows below):
@@ -162,6 +229,124 @@ def run(quick: bool = False) -> list[tuple[str, float, str]]:
             "of replay (wall)",
         )
     )
+
+    # -- parity reference: canonical 19-job trace, legacy path vs hot path
+    parity_fabric = OpticalFabric(_N_NODES, 4, t_recfg=200e-6)
+    parity_trace = poisson_trace(
+        _tenant_mixes(2), rate=30.0, horizon=0.25, seed=7
+    )
+    t0 = time.perf_counter()
+    legacy_report = replay(
+        parity_trace, parity_fabric, optimize=False, solo_refs=False
+    )
+    t_legacy = time.perf_counter() - t0
+    optimized_report = replay(
+        parity_trace, parity_fabric, optimize=True, solo_refs=False
+    )
+    _assert_parity(legacy_report, optimized_report)
+    legacy_eps = legacy_report.events_fired / t_legacy
+    rows.append(
+        (
+            "mt_phase_parity_legacy_us",
+            t_legacy * 1e6,
+            f"{legacy_report.events_fired} events at "
+            f"{legacy_eps:.1f} ev/s on the legacy (optimize=False) path; "
+            "bit-identical to the memoized path (asserted)",
+        )
+    )
+
+    # -- fleet scale: 10k-job heavy-tailed trace, cold then warm cache
+    n_jobs = jobs if jobs is not None else _SCALE_JOBS
+    rate_scale = arrival if arrival is not None else _SCALE_RATE
+    t0 = time.perf_counter()
+    scale_trace = heavy_tailed_trace(
+        _tenant_mixes(4),
+        n_jobs=n_jobs,
+        rate=rate_scale,
+        seed=_SCALE_SEED,
+        sigma=_SCALE_SIGMA,
+    )
+    t_scale_tracegen = time.perf_counter() - t0
+    scale_fabric = OpticalFabric(_N_NODES, 4, t_recfg=200e-6)
+    cache = PlanCache()
+    t0 = time.perf_counter()
+    cold = replay(
+        scale_trace,
+        scale_fabric,
+        solo_refs=False,
+        plan_cache=cache,
+        tracer=tracer,
+    )
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = replay(
+        scale_trace, scale_fabric, solo_refs=False, plan_cache=cache
+    )
+    t_warm = time.perf_counter() - t0
+    cold_eps = cold.events_fired / t_cold
+    warm_eps = warm.events_fired / t_warm
+    speedup = warm_eps / legacy_eps
+    speedup_cold = cold_eps / legacy_eps
+    assert speedup >= _SCALE_SPEEDUP_FLOOR, (
+        f"scale replay only {speedup:.1f}x the legacy path "
+        f"(floor {_SCALE_SPEEDUP_FLOOR}x)"
+    )
+    rows.append(
+        (
+            "mt_scale_events_per_sec",
+            cold_eps,
+            f"{cold.events_fired} events, {n_jobs} heavy-tailed jobs, "
+            f"cold cache ({cold.cache.misses} plan misses, "
+            f"{t_cold * 1e3:.0f}ms wall incl. "
+            f"{cold.cache.plan_wall_s * 1e3:.0f}ms planning)",
+        )
+    )
+    rows.append(
+        (
+            "mt_scale_warm_events_per_sec",
+            warm_eps,
+            f"{warm.events_fired} events, warm shared cache "
+            f"({t_warm * 1e3:.0f}ms wall) -- steady-state throughput",
+        )
+    )
+    rows.append(
+        (
+            "mt_scale_speedup",
+            speedup,
+            f"warm {warm_eps:.0f} ev/s vs legacy {legacy_eps:.1f} ev/s "
+            f"(same run; cold ratio {speedup_cold:.1f}x)",
+        )
+    )
+    rows.append(
+        (
+            "mt_cache_hit_rate",
+            cold.cache.hit_rate,
+            f"{cold.cache.hits}/{cold.cache.hits + cold.cache.misses} "
+            f"plan lookups hit on the cold pass; release memo "
+            f"{cold.cache.release_hits}h/{cold.cache.release_misses}m",
+        )
+    )
+    rows.append(
+        (
+            "mt_phase_scale_plan_us",
+            cold.cache.plan_wall_s * 1e6,
+            f"{cold.cache.misses} cache-miss plans (wall)",
+        )
+    )
+    rows.append(
+        (
+            "mt_phase_scale_replay_us",
+            max(0.0, t_cold - cold.cache.plan_wall_s) * 1e6,
+            "cold-pass event loop outside planning (wall)",
+        )
+    )
+    rows.append(
+        (
+            "mt_phase_scale_tracegen_us",
+            t_scale_tracegen * 1e6,
+            f"{n_jobs}-job heavy-tailed trace generation (wall)",
+        )
+    )
     rows.append(
         (
             "multi_tenant_wall_time",
@@ -173,8 +358,45 @@ def run(quick: bool = False) -> list[tuple[str, float, str]]:
 
 
 if __name__ == "__main__":
-    from repro.obs import get_logger
+    import argparse
+
+    from repro.obs import ChromeTracer, get_logger
+
+    parser = argparse.ArgumentParser(
+        description="multi-tenant arbitration sweep + runtime scale gate"
+    )
+    parser.add_argument(
+        "--quick", action="store_true", help="single sweep cell"
+    )
+    parser.add_argument(
+        "--jobs",
+        type=int,
+        default=None,
+        help=f"scale-trace job count (default {_SCALE_JOBS})",
+    )
+    parser.add_argument(
+        "--arrival",
+        type=float,
+        default=None,
+        help=f"scale-trace mean arrival rate/s (default {_SCALE_RATE})",
+    )
+    parser.add_argument(
+        "--trace",
+        metavar="OUT.json",
+        default=None,
+        help="record the cold scale replay with ChromeTracer to this file",
+    )
+    args = parser.parse_args()
 
     log = get_logger("multi_tenant_bench")
-    for name, us, note in run():
+    tracer = ChromeTracer() if args.trace else None
+    for name, us, note in run(
+        quick=args.quick,
+        jobs=args.jobs,
+        arrival=args.arrival,
+        tracer=tracer,
+    ):
         log.data(f"{name},{us:.1f},{note}")
+    if tracer is not None:
+        tracer.write(args.trace)
+        log.info(f"wrote {args.trace}")

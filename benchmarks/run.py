@@ -132,6 +132,20 @@ def main() -> None:
         f"speedup={fused['speedup_vs_per_step']}x "
         f"mismatches={fused['decision_mismatches']}"
     )
+    # Machine-independent runtime-scale ratio (warm memoized replay vs
+    # the legacy per-event path, measured in the same run) -- hard-gated
+    # by check_regression.py alongside the backend speedups.
+    by_name = {p["name"]: p for p in points}
+    if "mt_scale_speedup" in by_name:
+        backends_payload["multi_tenant_scale"] = {
+            "speedup_vs_serial_path": by_name["mt_scale_speedup"][
+                "us_per_call"
+            ],
+            "cache_hit_rate": by_name.get("mt_cache_hit_rate", {}).get(
+                "us_per_call"
+            ),
+            "note": by_name["mt_scale_speedup"]["note"],
+        }
     backends_name = (
         "BENCH_backends.json" if quick else "BENCH_backends_full.json"
     )

@@ -419,7 +419,8 @@ def _structure_local_search(
                 if trial[i].sum() < 1:
                     continue
                 cand = solve_fixed_structure(
-                    fabric, pattern, trial, mode=schedule.mode
+                    fabric, pattern, trial, mode=schedule.mode,
+                    validate=False,
                 )
                 lp_calls += 1
                 if cand is not None and cand.cct < best.cct * (1 - 1e-9):
@@ -429,7 +430,64 @@ def _structure_local_search(
                     break
             if lp_calls >= _LOCAL_SEARCH_MAX_LP:
                 break
+    if best is not schedule:
+        # Candidates skip the per-solve legality re-check; re-validate
+        # only the winner that escapes the search.
+        best.validate()
     return best
+
+
+def swot_greedy_chain_batch(
+    cells: Sequence[tuple[OpticalFabric, Pattern]],
+    rollout_horizon: int = 24,
+    max_enumerated_planes: int = 8,
+    plane_ready: Sequence[Sequence[float] | None] | None = None,
+) -> list[Schedule]:
+    """Plan many CHAIN cells through ONE instance-batched decisions pass.
+
+    The runtime arbiter's batched-grant path: all jobs granted leases at
+    one timestamp become one grid, their reserve-set decisions advance
+    through the per-step loop together (``_chain_grid_chosen``, or the
+    fused ``lax.scan`` planner once the batch crosses
+    ``REPRO_FUSED_PLANNER_THRESHOLD``), and each cell is then
+    materialized + polished exactly as ``swot_greedy_chain(polish=True)``
+    would.  Because grid decisions are bitwise-identical to the
+    per-instance greedy (the property the grid planners are pinned to),
+    cell ``i``'s returned schedule is bitwise-identical to
+    ``swot_greedy_chain(*cells[i], plane_ready=plane_ready[i])``.
+
+    ``plane_ready`` entries must carry no positive offsets
+    (``has_ready_offsets`` false): the grid planner models fresh planes
+    only.  Callers with staggered leases use the per-instance path.
+    """
+    if not cells:
+        return []
+    readies = (
+        [None] * len(cells) if plane_ready is None else list(plane_ready)
+    )
+    assert len(readies) == len(cells)
+    assert not any(has_ready_offsets(r) for r in readies), (
+        "batched chain planning requires zero ready offsets"
+    )
+    planner = select_planner_by_size(len(cells), explicit=None)
+    st = _GridState(
+        cells,
+        mode=DependencyMode.CHAIN,
+        max_enumerated_planes=max_enumerated_planes,
+    )
+    decisions = _chain_grid_decisions(st, rollout_horizon, planner)
+    from repro.core.milp import lp_polish
+
+    schedules: list[Schedule] = []
+    for (fabric, pattern), dec, ready in zip(cells, decisions, readies):
+        # Identical epilogue to swot_greedy_chain(polish=True) with the
+        # caller's (zero-offset) plane_ready threaded through, so the LP
+        # solves the same program the per-instance path would.
+        schedule = execute(fabric, pattern, dec, plane_ready=ready)
+        schedule = lp_polish(schedule, plane_ready=ready)
+        schedule = _structure_local_search(fabric, pattern, schedule)
+        schedules.append(schedule)
+    return schedules
 
 
 def independent_decisions(

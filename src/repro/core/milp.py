@@ -125,6 +125,7 @@ def _solve(
     mip_rel_gap: float,
     fixed: dict[str, np.ndarray] | None,
     plane_ready: Sequence[float] | None = None,
+    validate: bool = True,
 ) -> MilpResult:
     steps = pattern.steps
     n_steps = len(steps)
@@ -341,6 +342,7 @@ def _solve(
         pattern,
         Decisions(tuple(splits), mode=mode),
         plane_ready=plane_ready,
+        validate=validate,
     )
     n_bin = int(np.sum(np.array(v.integrality) == 1))
     return MilpResult(
@@ -411,8 +413,15 @@ def solve_fixed_structure(
     mode: DependencyMode = DependencyMode.CHAIN,
     time_limit: float = 30.0,
     plane_ready: Sequence[float] | None = None,
+    validate: bool = True,
 ) -> Schedule | None:
-    """Exact LP over splits/timing for a fixed serving-set structure."""
+    """Exact LP over splits/timing for a fixed serving-set structure.
+
+    ``validate=False`` skips the legality re-check on the executed
+    solution (earliest-start execution of LP-feasible splits is legal by
+    construction) -- the structure local search scores hundreds of
+    throwaway candidates per plan and validates only the winner.
+    """
     if not np.all(u.sum(axis=1) >= 1):
         return None  # some step has no server
     r = derive_reconfigs(fabric, pattern, u)
@@ -425,6 +434,7 @@ def solve_fixed_structure(
             1e-9,
             fixed={"u": u, "r": r},
             plane_ready=plane_ready,
+            validate=validate,
         ).schedule
     except RuntimeError:
         return None

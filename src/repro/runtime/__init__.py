@@ -4,17 +4,21 @@ The core scheduler (``repro.core``) answers "what is the best schedule for
 ONE collective that owns the whole fabric".  This package makes the fabric
 a *shared, arbitrated resource*:
 
-* ``engine``   -- deterministic event-driven simulation (event heap,
+* ``engine``    -- deterministic event-driven simulation (event heap,
   simulated time).
-* ``arbiter``  -- admits concurrent ``CollectiveRequest`` streams, leases
+* ``arbiter``   -- admits concurrent ``CollectiveRequest`` streams, leases
   subsets of OCS planes to in-flight collectives, re-plans a collective
   via the greedy scheduler when its lease shrinks or grows, and applies
   priorities + backpressure through an admission queue.
-* ``workload`` -- multi-job trace generation (Poisson arrivals, per-job
-  algorithm/size mixes derived from the model configs) and replay with
-  per-job CCT / queueing-delay / plane-utilization statistics.
+* ``plancache`` -- memoized planning state (time-shifted plan reuse plus
+  lease-shrink choice memo) behind the arbiter's ``optimize=True`` hot
+  path; results are bit-identical with the cache on or off.
+* ``workload``  -- multi-job trace generation (Poisson or heavy-tailed /
+  diurnal arrivals, per-job algorithm/size mixes derived from the model
+  configs) and replay with per-job CCT / queueing-delay /
+  plane-utilization statistics.
 
-See DESIGN.md section 10 for the full model.
+See DESIGN.md sections 10 and 18 for the full model.
 """
 
 from repro.runtime.arbiter import (
@@ -23,22 +27,27 @@ from repro.runtime.arbiter import (
     JobRecord,
 )
 from repro.runtime.engine import SimEngine
+from repro.runtime.plancache import CacheStats, PlanCache
 from repro.runtime.workload import (
     JobSpec,
     ReplayReport,
     arch_request_mix,
+    heavy_tailed_trace,
     poisson_trace,
     replay,
 )
 
 __all__ = [
     "ArbiterStats",
+    "CacheStats",
     "FabricArbiter",
     "JobRecord",
     "JobSpec",
+    "PlanCache",
     "ReplayReport",
     "SimEngine",
     "arch_request_mix",
+    "heavy_tailed_trace",
     "poisson_trace",
     "replay",
 ]

@@ -12,7 +12,12 @@ resource with an event-driven execution model:
 * **Leases** -- an admitted job receives an exclusive lease on a subset
   of planes (all free planes when nothing else is waiting, otherwise its
   fair share).  No plane is ever owned by two in-flight collectives;
-  ``assert_invariants`` checks this partition property.
+  ``assert_invariants`` checks this partition property.  The
+  ``placement`` policy picks *which* free planes: ``"first_free"``
+  (lowest ids, the historical rule) or ``"schedule_aware"`` (prefer
+  planes whose installed circuits already match the job's next-step
+  config in its namespace, so co-located same-``ConfigKey`` tenants skip
+  reconfigurations entirely).
 * **Planning** -- the job's remaining steps are scheduled on a
   *sub-fabric* (its leased planes only) by the existing SWOT scheduler,
   so every single-collective optimization (reconfiguration-communication
@@ -30,6 +35,21 @@ resource with an event-driven execution model:
   INDEPENDENT-mode jobs have no step barrier, so they resize only at
   completion.
 
+**The memoized hot path** (``optimize=True``, the default; DESIGN.md
+section 18): planning results are cached in a ``PlanCache`` keyed on
+everything the plan depends on -- (algorithm, n_nodes, size, remaining
+step, method, mode, lease width, per-plane bandwidth scales, namespaced
+installed configs, per-plane ready offsets) -- and stored in
+plan-*relative* time, so a same-key job re-uses the cached schedule
+time-shifted to its own grant instant.  All grants pending at one
+timestamp are planned through ONE instance-batched greedy pass
+(``swot_greedy_chain_batch``) instead of per-job ``swot_schedule``
+calls, lease-shrink scoring due at a shared boundary collapses into one
+``batch_evaluate`` across jobs, and completed plans retire in O(planes)
+from a per-plan summary instead of re-walking activities.  Every reuse
+replays the exact float operations of the uncached path, so replay
+reports are bit-identical with ``optimize`` on or off (property-tested).
+
 Physical OCS state is tracked across jobs: a plane's installed
 permutation is tagged by ``(algorithm, n_nodes)`` -- the namespace within
 which config ids denote identical port maps -- so a follow-up job running
@@ -42,9 +62,11 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import time
 
 from repro.core.baselines import strawman_instance
 from repro.core.fabric import OpticalFabric
+from repro.core.greedy import swot_greedy_chain_batch
 from repro.core.ir import (
     BatchInstance,
     batch_evaluate,
@@ -56,6 +78,7 @@ from repro.core.scheduler import swot_schedule
 from repro.core.shim import _INDEPENDENT_SAFE, CollectiveRequest
 from repro.obs.trace import NULL_TRACER, Tracer
 from repro.runtime.engine import SimEngine
+from repro.runtime.plancache import CachedPlan, PlanCache
 from repro.core.tolerances import EPS as _EPS
 
 # Cap on lease-shrink candidate sets scored per resize (one batched IR
@@ -71,6 +94,9 @@ _MAX_RELEASE_CANDIDATES = 16
 # Override with the env var; <= 0 disables auto-selection entirely.
 ENV_BACKEND_THRESHOLD = "REPRO_ARBITER_BACKEND_THRESHOLD"
 _DEFAULT_BACKEND_THRESHOLD = _MAX_RELEASE_CANDIDATES
+
+# Lease placement policies (see class docstring).
+_PLACEMENTS = ("first_free", "schedule_aware")
 
 # Namespace within which OCS config ids denote identical permutations.
 ConfigKey = tuple[str, int]  # (algorithm, n_nodes)
@@ -141,6 +167,7 @@ class _Job:
     planes: tuple[int, ...] = ()
     step_idx: int = 0
     plan: Schedule | None = None
+    cached: CachedPlan | None = None
     plan_base_step: int = 0
     plan_t0: float = 0.0
     boundaries: tuple[float, ...] = ()
@@ -151,6 +178,88 @@ class _Job:
     @property
     def key(self) -> ConfigKey:
         return (self.req.algorithm, self.req.n_nodes)
+
+
+def _rel_bounds(
+    mode: DependencyMode, schedule: Schedule, n_steps: int
+) -> tuple[float, ...]:
+    """Plan-relative step-boundary offsets for a freshly built schedule.
+
+    The arbiter materializes absolute boundaries as ``t0 + rel`` -- the
+    same float additions whether the plan is fresh or replayed from the
+    cache, which is what keeps memoization bit-invisible.
+    """
+    if mode is DependencyMode.INDEPENDENT:
+        # No cross-step barrier: the collective is one atomic segment.
+        return (schedule.cct,)
+    ends: list[float] = []
+    prev = 0.0
+    for i in range(n_steps):
+        try:
+            _, end = schedule.step_window(i)
+            prev = end
+        except ValueError:
+            pass  # zero-volume step: shares the previous boundary
+        ends.append(prev)
+    return tuple(ends)
+
+
+def _release_candidates(
+    prof: tuple, n_release: int
+) -> list[tuple[int, ...]]:
+    """Candidate release sets as *positions* into the sorted lease.
+
+    The historical soonest-free choice first, then up to
+    ``_MAX_RELEASE_CANDIDATES`` alternatives enumerated in free-time
+    order (ties by position) so the capped pool spans soonest- through
+    latest-freeing release sets.  Positions (not plane ids) make the
+    enumeration a pure function of the lease *profile*, which is what
+    lets physically different but profile-identical leases share one
+    memoized choice.  Profile free offsets are *unclamped* (they may be
+    negative for long-idle reserved planes), so this ordering equals the
+    legacy (absolute free time, plane id) ordering exactly.
+    """
+    by_free = sorted(range(len(prof)), key=lambda i: (prof[i][0], i))
+    default = tuple(by_free[:n_release])
+    candidates = [default]
+    seen = {frozenset(default)}
+    for combo in itertools.combinations(by_free, n_release):
+        if len(candidates) >= _MAX_RELEASE_CANDIDATES:
+            break
+        key = frozenset(combo)
+        if key in seen:
+            continue
+        seen.add(key)
+        candidates.append(combo)
+    return candidates
+
+
+def _pick_best(
+    candidates: list[tuple[int, ...]],
+    starts: list[float],
+    cct,
+    feasible,
+    offset: int,
+) -> int:
+    """Earliest-estimated-finish candidate (ties keep the first choice).
+
+    ``cct``/``feasible`` may be slices of a larger combined batch
+    (``offset`` locates this job's rows); the selection arithmetic is
+    identical either way.
+    """
+    best_idx = 0
+    best_score = (
+        starts[0] + float(cct[offset])
+        if bool(feasible[offset])
+        else float("inf")
+    )
+    for c in range(1, len(candidates)):
+        if not bool(feasible[offset + c]):
+            continue
+        score = starts[c] + float(cct[offset + c])
+        if score < best_score - _EPS:
+            best_idx, best_score = c, score
+    return best_idx
 
 
 class FabricArbiter:
@@ -168,11 +277,18 @@ class FabricArbiter:
         rebalance: bool = True,
         backend: str | None = None,
         tracer: Tracer | None = None,
+        optimize: bool = True,
+        plan_cache: PlanCache | None = None,
+        placement: str = "first_free",
     ) -> None:
         if min_planes < 1 or min_planes > fabric.n_planes:
             raise ValueError(
                 f"min_planes must be in [1, {fabric.n_planes}], "
                 f"got {min_planes}"
+            )
+        if placement not in _PLACEMENTS:
+            raise ValueError(
+                f"placement must be one of {_PLACEMENTS}, got {placement!r}"
             )
         self.engine = engine
         self.fabric = fabric
@@ -181,6 +297,7 @@ class FabricArbiter:
         self.method = method
         self.allow_independent = allow_independent
         self.rebalance = rebalance
+        self.placement = placement
         # IR backend for batched lease-shrink re-scoring.  None enables
         # auto-selection: jax once the candidate batch reaches
         # REPRO_ARBITER_BACKEND_THRESHOLD rows, the REPRO_IR_BACKEND env
@@ -190,6 +307,20 @@ class FabricArbiter:
         # has enabled=False; every site below guards on that flag, so the
         # untraced cost is one attribute load per lifecycle event.
         self.tracer = NULL_TRACER if tracer is None else tracer
+        # Memoized hot path: plan + release-choice cache (DESIGN.md
+        # section 18).  ``optimize=False`` disables every cached/batched
+        # path and restores the per-job legacy behavior -- the reference
+        # the bit-identical replay-parity tests compare against.  A
+        # caller-provided ``plan_cache`` is shared (bind evicts it if it
+        # served an incompatible fabric).
+        self._cache: PlanCache | None = None
+        if optimize:
+            self._cache = plan_cache if plan_cache is not None else (
+                PlanCache()
+            )
+            self._cache.bind(fabric)
+        elif plan_cache is not None:
+            raise ValueError("plan_cache requires optimize=True")
         self.stats = ArbiterStats()
         self.records: dict[int, JobRecord] = {}
         self._free: set[int] = set(range(fabric.n_planes))
@@ -204,6 +335,11 @@ class FabricArbiter:
         self._waiting: list[tuple[int, int, _Job]] = []  # (-prio, seq, job)
         self._ids = itertools.count()
         self._wait_seq = itertools.count()
+
+    @property
+    def plan_cache(self) -> PlanCache | None:
+        """The active plan cache (None when ``optimize=False``)."""
+        return self._cache
 
     def _trace_gauges(self) -> None:
         """Sample the fabric-level counter tracks (queue/free/running)."""
@@ -341,6 +477,14 @@ class FabricArbiter:
         return max(self.min_planes, self.fabric.n_planes // n_claimants)
 
     def _drain_queue(self) -> None:
+        # Optimized path: grants made in this drain are collected and
+        # planned together (`_plan_granted`), so same-timestamp admissions
+        # share one batched planning pass.  Deferral is order-preserving:
+        # `_grant` schedules no events, so boundary events still land in
+        # grant order (the engine's same-time tie-break).
+        granted: list[_Job] | None = (
+            [] if self._cache is not None else None
+        )
         while self._waiting and len(self._free) >= self.min_planes:
             _, _, job = heapq.heappop(self._waiting)
             # All free planes when nothing else waits; fair share otherwise
@@ -350,12 +494,29 @@ class FabricArbiter:
                 if not self._waiting
                 else self._fair_share(extra_claimants=1)
             )
-            grant = tuple(sorted(self._free))[: max(want, self.min_planes)]
-            self._grant(job, grant)
+            grant = self._pick_planes(job, max(want, self.min_planes))
+            self._grant(job, grant, granted)
+        if granted:
+            self._plan_granted(granted)
         if self._waiting:
             self._request_shrinks()
         elif self._free and self.rebalance and self._running:
             self._offer_grow()
+
+    def _pick_planes(self, job: _Job, k: int) -> tuple[int, ...]:
+        """Choose ``k`` free planes for a new lease under ``placement``."""
+        if self.placement == "schedule_aware":
+            # Prefer planes whose installed circuit already matches the
+            # job's next-step config in its namespace: a co-located
+            # same-key tenant starts hot (and hits the same plan-cache
+            # key as its predecessors).  Ties fall back to lowest id.
+            want = (job.key, job.pattern.steps[job.step_idx].config)
+            ranked = sorted(
+                self._free,
+                key=lambda p: (self._plane_state[p] != want, p),
+            )
+            return tuple(sorted(ranked[:k]))
+        return tuple(sorted(self._free))[:k]
 
     def _request_shrinks(self) -> None:
         """Ask over-share running jobs to release planes at their next
@@ -378,7 +539,12 @@ class FabricArbiter:
         job.target_planes = len(job.planes) + len(job.pending_planes)
 
     # -- lease lifecycle ----------------------------------------------------
-    def _grant(self, job: _Job, planes: tuple[int, ...]) -> None:
+    def _grant(
+        self,
+        job: _Job,
+        planes: tuple[int, ...],
+        deferred: list[_Job] | None = None,
+    ) -> None:
         now = self.engine.now
         self._free.difference_update(planes)
         job.planes = tuple(sorted(planes))
@@ -398,7 +564,10 @@ class FabricArbiter:
                 queueing_delay=now - job.record.arrival,
             )
             self._trace_gauges()
-        self._plan(job)
+        if deferred is None:
+            self._plan(job)
+        else:
+            deferred.append(job)
 
     def _sub_fabric(
         self, job: _Job, planes: tuple[int, ...] | None = None
@@ -409,20 +578,25 @@ class FabricArbiter:
             scales = tuple(
                 self.fabric.plane_bandwidth_scale[p] for p in planes
             )
-        initial = tuple(
-            state[1]
-            if (state := self._plane_state[p]) is not None
-            and state[0] == job.key
-            else None
-            for p in planes
-        )
         return OpticalFabric(
             n_nodes=self.fabric.n_nodes,
             n_planes=len(planes),
             bandwidth=self.fabric.bandwidth,
             t_recfg=self.fabric.t_recfg,
             plane_bandwidth_scale=scales,
-            initial_configs=initial,
+            initial_configs=self._init_configs(job.key, planes),
+        )
+
+    def _init_configs(
+        self, key: ConfigKey, planes: tuple[int, ...] | list[int]
+    ) -> tuple[int | None, ...]:
+        """Installed configs visible to ``key``'s namespace, per plane."""
+        return tuple(
+            state[1]
+            if (state := self._plane_state[p]) is not None
+            and state[0] == key
+            else None
+            for p in planes
         )
 
     def _lease_frame(
@@ -438,15 +612,37 @@ class FabricArbiter:
         t0 = max(now, min(ready_abs)) if ready_abs else now
         return t0, tuple(max(0.0, r - t0) for r in ready_abs)
 
-    def _plan(self, job: _Job) -> None:
-        """(Re)schedule ``job``'s remaining steps on its current lease."""
-        now = self.engine.now
+    # -- planning -----------------------------------------------------------
+    def _plan_key(
+        self, job: _Job, plane_ready: tuple[float, ...]
+    ) -> tuple:
+        """Everything a plan depends on besides the cache's bound fabric
+        signature (n_nodes / bandwidth / t_recfg)."""
+        scales = self.fabric.plane_bandwidth_scale
+        return (
+            job.req.algorithm,
+            job.req.n_nodes,
+            job.req.size,
+            job.step_idx,
+            job.method,
+            job.mode,
+            len(job.planes),
+            tuple(scales[p] for p in job.planes)
+            if scales is not None
+            else None,
+            self._init_configs(job.key, job.planes),
+            plane_ready,
+        )
+
+    def _build_plan(
+        self, job: _Job, plane_ready: tuple[float, ...]
+    ) -> CachedPlan:
+        """Plan ``job``'s remaining steps on its current lease (a miss)."""
         remaining = job.pattern.steps[job.step_idx :]
         assert remaining, "planning a finished job"
         sub_pattern = Pattern(
             job.pattern.name, job.pattern.n_nodes, tuple(remaining)
         )
-        t0, plane_ready = self._lease_frame(job.planes, now)
         schedule, _method = swot_schedule(
             self._sub_fabric(job),
             sub_pattern,
@@ -454,28 +650,123 @@ class FabricArbiter:
             mode=job.mode,
             plane_ready=plane_ready,
         )
-        job.plan = schedule
+        return CachedPlan(
+            schedule, _rel_bounds(job.mode, schedule, len(remaining))
+        )
+
+    def _install_plan(
+        self, job: _Job, cached: CachedPlan, t0: float
+    ) -> None:
+        """Attach a (possibly cached) plan to ``job``, time-shifted to
+        ``t0``, and schedule its next boundary."""
+        job.plan = cached.schedule
+        job.cached = cached
         job.plan_base_step = job.step_idx
         job.plan_t0 = t0
+        job.boundaries = tuple(t0 + r for r in cached.boundaries_rel)
         if job.planned:  # only lease-change re-plans count
             self.stats.replans += 1
             job.record.replans += 1
         job.planned = True
-        if job.mode is DependencyMode.INDEPENDENT:
-            # No cross-step barrier: the collective is one atomic segment.
-            job.boundaries = (t0 + schedule.cct,)
-        else:
-            ends: list[float] = []
-            prev = t0
-            for i in range(sub_pattern.n_steps):
-                try:
-                    _, end = schedule.step_window(i)
-                    prev = t0 + end
-                except ValueError:
-                    pass  # zero-volume step: shares the previous boundary
-                ends.append(prev)
-            job.boundaries = tuple(ends)
         self._schedule_boundary(job)
+
+    def _plan(self, job: _Job) -> None:
+        """(Re)schedule ``job``'s remaining steps on its current lease."""
+        now = self.engine.now
+        t0, plane_ready = self._lease_frame(job.planes, now)
+        if self._cache is None:
+            self._install_plan(job, self._build_plan(job, plane_ready), t0)
+            return
+        key = self._plan_key(job, plane_ready)
+        cached = self._cache.lookup(key)
+        if cached is None:
+            t_wall = time.perf_counter()
+            cached = self._build_plan(job, plane_ready)
+            self._cache.insert(
+                key, cached, time.perf_counter() - t_wall
+            )
+        self._install_plan(job, cached, t0)
+
+    def _plan_granted(self, jobs: list[_Job]) -> None:
+        """Plan every lease granted in one ``_drain_queue`` pass.
+
+        Cache hits install immediately; two or more *misses* that the
+        instance-batched greedy can serve (greedy CHAIN, no ready
+        offsets) are planned through ONE ``swot_greedy_chain_batch``
+        pass -- bitwise-identical schedules to the per-job path -- and
+        everything else falls back to per-job planning.  Plans install in
+        grant order, so boundary events keep the legacy tie-break order.
+        """
+        assert self._cache is not None
+        now = self.engine.now
+        hits: dict[int, tuple[float, CachedPlan]] = {}
+        misses: dict[int, tuple[float, tuple, tuple[float, ...]]] = {}
+        for job in jobs:
+            t0, plane_ready = self._lease_frame(job.planes, now)
+            key = self._plan_key(job, plane_ready)
+            cached = self._cache.lookup(key)
+            if cached is not None:
+                hits[job.job_id] = (t0, cached)
+            else:
+                misses[job.job_id] = (t0, key, plane_ready)
+        # One grid pass for the batchable misses (deduped by key: equal
+        # keys would plan the identical cell twice).
+        batch: list[tuple[_Job, tuple, tuple[float, ...]]] = []
+        seen_keys: set = set()
+        for job in jobs:
+            entry = misses.get(job.job_id)
+            if entry is None:
+                continue
+            _t0, key, ready = entry
+            if (
+                job.method == "greedy"
+                and job.mode is DependencyMode.CHAIN
+                and not any(r > 0.0 for r in ready)
+                and key not in seen_keys
+            ):
+                seen_keys.add(key)
+                batch.append((job, key, ready))
+        if len(batch) >= 2:
+            t_wall = time.perf_counter()
+            cells = []
+            readies = []
+            for job, _key, ready in batch:
+                remaining = job.pattern.steps[job.step_idx :]
+                cells.append(
+                    (
+                        self._sub_fabric(job),
+                        Pattern(
+                            job.pattern.name,
+                            job.pattern.n_nodes,
+                            tuple(remaining),
+                        ),
+                    )
+                )
+                readies.append(ready)
+            schedules = swot_greedy_chain_batch(cells, plane_ready=readies)
+            wall = (time.perf_counter() - t_wall) / len(batch)
+            for (job, key, _ready), schedule in zip(batch, schedules):
+                n_steps = job.pattern.n_steps - job.step_idx
+                self._cache.insert(
+                    key,
+                    CachedPlan(
+                        schedule, _rel_bounds(job.mode, schedule, n_steps)
+                    ),
+                    wall,
+                )
+        for job in jobs:
+            if job.job_id in hits:
+                t0, cached = hits[job.job_id]
+            else:
+                t0, key, ready = misses[job.job_id]
+                cached = self._cache.peek(key)  # batch result or dupe key
+                if cached is None:
+                    t_wall = time.perf_counter()
+                    cached = self._build_plan(job, ready)
+                    self._cache.insert(
+                        key, cached, time.perf_counter() - t_wall
+                    )
+            self._install_plan(job, cached, t0)
 
     def _schedule_boundary(self, job: _Job) -> None:
         k = job.step_idx - job.plan_base_step
@@ -528,20 +819,48 @@ class FabricArbiter:
         An in-flight reconfiguration (start < cutoff <= end) completes --
         optics cannot abort a mirror move halfway -- so the plane's config
         becomes its target and the plane stays busy until its end.
+
+        Full retirement (``cutoff`` at the final boundary, i.e. job
+        completion) with tracing off applies the plan's precomputed
+        per-plane summary in O(planes) -- same floats as the walk below
+        (the summary accumulates in the identical order; see
+        ``CachedPlan.retirement``).  Partial cuts and traced runs walk
+        the per-plane activity lists, which the plan sorts once instead
+        of once per event.
         """
-        assert job.plan is not None
+        assert job.plan is not None and job.cached is not None
+        trace = self.tracer.enabled
+        if (
+            self._cache is not None
+            and not trace
+            and cutoff >= job.boundaries[-1]
+        ):
+            plan_t0 = job.plan_t0
+            for j, p in enumerate(job.planes):
+                ret = job.cached.retirement()[j]
+                if ret.final_config is not None:
+                    self._plane_state[p] = (job.key, ret.final_config)
+                free_at = self._plane_free_at[p]
+                if ret.max_end_rel is not None:
+                    end_abs = plan_t0 + ret.max_end_rel
+                    if end_abs > free_at:
+                        free_at = end_abs
+                self._plane_free_at[p] = max(free_at, cutoff)
+                self.stats.plane_busy[p] = (
+                    self.stats.plane_busy.get(p, 0.0) + ret.busy
+                )
+                self.stats.reconfigurations += ret.recfgs
+            job.plan = None
+            job.cached = None
+            return
         sub_fabric = job.plan.fabric
         rel_cutoff = cutoff - job.plan_t0  # plan times are plan-relative
-        trace = self.tracer.enabled
         for j, p in enumerate(job.planes):
             config = sub_fabric.initial_config(j)
             free_at = self._plane_free_at[p]
             busy = 0.0
             recfgs = 0
-            for a in sorted(
-                (a for a in job.plan.activities if a.plane == j),
-                key=lambda a: (a.start, a.end),
-            ):
+            for a in job.cached.plane_activities(j):
                 if a.start >= rel_cutoff - _EPS:
                     continue  # never started: the re-plan supersedes it
                 if a.kind is Kind.RECFG:
@@ -578,6 +897,100 @@ class FabricArbiter:
             )
             self.stats.reconfigurations += recfgs
         job.plan = None
+        job.cached = None
+
+    def _cut_preview(
+        self, job: _Job, cutoff: float
+    ) -> tuple[dict[int, float], dict[int, tuple[ConfigKey, int]]]:
+        """Read-only ``_cut_plan``: the (free_at, plane_state) a job's
+        leased planes will carry after its cut at ``cutoff``.
+
+        Used to score another job's lease shrink *before* its boundary
+        event fires (the shared-boundary batched re-scoring); runs the
+        identical activity walk, so predicted values match the eventual
+        mutation bit for bit.
+        """
+        assert job.plan is not None and job.cached is not None
+        sub_fabric = job.plan.fabric
+        rel_cutoff = cutoff - job.plan_t0
+        free: dict[int, float] = {}
+        state: dict[int, tuple[ConfigKey, int]] = {}
+        for j, p in enumerate(job.planes):
+            config = sub_fabric.initial_config(j)
+            free_at = self._plane_free_at[p]
+            for a in job.cached.plane_activities(j):
+                if a.start >= rel_cutoff - _EPS:
+                    continue
+                if a.kind is Kind.RECFG:
+                    config = a.config
+                free_at = max(free_at, job.plan_t0 + a.end)
+            if config is not None:
+                state[p] = (job.key, config)
+            free[p] = max(free_at, cutoff)
+        return free, state
+
+    # -- lease-shrink re-scoring --------------------------------------------
+    def _lease_profile(
+        self,
+        key: ConfigKey,
+        lease_sorted: list[int],
+        rel_free: tuple[float, ...],
+        state_of,
+    ) -> tuple:
+        """Canonical lease profile: per plane (unclamped free offset,
+        bandwidth scale, installed config visible to ``key``), in
+        plane-id order.
+
+        Two physically different leases with equal profiles score
+        identically (plane ids only label the rows), which is the
+        memoization key for release choices.
+        """
+        scales = self.fabric.plane_bandwidth_scale
+        return tuple(
+            (
+                rel_free[i],
+                scales[p] if scales is not None else 1.0,
+                st[1]
+                if (st := state_of(p)) is not None and st[0] == key
+                else None,
+            )
+            for i, p in enumerate(lease_sorted)
+        )
+
+    def _release_rows(
+        self,
+        prof: tuple,
+        candidates: list[tuple[int, ...]],
+        sub_pattern: Pattern,
+    ) -> tuple[list[BatchInstance], list[float], list[tuple[float, ...]]]:
+        """One strawman-estimate row per candidate release set."""
+        scales_on = self.fabric.plane_bandwidth_scale is not None
+        instances: list[BatchInstance] = []
+        starts: list[float] = []
+        readies: list[tuple[float, ...]] = []
+        for release in candidates:
+            # Kept rows stay in profile (plane-id) order, the order the
+            # legacy path built sub-fabrics in.  Offsets are unclamped
+            # lease-relative; the frame origin clamps to "now" (0.0).
+            kept = [i for i in range(len(prof)) if i not in release]
+            rels = [prof[i][0] for i in kept]
+            t0_rel = max(0.0, min(rels))
+            fab = OpticalFabric(
+                n_nodes=self.fabric.n_nodes,
+                n_planes=len(kept),
+                bandwidth=self.fabric.bandwidth,
+                t_recfg=self.fabric.t_recfg,
+                plane_bandwidth_scale=(
+                    tuple(prof[i][1] for i in kept) if scales_on else None
+                ),
+                initial_configs=tuple(prof[i][2] for i in kept),
+            )
+            instances.append(strawman_instance(fab, sub_pattern))
+            starts.append(t0_rel)
+            readies.append(
+                tuple(max(0.0, r - t0_rel) for r in rels)
+            )
+        return instances, starts, readies
 
     def _choose_release(
         self, job: _Job, lease: list[int], n_release: int, now: float
@@ -590,58 +1003,180 @@ class FabricArbiter:
         with per-plane ready offsets under a proportional-split estimate of
         the job's remaining steps, and the candidate with the earliest
         estimated finish wins (ties keep the historical choice).
+
+        Candidates, frames and scoring all live in lease-*relative* time
+        over a canonical plane-id-ordered profile, so the choice is a pure
+        function of (job signature, remaining step, profile) -- memoizable
+        -- and, on a miss, every other shrink due at this exact timestamp
+        is scored in the same ``batch_evaluate`` call (the shared-boundary
+        batching; predictions that turn stale simply miss and re-score).
         """
         by_free = sorted(lease, key=lambda p: (self._plane_free_at[p], p))
         default = tuple(by_free[:n_release])
-        remaining = job.pattern.steps[job.step_idx :]
-        if not remaining:
+        if job.step_idx >= job.pattern.n_steps or n_release <= 0:
             return default
-        candidates = [default]
-        seen = {frozenset(default)}
-        # Enumerate in free-time order (not plane-id order) so the capped
-        # candidate pool spans soonest- through latest-freeing release
-        # sets instead of only low-numbered planes.
-        for combo in itertools.combinations(by_free, n_release):
-            if len(candidates) >= _MAX_RELEASE_CANDIDATES:
-                break
-            key = frozenset(combo)
-            if key in seen:
-                continue
-            seen.add(key)
-            candidates.append(tuple(combo))
+        lease_sorted = sorted(lease)
+        # Unclamped lease-relative free offsets: subtracting one shared
+        # "now" preserves the absolute ordering bit for bit (reserved
+        # grow planes may be long idle, i.e. negative), while making the
+        # profile -- and hence the memo key -- grant-instant-invariant.
+        rel_free = tuple(
+            self._plane_free_at[p] - now for p in lease_sorted
+        )
+        prof = self._lease_profile(
+            job.key, lease_sorted, rel_free, self._plane_state.get
+        )
+        candidates = _release_candidates(prof, n_release)
         if len(candidates) == 1:
             return default
+        backend = self._select_backend(len(candidates))
         sub_pattern = Pattern(
-            job.pattern.name, job.pattern.n_nodes, tuple(remaining)
+            job.pattern.name,
+            job.pattern.n_nodes,
+            tuple(job.pattern.steps[job.step_idx :]),
         )
-        instances: list[BatchInstance] = []
-        starts: list[float] = []
-        readies: list[tuple[float, ...]] = []
-        for release in candidates:
-            kept = tuple(p for p in sorted(lease) if p not in release)
-            fab = self._sub_fabric(job, kept)
-            t0, ready = self._lease_frame(kept, now)
-            instances.append(strawman_instance(fab, sub_pattern))
-            starts.append(t0 - now)
-            readies.append(ready)
-        result = batch_evaluate(
-            instances,
-            plane_ready=readies,
-            backend=self._select_backend(len(instances)),
+        if self._cache is None:
+            instances, starts, readies = self._release_rows(
+                prof, candidates, sub_pattern
+            )
+            result = batch_evaluate(
+                instances, plane_ready=readies, backend=backend
+            )
+            best = _pick_best(
+                candidates, starts, result.cct, result.feasible, 0
+            )
+            return tuple(lease_sorted[i] for i in candidates[best])
+        key = (
+            job.req.algorithm,
+            job.req.n_nodes,
+            job.req.size,
+            job.step_idx,
+            n_release,
+            prof,
+            backend,
         )
-        best_idx = 0
-        best_score = (
-            starts[0] + float(result.cct[0])
-            if bool(result.feasible[0])
-            else float("inf")
-        )
-        for c in range(1, len(candidates)):
-            if not bool(result.feasible[c]):
+        choice = self._cache.release_lookup(key)
+        if choice is None:
+            self._score_releases_batched(
+                key, sub_pattern, prof, candidates, backend, job, now
+            )
+            choice = self._cache.peek_release(key)
+            assert choice is not None
+        return tuple(lease_sorted[i] for i in choice)
+
+    def _score_releases_batched(
+        self,
+        key: tuple,
+        sub_pattern: Pattern,
+        prof: tuple,
+        candidates: list[tuple[int, ...]],
+        backend: str | None,
+        job: _Job,
+        now: float,
+    ) -> None:
+        """Score this shrink -- and every same-backend shrink due at this
+        exact timestamp -- in ONE ``batch_evaluate`` call.
+
+        Peers' inputs are *predicted* (post-cut plane state via
+        ``_cut_preview``, next step, current shrink target); a prediction
+        invalidated by intervening grants/regrows simply never matches the
+        peer's eventual key and it re-scores solo -- so batching can only
+        save work, never change a choice.
+        """
+        group: list[
+            tuple[tuple, Pattern, tuple, list[tuple[int, ...]], bool]
+        ] = [(key, sub_pattern, prof, candidates, False)]
+        for peer in self._due_shrink_peers(job, now):
+            pkey, psub, pprof, pcands = peer
+            if pkey[-1] != backend or pkey == key:
                 continue
-            score = starts[c] + float(result.cct[c])
-            if score < best_score - _EPS:
-                best_idx, best_score = c, score
-        return candidates[best_idx]
+            if self._cache.peek_release(pkey) is not None:
+                continue
+            group.append((pkey, psub, pprof, pcands, True))
+        all_instances: list[BatchInstance] = []
+        all_readies: list[tuple[float, ...]] = []
+        spans: list[tuple[tuple, list[tuple[int, ...]], list[float], int, bool]] = []
+        for gkey, gsub, gprof, gcands, prefetched in group:
+            instances, starts, readies = self._release_rows(
+                gprof, gcands, gsub
+            )
+            spans.append(
+                (gkey, gcands, starts, len(all_instances), prefetched)
+            )
+            all_instances.extend(instances)
+            all_readies.extend(readies)
+        result = batch_evaluate(
+            all_instances, plane_ready=all_readies, backend=backend
+        )
+        for gkey, gcands, starts, offset, prefetched in spans:
+            best = _pick_best(
+                gcands, starts, result.cct, result.feasible, offset
+            )
+            self._cache.release_insert(
+                gkey, gcands[best], prefetched=prefetched
+            )
+
+    def _due_shrink_peers(
+        self, job: _Job, now: float
+    ) -> list[tuple[tuple, Pattern, tuple, list[tuple[int, ...]]]]:
+        """Predicted (key, sub_pattern, profile, candidates) for every
+        other running job whose boundary fires at exactly ``now`` and
+        that will shrink-score there."""
+        peers = []
+        for other in sorted(
+            self._running.values(), key=lambda x: x.job_id
+        ):
+            if (
+                other.job_id == job.job_id
+                or other.plan is None
+                or other.mode is DependencyMode.INDEPENDENT
+            ):
+                continue
+            k = other.step_idx - other.plan_base_step
+            if other.boundaries[k] != now:
+                continue
+            step_next = other.step_idx + 1
+            if step_next >= other.pattern.n_steps:
+                continue  # completes at this boundary: no resize
+            lease = sorted(other.planes + other.pending_planes)
+            if other.target_planes >= len(lease):
+                continue  # grow or steady: no shrink scoring
+            n_release = len(lease) - max(
+                other.target_planes, self.min_planes
+            )
+            if n_release <= 0:
+                continue
+            free_pred, state_pred = self._cut_preview(other, now)
+            rel_free = tuple(
+                free_pred.get(p, self._plane_free_at[p]) - now
+                for p in lease
+            )
+            prof = self._lease_profile(
+                other.key,
+                lease,
+                rel_free,
+                lambda p: state_pred.get(p, self._plane_state[p]),
+            )
+            cands = _release_candidates(prof, n_release)
+            if len(cands) == 1:
+                continue
+            backend = self._select_backend(len(cands))
+            pkey = (
+                other.req.algorithm,
+                other.req.n_nodes,
+                other.req.size,
+                step_next,
+                n_release,
+                prof,
+                backend,
+            )
+            psub = Pattern(
+                other.pattern.name,
+                other.pattern.n_nodes,
+                tuple(other.pattern.steps[step_next:]),
+            )
+            peers.append((pkey, psub, prof, cands))
+        return peers
 
     def _apply_resize(self, job: _Job, now: float) -> None:
         before = job.planes

@@ -1,0 +1,264 @@
+"""Memoized arbiter planning state: plan cache + release-choice cache.
+
+The arbiter's hot path is dominated by ``swot_schedule`` -- profiling the
+19-job quick bench puts ~93% of replay wall time inside LP polish and the
+structure local search of grant-time plans.  At fleet scale (ROADMAP item
+2) the same (algorithm, communicator, size, lease shape) keys recur
+thousands of times, so the planner's output is memoized here and reused
+*time-shifted*: schedules are stored in plan-relative time together with
+their step-boundary offsets, and a hit replays as ``t0 + rel`` -- the
+exact float operations the uncached path performs (see DESIGN.md section
+18 for the bitwise argument), which is what makes caching invisible to
+replay results.
+
+Three objects:
+
+* ``PlanCache`` -- LRU map from a full planning key (algorithm, n_nodes,
+  size, remaining-step index, method, dependency mode, lease width,
+  per-plane bandwidth scales, namespaced installed configs, per-plane
+  ready offsets) to a ``CachedPlan``.  Bound to a fabric signature
+  (n_nodes, bandwidth, t_recfg): re-binding to a different fabric evicts
+  everything, so a cache shared across arbiters can never leak plans
+  between incompatible fabrics.  It also memoizes lease-shrink release
+  choices (``release_lookup``/``release_insert``) under the same
+  bind-eviction rule.
+* ``CachedPlan`` -- an immutable schedule plus its plan-relative step
+  boundaries, with two lazy accelerators for ``_cut_plan``: per-plane
+  activity lists (sorted once, not per event) and a full-retirement
+  summary (per-plane busy time / reconfiguration count / final config /
+  latest activity end) that lets a completed job retire its whole plan in
+  O(planes) instead of O(activities).
+* ``CacheStats`` -- hit/miss/eviction counters plus planning wall time,
+  the attribution the bench's ``mt_phase_*``/hit-rate rows report.
+
+Everything here is pure bookkeeping -- no scheduling logic.  The arbiter
+decides *what* to cache and whether a cached value may be used; this
+module only guarantees that what comes back is exactly what was put in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import TYPE_CHECKING, Hashable
+
+from repro.core.schedule import Kind
+from repro.core.tolerances import EPS as _EPS
+
+if TYPE_CHECKING:
+    from repro.core.schedule import Schedule
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Counters for one ``PlanCache`` (shared across attached arbiters)."""
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    plan_wall_s: float = 0.0  # wall time spent planning cache misses
+    release_hits: int = 0
+    release_misses: int = 0
+    release_prefetched: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class _PlaneRetirement:
+    """Full-retirement outcome for one plane of a cached plan."""
+
+    busy: float  # same-order sum of retired activity durations
+    recfgs: int
+    final_config: int | None  # installed config after the last RECFG
+    max_end_rel: float | None  # latest retired end, plan-relative
+
+
+class CachedPlan:
+    """One memoized schedule, stored in plan-relative time.
+
+    ``boundaries_rel[k]`` is the k-th step boundary as an offset from the
+    plan origin; the arbiter materializes absolute boundaries as
+    ``t0 + boundaries_rel[k]``, which is float-identical to the uncached
+    computation (the uncached path computes ``t0 + end_k`` from the same
+    ``step_window`` ends).  The two lazy caches below exist because a plan
+    reused N times would otherwise re-sort its activities N times.
+    """
+
+    __slots__ = (
+        "schedule",
+        "boundaries_rel",
+        "_by_plane",
+        "_retirement",
+    )
+
+    def __init__(
+        self, schedule: "Schedule", boundaries_rel: tuple[float, ...]
+    ) -> None:
+        assert boundaries_rel, "a plan must have at least one boundary"
+        self.schedule = schedule
+        self.boundaries_rel = boundaries_rel
+        self._by_plane: list[list] | None = None
+        self._retirement: list[_PlaneRetirement] | None = None
+
+    def plane_activities(self, plane: int) -> list:
+        """Activities of ``plane``, sorted by (start, end) -- computed once."""
+        if self._by_plane is None:
+            n_planes = self.schedule.fabric.n_planes
+            by_plane: list[list] = [[] for _ in range(n_planes)]
+            for a in self.schedule.activities:
+                by_plane[a.plane].append(a)
+            for acts in by_plane:
+                acts.sort(key=lambda a: (a.start, a.end))
+            self._by_plane = by_plane
+        return self._by_plane[plane]
+
+    def retirement(self) -> list[_PlaneRetirement]:
+        """Per-plane full-retirement summary at the final boundary.
+
+        Runs the same activity walk ``FabricArbiter._cut_plan`` performs
+        at completion (cutoff = the last boundary, so every activity that
+        started is retired), once per cached plan instead of once per
+        completing job.  ``busy`` accumulates durations in the identical
+        (start, end)-sorted order, so reusing the summary reproduces the
+        uncached sum bit for bit.
+        """
+        if self._retirement is None:
+            rel_cutoff = self.boundaries_rel[-1]
+            sub_fabric = self.schedule.fabric
+            out: list[_PlaneRetirement] = []
+            for j in range(sub_fabric.n_planes):
+                config = sub_fabric.initial_config(j)
+                busy = 0.0
+                recfgs = 0
+                max_end: float | None = None
+                for a in self.plane_activities(j):
+                    if a.start >= rel_cutoff - _EPS:
+                        continue  # never started before the final boundary
+                    if a.kind is Kind.RECFG:
+                        config = a.config
+                        recfgs += 1
+                    busy += a.duration
+                    max_end = (
+                        a.end if max_end is None else max(max_end, a.end)
+                    )
+                out.append(
+                    _PlaneRetirement(
+                        busy=busy,
+                        recfgs=recfgs,
+                        final_config=config,
+                        max_end_rel=max_end,
+                    )
+                )
+            self._retirement = out
+        return self._retirement
+
+
+# The fabric properties a plan depends on beyond what the per-key lease
+# profile captures.  Two arbiters sharing a cache must agree on these.
+FabricSignature = tuple[int, float, float]  # (n_nodes, bandwidth, t_recfg)
+
+
+def fabric_signature(fabric) -> FabricSignature:
+    return (fabric.n_nodes, fabric.bandwidth, fabric.t_recfg)
+
+
+class PlanCache:
+    """LRU plan + release-choice memo, bound to one fabric signature.
+
+    ``capacity=None`` (default) is unbounded -- the key space is bounded
+    in practice by workload quantization (see ``heavy_tailed_trace``).  A
+    bounded cache evicts least-recently-used plans.  ``bind`` must be
+    called (the arbiter does) before use; binding to a *different*
+    signature evicts every entry and counts the evictions, so stale plans
+    can never serve a fabric they were not planned for.
+    """
+
+    def __init__(self, capacity: int | None = None) -> None:
+        if capacity is not None and capacity < 1:
+            raise ValueError("capacity must be >= 1 (or None)")
+        self.capacity = capacity
+        self.stats = CacheStats()
+        self._signature: FabricSignature | None = None
+        self._plans: OrderedDict[Hashable, CachedPlan] = OrderedDict()
+        self._releases: OrderedDict[Hashable, tuple[int, ...]] = (
+            OrderedDict()
+        )
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    @property
+    def signature(self) -> FabricSignature | None:
+        return self._signature
+
+    def bind(self, fabric) -> None:
+        """Attach the cache to ``fabric``'s signature, evicting on change."""
+        sig = fabric_signature(fabric)
+        if self._signature is not None and sig != self._signature:
+            self.stats.evictions += len(self._plans) + len(self._releases)
+            self._plans.clear()
+            self._releases.clear()
+        self._signature = sig
+
+    def lookup(self, key: Hashable) -> CachedPlan | None:
+        plan = self._plans.get(key)
+        if plan is None:
+            self.stats.misses += 1
+            return None
+        self._plans.move_to_end(key)
+        self.stats.hits += 1
+        return plan
+
+    def peek(self, key: Hashable) -> CachedPlan | None:
+        """`lookup` without touching hit/miss counters (refreshes LRU
+        recency).  Used when the caller already counted this key's
+        outcome -- e.g. fetching a batch-planned miss back out."""
+        plan = self._plans.get(key)
+        if plan is not None:
+            self._plans.move_to_end(key)
+        return plan
+
+    def insert(
+        self, key: Hashable, plan: CachedPlan, wall_s: float = 0.0
+    ) -> None:
+        assert self._signature is not None, "bind() before insert()"
+        self.stats.plan_wall_s += wall_s
+        self._plans[key] = plan
+        self._plans.move_to_end(key)
+        if self.capacity is not None:
+            while len(self._plans) > self.capacity:
+                self._plans.popitem(last=False)
+                self.stats.evictions += 1
+
+    # -- lease-shrink release choices ---------------------------------------
+    def release_lookup(self, key: Hashable) -> tuple[int, ...] | None:
+        choice = self._releases.get(key)
+        if choice is None:
+            self.stats.release_misses += 1
+            return None
+        self._releases.move_to_end(key)
+        self.stats.release_hits += 1
+        return choice
+
+    def peek_release(self, key: Hashable) -> tuple[int, ...] | None:
+        """`release_lookup` without counters (see ``peek``)."""
+        choice = self._releases.get(key)
+        if choice is not None:
+            self._releases.move_to_end(key)
+        return choice
+
+    def release_insert(
+        self, key: Hashable, choice: tuple[int, ...], prefetched: bool = False
+    ) -> None:
+        if prefetched:
+            self.stats.release_prefetched += 1
+        self._releases[key] = choice
+        self._releases.move_to_end(key)
+        if self.capacity is not None:
+            while len(self._releases) > self.capacity:
+                self._releases.popitem(last=False)
+                self.stats.evictions += 1

@@ -14,6 +14,7 @@ arrivals from ``random.Random(seed)``.
 from __future__ import annotations
 
 import dataclasses
+import math
 import random
 from typing import Iterable, Sequence
 
@@ -24,6 +25,7 @@ from repro.core.scheduler import swot_schedule
 from repro.core.shim import CollectiveRequest
 from repro.runtime.arbiter import ArbiterStats, FabricArbiter, JobRecord
 from repro.runtime.engine import SimEngine
+from repro.runtime.plancache import CacheStats, PlanCache
 
 _BF16 = 2
 
@@ -138,6 +140,104 @@ def poisson_trace(
     return trace
 
 
+# Size multipliers are snapped to powers of two in this clamp range, so a
+# heavy-tailed trace touches at most 7 distinct sizes per mix entry --
+# which is what keeps the arbiter's plan-cache key space bounded at fleet
+# scale (DESIGN.md section 18).
+_SIZE_FACTOR_LOG2_CLAMP = 3
+
+
+def heavy_tailed_trace(
+    tenants: Sequence[tuple[str, Sequence[CollectiveRequest]]],
+    *,
+    n_jobs: int,
+    rate: float,
+    seed: int = 0,
+    alpha: float = 1.8,
+    sigma: float = 1.0,
+    diurnal_amplitude: float = 0.5,
+    diurnal_period: float | None = None,
+    priorities: dict[str, int] | None = None,
+) -> list[JobSpec]:
+    """Fleet-scale trace: heavy-tailed arrivals and sizes, diurnal rate.
+
+    Models what production collective traffic actually looks like (vs the
+    memoryless ``poisson_trace``):
+
+    * **Pareto inter-arrivals** (shape ``alpha``, scale normalized so the
+      long-run mean rate is ``rate`` jobs/s) -- bursts and lulls instead
+      of even spacing.
+    * **Diurnal modulation** -- the instantaneous rate is scaled by
+      ``1 + diurnal_amplitude * sin(2*pi*t/period)`` (gaps stretch in the
+      troughs, compress at the peaks).  ``diurnal_period`` defaults to a
+      quarter of the nominal trace span, giving every trace a few full
+      day/night cycles.
+    * **Lognormal message sizes** -- each job scales its mix entry's base
+      size by a mean-1 lognormal factor (``sigma``), *snapped to a power
+      of two* and clamped to ``[2**-3, 2**3]``.  The snap keeps the size
+      distribution heavy-tailed while bounding the distinct-size count,
+      so the runtime's plan memoization stays effective.
+
+    Exactly ``n_jobs`` arrivals are generated on one merged process; each
+    picks a tenant uniformly and cycles through that tenant's mix in
+    order.  Deterministic for a fixed seed.
+    """
+    if not tenants:
+        raise ValueError("need at least one tenant")
+    if n_jobs < 1:
+        raise ValueError("n_jobs must be >= 1")
+    if rate <= 0:
+        raise ValueError("rate must be positive")
+    if alpha <= 1:
+        raise ValueError("alpha must be > 1 (finite mean)")
+    if not 0 <= diurnal_amplitude < 1:
+        raise ValueError("diurnal_amplitude must be in [0, 1)")
+    for name, mix in tenants:
+        if not mix:
+            raise ValueError(f"tenant {name!r} has an empty request mix")
+    rng = random.Random(seed)
+    # Pareto(alpha) has mean scale*alpha/(alpha-1); normalize the scale so
+    # the un-modulated mean inter-arrival gap is exactly 1/rate.
+    gap_scale = (1.0 / rate) * (alpha - 1.0) / alpha
+    period = (
+        diurnal_period
+        if diurnal_period is not None
+        else (n_jobs / rate) / 4.0
+    )
+    clamp = float(2**_SIZE_FACTOR_LOG2_CLAMP)
+    counters = [0] * len(tenants)
+    trace: list[JobSpec] = []
+    t = 0.0
+    for _ in range(n_jobs):
+        gap = gap_scale * rng.paretovariate(alpha)
+        local_rate = 1.0 + diurnal_amplitude * math.sin(
+            2.0 * math.pi * t / period
+        )
+        t += gap / local_rate
+        idx = rng.randrange(len(tenants))
+        name, mix = tenants[idx]
+        base = mix[counters[idx] % len(mix)]
+        counters[idx] += 1
+        factor = rng.lognormvariate(-0.5 * sigma * sigma, sigma)
+        factor = 2.0 ** round(math.log2(factor))
+        factor = min(clamp, max(1.0 / clamp, factor))
+        trace.append(
+            JobSpec(
+                arrival=t,
+                request=CollectiveRequest(
+                    base.algorithm,
+                    base.n_nodes,
+                    base.size * factor,
+                    base.tag,
+                ),
+                priority=(priorities or {}).get(name, 0),
+                tenant=name,
+            )
+        )
+    trace.sort(key=lambda s: (s.arrival, s.tenant, s.request.tag))
+    return trace
+
+
 @dataclasses.dataclass
 class ReplayReport:
     """Outcome of replaying one trace on one fabric."""
@@ -148,6 +248,7 @@ class ReplayReport:
     makespan: float
     solo_cct: dict[tuple, float]  # signature -> whole-fabric solo CCT
     events_fired: int = 0  # simulation events the replay processed
+    cache: CacheStats | None = None  # plan-cache counters (optimize=True)
 
     @property
     def completed(self) -> list[JobRecord]:
@@ -201,6 +302,13 @@ class ReplayReport:
             f"solo {self.mean_slowdown():.2f}x, {self.stats.replans} "
             f"re-plans",
         ]
+        if self.cache is not None:
+            lines.append(
+                f"plan cache {self.cache.hits}/"
+                f"{self.cache.hits + self.cache.misses} hits "
+                f"({self.cache.hit_rate:.1%}), "
+                f"{self.cache.plan_wall_s:.2f} s planning"
+            )
         return "\n".join(lines)
 
 
@@ -215,12 +323,23 @@ def replay(
     rebalance: bool = True,
     backend: str | None = None,
     tracer=None,
+    optimize: bool = True,
+    placement: str = "first_free",
+    plan_cache: PlanCache | None = None,
+    solo_refs: bool = True,
 ) -> ReplayReport:
     """Replay ``trace`` through a fresh engine + arbiter; returns stats.
 
     ``tracer`` (e.g. ``repro.obs.ChromeTracer()``) records the fabric's
     lifecycle -- arrivals, lease grants/resizes, per-plane activity
     spans, completions -- for Perfetto; the default is the no-op tracer.
+
+    ``optimize`` toggles the arbiter's memoized/batched hot path (results
+    are bit-identical either way; off is the slow reference).  Passing a
+    ``plan_cache`` shares plans across replays of compatible fabrics.
+    ``solo_refs=False`` skips the per-signature whole-fabric reference
+    plans (the report's ``solo_cct``/slowdown), which at fleet scale cost
+    more than the replay itself.
     """
     engine = SimEngine(tracer=tracer)
     arbiter = FabricArbiter(
@@ -233,6 +352,9 @@ def replay(
         rebalance=rebalance,
         backend=backend,
         tracer=tracer,
+        optimize=optimize,
+        placement=placement,
+        plan_cache=plan_cache,
     )
     specs = sorted(trace, key=lambda s: s.arrival)
     records: list[JobRecord] = []
@@ -249,7 +371,7 @@ def replay(
     arbiter.assert_invariants()
 
     solo: dict[tuple, float] = {}
-    for spec in specs:
+    for spec in specs if solo_refs else ():
         sig = spec.request.signature
         if sig not in solo:
             pattern = get_pattern(
@@ -269,4 +391,9 @@ def replay(
         makespan=engine.now,
         solo_cct=solo,
         events_fired=engine.events_fired,
+        cache=(
+            arbiter.plan_cache.stats
+            if arbiter.plan_cache is not None
+            else None
+        ),
     )

@@ -1,0 +1,222 @@
+"""Tests for the runtime-scale hot path: plan memoization, batched
+planning, heavy-tailed workloads, and the bit-identical replay contract
+(DESIGN.md section 18)."""
+
+import math
+
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import CollectiveRequest, OpticalFabric
+from repro.runtime import (
+    FabricArbiter,
+    PlanCache,
+    SimEngine,
+    arch_request_mix,
+    heavy_tailed_trace,
+    poisson_trace,
+    replay,
+)
+
+
+def _mixes(n_tenants: int = 2):
+    mix = arch_request_mix(get_config("qwen3_4b"), n_nodes=8)
+    return [(f"t{i}", mix) for i in range(n_tenants)]
+
+
+def _record_key(report):
+    return [
+        (
+            r.job_id,
+            r.tag,
+            r.start,
+            r.finish,
+            r.cct,
+            r.queueing_delay,
+            r.replans,
+            r.planes_min,
+            r.planes_max,
+            r.rejected,
+        )
+        for r in report.records
+    ]
+
+
+# -- the parity contract ----------------------------------------------------
+def test_memoized_replay_is_bit_identical_to_legacy():
+    """optimize=True (memoized + batched) must reproduce the legacy
+    per-event path bit for bit: per-job CCTs, queueing delays, replan
+    counts, makespan, and the full arbiter stats."""
+    trace = poisson_trace(_mixes(2), rate=30.0, horizon=0.25, seed=7)
+    fabric = OpticalFabric(8, 4, t_recfg=200e-6)
+    legacy = replay(trace, fabric, optimize=False, solo_refs=False)
+    hot = replay(trace, fabric, optimize=True, solo_refs=False)
+    assert _record_key(legacy) == _record_key(hot)
+    assert legacy.makespan == hot.makespan
+    assert legacy.stats == hot.stats
+    assert legacy.events_fired == hot.events_fired
+    assert legacy.cache is None
+    assert hot.cache is not None and hot.cache.hits > 0
+
+
+def test_parity_holds_on_heavy_tailed_trace():
+    trace = heavy_tailed_trace(
+        _mixes(2), n_jobs=60, rate=40.0, seed=5, sigma=0.8
+    )
+    fabric = OpticalFabric(8, 4, t_recfg=200e-6)
+    legacy = replay(trace, fabric, optimize=False, solo_refs=False)
+    hot = replay(trace, fabric, optimize=True, solo_refs=False)
+    assert _record_key(legacy) == _record_key(hot)
+    assert legacy.stats == hot.stats
+
+
+# -- cache semantics --------------------------------------------------------
+def test_shared_cache_warm_replay_has_no_new_misses():
+    trace = heavy_tailed_trace(
+        _mixes(2), n_jobs=40, rate=40.0, seed=2, sigma=0.8
+    )
+    fabric = OpticalFabric(8, 4, t_recfg=200e-6)
+    cache = PlanCache()
+    cold = replay(trace, fabric, plan_cache=cache, solo_refs=False)
+    cold_misses = cache.stats.misses
+    assert cold_misses > 0 and cache.stats.hits > 0
+    warm = replay(trace, fabric, plan_cache=cache, solo_refs=False)
+    assert cache.stats.misses == cold_misses  # every lookup hits
+    assert _record_key(cold) == _record_key(warm)  # reuse is exact
+
+
+def test_cache_evicts_when_fabric_signature_changes():
+    trace = poisson_trace(_mixes(2), rate=30.0, horizon=0.1, seed=4)
+    cache = PlanCache()
+    replay(
+        trace,
+        OpticalFabric(8, 4, t_recfg=200e-6),
+        plan_cache=cache,
+        solo_refs=False,
+    )
+    assert len(cache) > 0 and cache.stats.evictions == 0
+    # A different t_recfg invalidates every cached plan; results must
+    # still match the legacy path on the new fabric.
+    slow_fabric = OpticalFabric(8, 4, t_recfg=1e-3)
+    hot = replay(trace, slow_fabric, plan_cache=cache, solo_refs=False)
+    assert cache.stats.evictions > 0
+    legacy = replay(trace, slow_fabric, optimize=False, solo_refs=False)
+    assert _record_key(legacy) == _record_key(hot)
+
+
+def test_cache_keys_do_not_leak_across_sizes():
+    """Two traces whose only difference is message size must not share
+    plans: the small-size replay's CCTs must differ from the large one
+    (a stale cross-size hit would replay the wrong plan silently)."""
+    mix_small = [CollectiveRequest("ring_allreduce", 8, 4e6, "sync")]
+    mix_big = [CollectiveRequest("ring_allreduce", 8, 8e6, "sync")]
+    cache = PlanCache()
+    fabric = OpticalFabric(8, 4, t_recfg=200e-6)
+    small = replay(
+        poisson_trace([("a", mix_small)], rate=20.0, horizon=0.2, seed=1),
+        fabric,
+        plan_cache=cache,
+        solo_refs=False,
+    )
+    big = replay(
+        poisson_trace([("a", mix_big)], rate=20.0, horizon=0.2, seed=1),
+        fabric,
+        plan_cache=cache,
+        solo_refs=False,
+    )
+    assert {r.cct for r in small.records} != {r.cct for r in big.records}
+    legacy = replay(
+        poisson_trace([("a", mix_big)], rate=20.0, horizon=0.2, seed=1),
+        fabric,
+        optimize=False,
+        solo_refs=False,
+    )
+    assert _record_key(legacy) == _record_key(big)
+
+
+def test_lru_capacity_bound():
+    cache = PlanCache(capacity=2)
+    cache.bind(OpticalFabric(8, 4))
+    cache.insert("a", object(), 0.0)
+    cache.insert("b", object(), 0.0)
+    cache.insert("c", object(), 0.0)  # evicts "a"
+    assert len(cache) == 2
+    assert cache.peek("a") is None
+    assert cache.peek("b") is not None and cache.peek("c") is not None
+    assert cache.stats.evictions == 1
+
+
+def test_plan_cache_requires_optimize():
+    with pytest.raises(ValueError, match="optimize"):
+        FabricArbiter(
+            SimEngine(),
+            OpticalFabric(8, 4),
+            optimize=False,
+            plan_cache=PlanCache(),
+        )
+
+
+def test_placement_option_is_validated():
+    with pytest.raises(ValueError, match="placement"):
+        FabricArbiter(SimEngine(), OpticalFabric(8, 4), placement="bogus")
+
+
+def test_schedule_aware_placement_replays_all_jobs():
+    trace = poisson_trace(_mixes(2), rate=30.0, horizon=0.2, seed=9)
+    report = replay(
+        trace,
+        OpticalFabric(8, 4, t_recfg=200e-6),
+        placement="schedule_aware",
+        solo_refs=False,
+    )
+    assert len(report.completed) == len(trace)
+    assert report.makespan > 0
+
+
+# -- heavy-tailed workload generator ----------------------------------------
+def test_heavy_tailed_trace_is_deterministic_sorted_and_exact():
+    t1 = heavy_tailed_trace(_mixes(2), n_jobs=100, rate=50.0, seed=3)
+    t2 = heavy_tailed_trace(_mixes(2), n_jobs=100, rate=50.0, seed=3)
+    assert t1 == t2
+    assert len(t1) == 100
+    assert all(
+        t1[i].arrival <= t1[i + 1].arrival for i in range(len(t1) - 1)
+    )
+    assert heavy_tailed_trace(_mixes(2), n_jobs=100, rate=50.0, seed=4) != t1
+
+
+def test_heavy_tailed_sizes_snap_to_bounded_powers_of_two():
+    base = CollectiveRequest("ring_allreduce", 8, 4e6, "sync")
+    trace = heavy_tailed_trace(
+        [("a", [base])], n_jobs=500, rate=100.0, seed=0, sigma=1.5
+    )
+    factors = {s.request.size / base.size for s in trace}
+    for f in factors:
+        assert 0.125 <= f <= 8.0
+        assert abs(math.log2(f) - round(math.log2(f))) < 1e-12
+    assert len(factors) <= 7  # the bounded plan-cache key space
+    assert len(factors) > 1  # actually heavy-tailed, not degenerate
+
+
+def test_heavy_tailed_trace_validates_arguments():
+    with pytest.raises(ValueError, match="alpha"):
+        heavy_tailed_trace(_mixes(1), n_jobs=5, rate=10.0, alpha=1.0)
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        heavy_tailed_trace(
+            _mixes(1), n_jobs=5, rate=10.0, diurnal_amplitude=1.0
+        )
+    with pytest.raises(ValueError, match="tenant"):
+        heavy_tailed_trace([], n_jobs=5, rate=10.0)
+    with pytest.raises(ValueError, match="empty request mix"):
+        heavy_tailed_trace([("a", [])], n_jobs=5, rate=10.0)
+    with pytest.raises(ValueError, match="rate"):
+        heavy_tailed_trace(_mixes(1), n_jobs=5, rate=0.0)
+
+
+def test_solo_refs_off_skips_reference_plans():
+    trace = poisson_trace(_mixes(1), rate=20.0, horizon=0.1, seed=6)
+    report = replay(
+        trace, OpticalFabric(8, 4), solo_refs=False
+    )
+    assert report.solo_cct == {}
+    assert len(report.completed) == len(trace)
