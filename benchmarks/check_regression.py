@@ -88,7 +88,7 @@ _TIMING_ROW = re.compile(
 # Deterministic sweep rows where LARGER is better (overlap efficiency,
 # bypass/cache hit rate): gated on falling below baseline instead of
 # rising above it.
-_HIGHER_BETTER = re.compile(r"(overlap_eff|hit_rate)$")
+_HIGHER_BETTER = re.compile(r"(overlap_eff|hit_rate|overlap_gain)$")
 # Wall-clock-derived throughput rows (events/sec, speedup ratios):
 # higher is better, but absolute values track runner hardware, so the
 # band is deliberately wide -- only an order-of-magnitude collapse

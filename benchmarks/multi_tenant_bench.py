@@ -47,6 +47,7 @@ from repro.runtime import (
     poisson_trace,
     replay,
 )
+from repro.trace import overlap_comparison, replay_trace, static_trace
 
 # Fleet-scale trace defaults (the gated 10k-job heavy-tailed replay).
 _SCALE_JOBS = 10_000
@@ -65,6 +66,11 @@ _N_NODES = 8
 # Modest message scale keeps every cell sub-second of sim *and* wall time.
 _TOKENS_PER_STEP = 16_384
 _SIZE_SCALE = 1 / 256  # shrink analytic DP-sync sizes to benchmark scale
+# Model-trace replays scale further: per-job transmission must be
+# comparable to t_recfg (200us) for reconfiguration overlap to matter --
+# the paper's operating regime.  At 1/256 the count-folded per-layer
+# payloads are ~100MB+ and transmission swamps reconfiguration.
+_TRACE_SIZE_SCALE = 1 / 4096
 
 
 def _tenant_mixes(n_tenants: int):
@@ -347,6 +353,75 @@ def run(
             f"{n_jobs}-job heavy-tailed trace generation (wall)",
         )
     )
+    # -- model-trace replay: closed-loop traces from the real model stack
+    # Static per-step collective traces (repro.trace) replayed through
+    # the arbiter with the SWOT planner vs the strawman-ICR baseline:
+    # deterministic per-model end-to-end step times with and without
+    # intra-collective reconfiguration overlap, plus a co-located
+    # scenario (MoE training beside dense serving on ONE shared fabric).
+    t0 = time.perf_counter()
+    trace_fabric = OpticalFabric(_N_NODES, 4, t_recfg=200e-6)
+    model_steps = 1 if quick else 2
+    for arch in ("gemma_2b", "qwen2_moe_a2_7b"):
+        mt = static_trace(
+            arch, kind="train", dp=2, tp=4, n_steps=model_steps
+        )
+        comp = overlap_comparison(
+            mt, trace_fabric, size_scale=_TRACE_SIZE_SCALE
+        )[mt.model]
+        rows.append(
+            (
+                f"model_trace_{arch}_step_cct",
+                comp["step_time"] * 1e6,
+                f"{mt.n_events} events/step x{mt.n_steps} steps, "
+                "SWOT overlap on",
+            )
+        )
+        rows.append(
+            (
+                f"model_trace_{arch}_strawman_cct",
+                comp["strawman_step_time"] * 1e6,
+                "same trace, strawman-ICR (overlap off)",
+            )
+        )
+        rows.append(
+            (
+                f"model_trace_{arch}_overlap_gain",
+                comp["overlap_gain"],
+                "fractional step-time reduction from overlap",
+            )
+        )
+    colo_traces = [
+        static_trace(
+            "qwen2_moe_a2_7b", kind="train", dp=2, tp=4,
+            n_steps=model_steps,
+        ),
+        static_trace(
+            "gemma_2b", kind="prefill", dp=2, tp=4, n_steps=model_steps
+        ),
+    ]
+    colo_report, colo_times = replay_trace(
+        colo_traces, trace_fabric, size_scale=_TRACE_SIZE_SCALE
+    )
+    for arch, st in sorted(colo_times.items()):
+        tstats = colo_report.per_tenant()[arch]
+        rows.append(
+            (
+                f"model_trace_colo_{arch}_step_cct",
+                st.step_time * 1e6,
+                f"co-located train+serve on one fabric; "
+                f"{st.n_completed}/{st.n_jobs} jobs, mean queue "
+                f"{tstats.mean_queueing_delay * 1e6:.1f}us",
+            )
+        )
+    rows.append(
+        (
+            "mt_phase_model_trace_us",
+            (time.perf_counter() - t0) * 1e6,
+            "model-trace extraction + overlap on/off replays (wall)",
+        )
+    )
+
     rows.append(
         (
             "multi_tenant_wall_time",

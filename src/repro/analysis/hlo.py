@@ -219,6 +219,48 @@ def _split_top_level(s: str) -> list[str]:
     return [p for p in (p.strip() for p in parts) if p]
 
 
+@dataclasses.dataclass(frozen=True)
+class HloCollectiveOp:
+    """One collective op instance recovered from the HLO text.
+
+    Ops are listed in program order (computations in textual order, ops
+    in body order) -- the order XLA's dataflow executes them in within a
+    step -- so downstream trace builders can treat the list as a linear
+    dependency chain.  ``count`` is the loop-aware execution multiplicity
+    (a collective inside an n-trip scan body appears once with
+    ``count=n``); ``bytes_per_call`` is the per-execution operand bytes,
+    so total traffic is ``count * bytes_per_call``.  ``group_size`` is
+    the participant count per replica group (0 when the op carries no
+    ``replica_groups`` annotation).
+    """
+
+    kind: str  # one of COLLECTIVE_OPS
+    op_name: str
+    computation: str
+    bytes_per_call: float
+    count: int
+    group_size: int
+
+
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_REPLICA_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(rest: str) -> int:
+    """Participants per replica group, from either annotation form:
+    explicit lists ``replica_groups={{0,1,2,3},...}`` (size of the first
+    group) or iota ``replica_groups=[G,S]<=[N]`` (S replicas per group).
+    0 when the op carries neither."""
+    m = _REPLICA_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _REPLICA_GROUPS_RE.search(rest)
+    if m:
+        first = [p for p in m.group(1).split(",") if p.strip()]
+        return len(first)
+    return 0
+
+
 @dataclasses.dataclass
 class HloCostSummary:
     flops: float
@@ -229,6 +271,10 @@ class HloCostSummary:
     while_trip_counts: dict[str, int]
     top_traffic: list = dataclasses.field(default_factory=list)
     top_flops: list = dataclasses.field(default_factory=list)
+    # Program-ordered per-op collective records (the model-trace source).
+    collective_ops: list[HloCollectiveOp] = dataclasses.field(
+        default_factory=list
+    )
 
     def merge_note(self) -> str:
         kinds = ", ".join(
@@ -331,6 +377,7 @@ def analyze_hlo_text(text: str, collect_top: int = 0) -> HloCostSummary:
     collective_bytes = 0.0
     coll_by_kind: dict[str, float] = defaultdict(float)
     coll_counts: dict[str, int] = defaultdict(int)
+    coll_ops: list[HloCollectiveOp] = []
     traffic_rows: list = []
     flops_rows: list = []
 
@@ -477,6 +524,16 @@ def analyze_hlo_text(text: str, collect_top: int = 0) -> HloCostSummary:
                 collective_bytes += m * operand_bytes
                 coll_by_kind[base] += m * operand_bytes
                 coll_counts[base] += int(m)
+                coll_ops.append(
+                    HloCollectiveOp(
+                        kind=base,
+                        op_name=op.name,
+                        computation=comp.name,
+                        bytes_per_call=float(operand_bytes),
+                        count=int(m),
+                        group_size=_group_size(op.rest),
+                    )
+                )
 
     traffic_rows.sort(reverse=True)
     flops_rows.sort(reverse=True)
@@ -489,4 +546,5 @@ def analyze_hlo_text(text: str, collect_top: int = 0) -> HloCostSummary:
         while_trip_counts=trip_counts,
         top_traffic=traffic_rows[:collect_top],
         top_flops=flops_rows[:collect_top],
+        collective_ops=coll_ops,
     )

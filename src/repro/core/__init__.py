@@ -10,6 +10,12 @@ Public API for the paper's contribution:
 * ``SwotShim`` / ``OpticalController`` -- the coordination shim.
 """
 
+from repro.core.api import (
+    PlannerOptions,
+    PlanRequest,
+    PlanResult,
+    plan,
+)
 from repro.core.baselines import (
     InfeasibleError,
     ideal_cct,
@@ -65,6 +71,7 @@ from repro.core.patterns import (
     all_gather,
     bruck_alltoall,
     get_pattern,
+    neighbor_exchange,
     pairwise_alltoall,
     rabenseifner_allreduce,
     reduce_scatter,
@@ -109,7 +116,10 @@ __all__ = [
     "PAPER_LINK_BANDWIDTH",
     "PAPER_RECONFIG_LATENCY",
     "Pattern",
+    "PlanRequest",
+    "PlanResult",
     "PlaneActivity",
+    "PlannerOptions",
     "Schedule",
     "ScheduleIR",
     "Step",
@@ -131,10 +141,12 @@ __all__ = [
     "get_backend",
     "get_pattern",
     "ideal_cct",
+    "neighbor_exchange",
     "one_shot",
     "one_shot_allocation",
     "one_shot_cct",
     "pairwise_alltoall",
+    "plan",
     "plan_collective",
     "plan_grid",
     "prestage_for",

@@ -33,19 +33,20 @@ results stay deterministic unless an accelerator path is asked for.
 
 from __future__ import annotations
 
-import os
 from typing import Callable
 
 import numpy as np
 
+from repro.core import knobs
 from repro.core.ir.engine import (
     BatchResult,
     finalize_result,
 )
+from repro.core.knobs import (  # noqa: F401  (compat re-exports)
+    ENV_IR_BACKEND as ENV_BACKEND,
+    ENV_PALLAS_INTERPRET,
+)
 from repro.core.tolerances import EPS_VOLUME, REL_TOL, TOL
-
-ENV_BACKEND = "REPRO_IR_BACKEND"
-ENV_PALLAS_INTERPRET = "REPRO_PALLAS_INTERPRET"
 
 
 class BackendUnavailable(RuntimeError):
@@ -513,7 +514,7 @@ class PallasBackend(TimingBackend):
     def interpret(self) -> bool:
         if self._interpret_override is not None:
             return self._interpret_override
-        return os.environ.get(ENV_PALLAS_INTERPRET, "1") != "0"
+        return knobs.pallas_interpret()
 
     def derive_timing(
         self, packed: dict[str, np.ndarray], attribution: bool = False
@@ -574,7 +575,7 @@ def get_backend(name: str) -> TimingBackend:
 
 def default_backend_name() -> str:
     """The process-wide default (``REPRO_IR_BACKEND``, else numpy)."""
-    return os.environ.get(ENV_BACKEND, "numpy")
+    return knobs.ir_backend()
 
 
 def resolve_backend(
@@ -602,9 +603,10 @@ def available_backends() -> tuple[str, ...]:
 # Batch size at and above which the grid planners (`swot_greedy_grid` /
 # `plan_grid`) auto-select the jax backend for their scoring passes;
 # small grids stay on numpy (jit dispatch does not amortize).  Override
-# with the env var; <= 0 disables auto-selection.
-ENV_GRID_BACKEND_THRESHOLD = "REPRO_GRID_BACKEND_THRESHOLD"
-DEFAULT_GRID_BACKEND_THRESHOLD = 64
+# with the env var; <= 0 disables auto-selection.  (Both names are
+# defined in `repro.core.knobs` and re-exported here for compat.)
+ENV_GRID_BACKEND_THRESHOLD = knobs.ENV_GRID_BACKEND_THRESHOLD
+DEFAULT_GRID_BACKEND_THRESHOLD = knobs.DEFAULT_GRID_BACKEND_THRESHOLD
 
 
 def select_backend_by_size(
@@ -626,13 +628,7 @@ def select_backend_by_size(
     """
     if explicit is not None:
         return explicit
-    raw = os.environ.get(env_var, "")
-    try:
-        threshold = int(raw) if raw else default_threshold
-    except ValueError as exc:
-        raise ValueError(
-            f"{env_var} must be an integer, got {raw!r}"
-        ) from exc
+    threshold = knobs.int_knob(env_var, default_threshold)
     if threshold <= 0 or n_rows < threshold:
         return None
     try:
@@ -659,8 +655,8 @@ def select_backend_by_size(
 # per-step numpy loop wins (trace+compile does not amortize; the two are
 # bitwise-identical, so the threshold is purely a performance knob).
 # Override with the env var; <= 0 disables fused auto-selection.
-ENV_FUSED_PLANNER_THRESHOLD = "REPRO_FUSED_PLANNER_THRESHOLD"
-DEFAULT_FUSED_PLANNER_THRESHOLD = 256
+ENV_FUSED_PLANNER_THRESHOLD = knobs.ENV_FUSED_PLANNER_THRESHOLD
+DEFAULT_FUSED_PLANNER_THRESHOLD = knobs.DEFAULT_FUSED_PLANNER_THRESHOLD
 
 
 def select_planner_by_size(
@@ -680,16 +676,7 @@ def select_planner_by_size(
                 f"unknown planner {explicit!r}; choose 'step' or 'fused'"
             )
         return explicit
-    raw = os.environ.get(ENV_FUSED_PLANNER_THRESHOLD, "")
-    try:
-        threshold = (
-            int(raw) if raw else DEFAULT_FUSED_PLANNER_THRESHOLD
-        )
-    except ValueError as exc:
-        raise ValueError(
-            f"{ENV_FUSED_PLANNER_THRESHOLD} must be an integer, "
-            f"got {raw!r}"
-        ) from exc
+    threshold = knobs.fused_planner_threshold()
     if threshold <= 0 or n_cells < threshold:
         return "step"
     try:

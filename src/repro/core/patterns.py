@@ -212,6 +212,23 @@ def bruck_alltoall(n_nodes: int, size: float) -> Pattern:
     return Pattern("bruck_alltoall", n_nodes, tuple(steps))
 
 
+def neighbor_exchange(n_nodes: int, size: float) -> Pattern:
+    """Single-step ring handoff: every node sends ``size`` to its successor.
+
+    The point-to-point pattern pipeline parallelism issues per microbatch
+    tick (``lax.ppermute`` stage handoff in `repro.train.pipeline`) and
+    the optical image of HLO ``collective-permute`` ops: one bijective
+    pairing, one circuit configuration, no multi-step structure.
+    """
+    if n_nodes < 2:
+        raise ValueError("need >= 2 nodes")
+    return Pattern(
+        "neighbor_exchange",
+        n_nodes,
+        (Step(config=0, volume=size, perm=_rotation(n_nodes, 1)),),
+    )
+
+
 ALGORITHMS: dict[str, Callable[[int, float], Pattern]] = {
     "ring_allreduce": ring_allreduce,
     "rabenseifner_allreduce": rabenseifner_allreduce,
@@ -219,6 +236,7 @@ ALGORITHMS: dict[str, Callable[[int, float], Pattern]] = {
     "all_gather": all_gather,
     "pairwise_alltoall": pairwise_alltoall,
     "bruck_alltoall": bruck_alltoall,
+    "neighbor_exchange": neighbor_exchange,
 }
 
 

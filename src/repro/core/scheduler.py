@@ -1,5 +1,12 @@
 """SWOT scheduler facade: exact MILP when tractable, greedy at scale.
 
+The dispatch policy now lives in `repro.core.api` behind the unified
+``plan(PlanRequest) -> PlanResult`` entry point; the functions here are
+thin, signature-stable delegates kept for existing call sites (the
+runtime arbiter, benchmarks, examples).  ``swot_schedule(...)`` and
+``plan_grid(...)`` produce bitwise-identical outputs to their
+pre-facade implementations (parity-tested in tests/test_trace.py).
+
 ``plan_grid`` is the sweep-scale entry point: a whole grid of (fabric,
 pattern) cells is planned by the instance-batched greedy
 (`repro.core.greedy.swot_greedy_grid`) and scored -- including the
@@ -12,27 +19,25 @@ from __future__ import annotations
 import dataclasses
 from typing import TYPE_CHECKING, Sequence
 
+from repro.core.api import (  # noqa: F401  (compat re-exports)
+    _MILP_BINARY_BUDGET,
+    GridCellPlan,
+    PlannerOptions,
+    PlanRequest,
+    plan,
+)
 from repro.core.baselines import (
     InfeasibleError,
     ideal_cct,
     one_shot_cct,
     strawman_cct,
-    strawman_instance,
 )
 from repro.core.fabric import OpticalFabric
-from repro.core.greedy import GridPlan, swot_greedy, swot_greedy_grid
-from repro.core.ir import batch_evaluate
-from repro.core.milp import solve_milp
 from repro.core.patterns import Pattern
 from repro.core.schedule import DependencyMode, Schedule
 
 if TYPE_CHECKING:
     from repro.core.ir.backends import TimingBackend
-
-# Above this many (step, plane) binaries the MILP hands over to the greedy
-# (+ LP-polished structure local search), which empirically dominates HiGHS
-# branch-and-cut beyond this size within any reasonable time limit.
-_MILP_BINARY_BUDGET = 70
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,49 +77,26 @@ def swot_schedule(
 ) -> tuple[Schedule, str]:
     """Schedule ``pattern`` on ``fabric`` with SWOT overlap optimization.
 
-    ``plane_ready`` gives per-plane earliest activity times (the arbiter's
-    staggered-lease case).  The MILP anchors each plane's activity chain
-    at its ready offset, so small re-plans stay exact; at scale the auto
-    policy hands over to the greedy exactly as for fresh fabrics.
-
-    ``bypass_depth >= 2`` lets the greedy add Topology-Bypassing relay
-    candidates (`repro.core.bypass`) up to that many hops; the MILP does
-    not model relays, so under ``method="milp"`` a bypass-winning greedy
-    schedule is kept whenever it realizes the faster CCT.
+    Delegates to ``repro.core.api.plan``; see `PlannerOptions` for the
+    knob semantics.  ``plane_ready`` gives per-plane earliest activity
+    times (the arbiter's staggered-lease case); ``bypass_depth >= 2``
+    enables Topology-Bypassing relay candidates; ``method="strawman"``
+    executes the lockstep reconfigure-then-transmit baseline.
     """
-    if method == "auto":
-        n_bin = 2 * pattern.n_steps * fabric.n_planes
-        method = "milp" if n_bin <= _MILP_BINARY_BUDGET else "greedy"
-    if method == "milp":
-        greedy_schedule = swot_greedy(
-            fabric, pattern, mode=mode, plane_ready=plane_ready,
-            bypass_depth=bypass_depth,
-        )
-        try:
-            milp_schedule = solve_milp(
-                fabric,
-                pattern,
+    result = plan(
+        PlanRequest.single(
+            fabric,
+            pattern,
+            plane_ready=plane_ready,
+            options=PlannerOptions(
+                method=method,
                 mode=mode,
-                time_limit=milp_time_limit,
-                plane_ready=plane_ready,
-            ).schedule
-        except RuntimeError:
-            return greedy_schedule, "greedy"  # solver hiccup: greedy+LP
-        # The greedy occasionally matches MILP under a solver time limit
-        # (or beats it via bypass relays the MILP cannot model); keep
-        # whichever realized schedule is faster.
-        if greedy_schedule.cct < milp_schedule.cct:
-            return greedy_schedule, "greedy"
-        return milp_schedule, "milp"
-    if method == "greedy":
-        return (
-            swot_greedy(
-                fabric, pattern, mode=mode, plane_ready=plane_ready,
+                milp_time_limit=milp_time_limit,
                 bypass_depth=bypass_depth,
             ),
-            "greedy",
         )
-    raise ValueError(f"unknown method {method!r}")
+    )
+    return result.schedule(), result.method
 
 
 def plan_collective(
@@ -149,24 +131,6 @@ def plan_collective(
     )
 
 
-@dataclasses.dataclass(frozen=True)
-class GridCellPlan:
-    """One sweep cell planned by ``plan_grid``: greedy plan + baseline."""
-
-    plan: GridPlan
-    strawman_cct: float
-
-    @property
-    def cct(self) -> float:
-        return self.plan.cct
-
-    @property
-    def vs_strawman(self) -> float | None:
-        if self.strawman_cct == 0:
-            return None
-        return 1.0 - self.plan.cct / self.strawman_cct
-
-
 def plan_grid(
     cells: Sequence[tuple[OpticalFabric, Pattern]],
     backend: "str | TimingBackend | None" = None,
@@ -179,10 +143,11 @@ def plan_grid(
 ) -> list[GridCellPlan]:
     """Plan a whole sweep grid in one instance-batched pass.
 
-    The batched greedy plans every (fabric, pattern) cell together
-    (`swot_greedy_grid`), then ONE more ``batch_evaluate`` pass scores the
-    strawman-ICR baseline for every cell -- both on the selected IR
-    backend.  ``backend=None`` auto-selects jax once the grid reaches
+    Delegates to ``repro.core.api.plan``.  The batched greedy plans
+    every (fabric, pattern) cell together (``swot_greedy_grid``), then
+    ONE more ``batch_evaluate`` pass scores the strawman-ICR baseline
+    for every cell -- both on the selected IR backend.  ``backend=None``
+    auto-selects jax once the grid reaches
     ``REPRO_GRID_BACKEND_THRESHOLD`` cells (the arbiter's shared
     ``select_backend_by_size`` policy; else the ``REPRO_IR_BACKEND``
     env default), and an explicit ``backend`` always wins.  ``mode``
@@ -204,28 +169,19 @@ def plan_grid(
     each ``GridCellPlan.plan.attribution`` -- composes with both
     planners and every backend.
     """
-    from repro.core.ir.backends import (
-        DEFAULT_GRID_BACKEND_THRESHOLD,
-        ENV_GRID_BACKEND_THRESHOLD,
-        select_backend_by_size,
+    result = plan(
+        PlanRequest.grid(
+            cells,
+            options=PlannerOptions(
+                mode=mode,
+                backend=backend,
+                planner=planner,
+                bypass_depth=bypass_depth,
+                independent_split=independent_split,
+                rollout_horizon=rollout_horizon,
+                attribution=attribution,
+            ),
+        )
     )
-
-    backend = select_backend_by_size(
-        len(cells),
-        ENV_GRID_BACKEND_THRESHOLD,
-        DEFAULT_GRID_BACKEND_THRESHOLD,
-        explicit=backend,
-    )
-    plans = swot_greedy_grid(
-        cells, rollout_horizon=rollout_horizon, backend=backend, mode=mode,
-        bypass_depth=bypass_depth, independent_split=independent_split,
-        planner=planner, attribution=attribution,
-    )
-    straw = batch_evaluate(
-        [strawman_instance(fabric, pattern) for fabric, pattern in cells],
-        backend=backend,
-    )
-    return [
-        GridCellPlan(plan=plan, strawman_cct=float(straw.cct[i]))
-        for i, plan in enumerate(plans)
-    ]
+    assert result.grid is not None
+    return list(result.grid)

@@ -24,17 +24,17 @@ monkeypatch the environment without reloading modules.
 from __future__ import annotations
 
 import json
-import os
 import sys
 from typing import Any, TextIO
 
-ENV_LOG = "REPRO_LOG"
+from repro.core import knobs
+from repro.core.knobs import ENV_LOG  # noqa: F401  (compat re-export)
 
 _LEVELS = {"debug": 10, "info": 20, "warning": 30}
 
 
 def _mode() -> str:
-    return os.environ.get(ENV_LOG, "").strip().lower()
+    return knobs.log_mode()
 
 
 def _threshold(mode: str) -> int:

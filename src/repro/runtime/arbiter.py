@@ -71,6 +71,7 @@ from repro.core.ir import (
     BatchInstance,
     batch_evaluate,
 )
+from repro.core import knobs
 from repro.core.ir.backends import select_backend_by_size
 from repro.core.patterns import Pattern, get_pattern
 from repro.core.schedule import DependencyMode, Kind, Schedule
@@ -92,8 +93,13 @@ _MAX_RELEASE_CANDIDATES = 16
 # batched recurrence dominates the evaluation -- flip to jax; it must
 # stay <= _MAX_RELEASE_CANDIDATES or auto-selection becomes unreachable.
 # Override with the env var; <= 0 disables auto-selection entirely.
-ENV_BACKEND_THRESHOLD = "REPRO_ARBITER_BACKEND_THRESHOLD"
-_DEFAULT_BACKEND_THRESHOLD = _MAX_RELEASE_CANDIDATES
+# Name and default live in `repro.core.knobs` (single read point).
+ENV_BACKEND_THRESHOLD = knobs.ENV_ARBITER_BACKEND_THRESHOLD
+_DEFAULT_BACKEND_THRESHOLD = knobs.DEFAULT_ARBITER_BACKEND_THRESHOLD
+assert _DEFAULT_BACKEND_THRESHOLD <= _MAX_RELEASE_CANDIDATES, (
+    "auto-selection unreachable: knobs.DEFAULT_ARBITER_BACKEND_THRESHOLD "
+    "must stay <= _MAX_RELEASE_CANDIDATES"
+)
 
 # Lease placement policies (see class docstring).
 _PLACEMENTS = ("first_free", "schedule_aware")
@@ -119,6 +125,9 @@ class JobRecord:
     planes_min: int = 0
     planes_max: int = 0
     rejected: bool = False
+    # Which workload the job belongs to (the JobSpec.tenant label);
+    # purely descriptive -- admission and leasing never read it.
+    tenant: str = ""
 
     @property
     def queueing_delay(self) -> float | None:

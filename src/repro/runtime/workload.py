@@ -238,6 +238,45 @@ def heavy_tailed_trace(
     return trace
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantStats:
+    """Per-tenant slice of a replay (see ``ReplayReport.per_tenant``)."""
+
+    tenant: str
+    n_jobs: int
+    n_completed: int
+    n_rejected: int
+    mean_cct: float  # NaN when the tenant completed nothing
+    mean_queueing_delay: float  # NaN when the tenant started nothing
+    p95_queueing_delay: float  # NaN when the tenant started nothing
+    total_bytes: float  # sum of completed jobs' request sizes
+
+
+def _mean_cct(records: Sequence[JobRecord]) -> float:
+    done = [r for r in records if r.finish is not None]
+    if not done:
+        return math.nan
+    return sum(r.cct for r in done) / len(done)
+
+
+def _queueing_delays(records: Sequence[JobRecord]) -> list[float]:
+    return sorted(
+        r.queueing_delay for r in records if r.start is not None
+    )
+
+
+def _mean_queueing_delay(records: Sequence[JobRecord]) -> float:
+    delays = _queueing_delays(records)
+    return sum(delays) / len(delays) if delays else math.nan
+
+
+def _p95_queueing_delay(records: Sequence[JobRecord]) -> float:
+    delays = _queueing_delays(records)
+    if not delays:
+        return math.nan
+    return delays[min(len(delays) - 1, int(0.95 * len(delays)))]
+
+
 @dataclasses.dataclass
 class ReplayReport:
     """Outcome of replaying one trace on one fabric."""
@@ -256,26 +295,48 @@ class ReplayReport:
 
     @property
     def mean_cct(self) -> float:
-        done = self.completed
-        return sum(r.cct for r in done) / len(done) if done else 0.0
+        """Mean CCT over completed jobs; NaN when nothing completed
+        (NaN, unlike 0.0, cannot be mistaken for a perfect fabric)."""
+        return _mean_cct(self.records)
 
     @property
     def mean_queueing_delay(self) -> float:
-        done = [r for r in self.records if r.start is not None]
-        if not done:
-            return 0.0
-        return sum(r.queueing_delay for r in done) / len(done)
+        """Mean admission wait over started jobs; NaN when nothing
+        started."""
+        return _mean_queueing_delay(self.records)
 
     @property
     def p95_queueing_delay(self) -> float:
-        delays = sorted(
-            r.queueing_delay
-            for r in self.records
-            if r.start is not None
-        )
-        if not delays:
-            return 0.0
-        return delays[min(len(delays) - 1, int(0.95 * len(delays)))]
+        """95th-percentile admission wait; NaN when nothing started."""
+        return _p95_queueing_delay(self.records)
+
+    def per_tenant(self) -> dict[str, TenantStats]:
+        """Break the replay down by ``JobSpec.tenant`` label.
+
+        Jobs submitted without a tenant group under ``""``.  Keys are
+        sorted for stable iteration; per-tenant means/percentiles follow
+        the NaN-on-empty convention of the report-level properties.
+        """
+        groups: dict[str, list[JobRecord]] = {}
+        for r in self.records:
+            groups.setdefault(r.tenant, []).append(r)
+        return {
+            tenant: TenantStats(
+                tenant=tenant,
+                n_jobs=len(recs),
+                n_completed=sum(
+                    1 for r in recs if r.finish is not None
+                ),
+                n_rejected=sum(1 for r in recs if r.rejected),
+                mean_cct=_mean_cct(recs),
+                mean_queueing_delay=_mean_queueing_delay(recs),
+                p95_queueing_delay=_p95_queueing_delay(recs),
+                total_bytes=sum(
+                    r.size for r in recs if r.finish is not None
+                ),
+            )
+            for tenant, recs in sorted(groups.items())
+        }
 
     @property
     def utilization(self) -> float:
@@ -361,7 +422,9 @@ def replay(
 
     def make_submit(spec: JobSpec):
         def fire() -> None:
-            records.append(arbiter.submit(spec.request, spec.priority))
+            record = arbiter.submit(spec.request, spec.priority)
+            record.tenant = spec.tenant
+            records.append(record)
 
         return fire
 

@@ -31,12 +31,34 @@ class Completion:
 
 
 class ServeEngine:
-    def __init__(self, model: Model, params, max_len: int = 256):
+    def __init__(
+        self, model: Model, params, max_len: int = 256, recorder=None
+    ):
         self.model = model
         self.params = params
         self.max_len = max_len
+        # Optional repro.trace.TraceRecorder: generate() records the
+        # prefill's collectives, then each decode tick's, with a step
+        # boundary per engine step (prefill = one step, decode tick =
+        # one step) -- the serving-side analogue of the Trainer hook.
+        self.recorder = recorder
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
+
+    def _record_step(self, kind: str, batch_size: int, seq_len: int) -> None:
+        """Feed the recorder one engine step's Phase-1 profile."""
+        if self.recorder is None:
+            return
+        from repro.configs.base import ShapeCell
+        from repro.core.planner import profile_serve_step
+
+        cell = ShapeCell(
+            name=f"live_{kind}", kind=kind,
+            seq_len=max(seq_len, 1), global_batch=max(batch_size, 1),
+        )
+        for req in profile_serve_step(self.model.cfg, self.model.ctx, cell):
+            self.recorder.record(req, phase=kind)
+        self.recorder.step_boundary()
 
     def _pad_batch(self, requests: list[Request]) -> tuple[jax.Array, int]:
         max_prompt = max(len(r.prompt) for r in requests)
@@ -64,6 +86,7 @@ class ServeEngine:
             )
         with set_mesh_compat(self.model.ctx.mesh):
             logits, cache = self._prefill(self.params, batch)
+            self._record_step("prefill", tokens.shape[0], prompt_len)
             cache = self._grow(cache, tokens.shape[0])
             max_new = max(r.max_new_tokens for r in requests)
             outs = []
@@ -71,6 +94,9 @@ class ServeEngine:
             for _ in range(max_new):
                 outs.append(np.asarray(tok)[:, 0])
                 logits, cache = self._decode(self.params, cache, tok)
+                self._record_step(
+                    "decode", tokens.shape[0], prompt_len + len(outs)
+                )
                 tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         columns = np.stack(outs, axis=1)  # (B, max_new)
         return [

@@ -1,0 +1,44 @@
+"""Closed-loop collective traces: model stack -> fabric arbiter.
+
+Extract per-step collective demand (op kind, payload bytes, participant
+set, dependency order, repeat cadence) from the real model stack through
+three sources sharing one record type, then replay it through the
+optical fabric arbiter behind the unified planning facade:
+
+* `repro.trace.static`  -- ArchConfig + abstract mesh (no devices);
+* `repro.trace.hlo`     -- compiled HLO text;
+* `repro.trace.runtime` -- live Trainer / ServeEngine hooks;
+* `repro.trace.replay`  -- ``CollectiveTrace`` -> ``JobSpec`` streams ->
+  per-model step time with/without reconfiguration overlap.
+"""
+
+from repro.trace.hlo import event_from_hlo_op, hlo_trace
+from repro.trace.records import (
+    CollectiveTrace,
+    TraceEvent,
+    request_to_event,
+)
+from repro.trace.replay import (
+    DEFAULT_MAX_EXPAND,
+    ModelStepTimes,
+    overlap_comparison,
+    replay_trace,
+    trace_to_jobs,
+)
+from repro.trace.runtime import TraceRecorder
+from repro.trace.static import static_trace
+
+__all__ = [
+    "CollectiveTrace",
+    "DEFAULT_MAX_EXPAND",
+    "ModelStepTimes",
+    "TraceEvent",
+    "TraceRecorder",
+    "event_from_hlo_op",
+    "hlo_trace",
+    "overlap_comparison",
+    "replay_trace",
+    "request_to_event",
+    "static_trace",
+    "trace_to_jobs",
+]

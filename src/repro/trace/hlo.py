@@ -1,0 +1,127 @@
+"""HLO trace extraction: compiled step -> ``CollectiveTrace``.
+
+Bridges `repro.analysis.hlo` (which recovers program-ordered,
+loop-aware ``HloCollectiveOp`` records from ``compiled.as_text()``) to
+the shared trace schema: each XLA collective opcode maps onto the
+optical-pattern algorithm the scheduler models
+(`repro.core.patterns.ALGORITHMS`), participant counts come from
+``replica_groups``, and program order becomes a linear dependency chain
+(XLA serializes same-channel collectives within a step).
+
+Kind mapping (power-of-two groups get the recursive-halving/-doubling
+algorithms the sharding profile also assumes; other sizes fall back to
+ring):
+
+====================  =======================================
+XLA opcode            pattern algorithm
+====================  =======================================
+all-reduce            rabenseifner_allreduce (pow2) / ring_allreduce
+all-gather            all_gather (pow2) / ring_allreduce
+reduce-scatter        reduce_scatter (pow2) / ring_allreduce
+all-to-all            pairwise_alltoall
+collective-permute    neighbor_exchange
+====================  =======================================
+"""
+
+from __future__ import annotations
+
+from repro.analysis.hlo import (
+    HloCollectiveOp,
+    HloCostSummary,
+    analyze_hlo_text,
+)
+from repro.trace.records import CollectiveTrace, TraceEvent
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 2 and (n & (n - 1)) == 0
+
+
+def _algorithm(kind: str, participants: int) -> str:
+    if kind == "all-reduce":
+        return (
+            "rabenseifner_allreduce"
+            if _is_pow2(participants)
+            else "ring_allreduce"
+        )
+    if kind == "all-gather":
+        return "all_gather" if _is_pow2(participants) else "ring_allreduce"
+    if kind == "reduce-scatter":
+        return (
+            "reduce_scatter" if _is_pow2(participants) else "ring_allreduce"
+        )
+    if kind == "all-to-all":
+        return "pairwise_alltoall"
+    if kind == "collective-permute":
+        return "neighbor_exchange"
+    raise ValueError(f"unmapped collective kind {kind!r}")
+
+
+def event_from_hlo_op(
+    op: HloCollectiveOp,
+    *,
+    deps: tuple[int, ...] = (),
+    default_participants: int = 0,
+    phase: str = "step",
+) -> TraceEvent | None:
+    """One HLO collective record as a trace event.
+
+    Returns None when no participant count is recoverable (the op
+    carries no ``replica_groups`` and no ``default_participants`` was
+    given) or the group is degenerate (size 1: a self-copy, no fabric
+    traffic).
+    """
+    participants = op.group_size if op.group_size >= 2 else (
+        default_participants
+    )
+    if participants < 2:
+        return None
+    return TraceEvent(
+        op=_algorithm(op.kind, participants),
+        payload_bytes=op.bytes_per_call,
+        participants=participants,
+        tag=f"hlo:{op.op_name}",
+        deps=deps,
+        count=max(op.count, 1),
+        phase=phase,
+    )
+
+
+def hlo_trace(
+    source: str | HloCostSummary,
+    *,
+    model: str = "hlo",
+    default_participants: int = 0,
+    phase: str = "step",
+    n_steps: int = 1,
+    cadence: float = 0.0,
+) -> CollectiveTrace:
+    """Extract a ``CollectiveTrace`` from HLO text or a prior analysis.
+
+    ``source`` is either ``compiled.as_text()`` output or an already
+    computed ``HloCostSummary``.  Events keep HLO program order and are
+    chained as a linear dependency sequence; ops whose participant
+    count cannot be recovered are skipped (pass ``default_participants``
+    -- e.g. the mesh axis size the step was compiled for -- to keep
+    them).
+    """
+    summary = (
+        analyze_hlo_text(source) if isinstance(source, str) else source
+    )
+    events: list[TraceEvent] = []
+    for op in summary.collective_ops:
+        ev = event_from_hlo_op(
+            op,
+            deps=(len(events) - 1,) if events else (),
+            default_participants=default_participants,
+            phase=phase,
+        )
+        if ev is not None:
+            events.append(ev)
+    return CollectiveTrace(
+        model=model,
+        source="hlo",
+        events=tuple(events),
+        cadence=cadence,
+        n_steps=n_steps,
+    )

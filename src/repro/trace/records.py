@@ -1,0 +1,170 @@
+"""The shared collective-trace record types.
+
+One step of a real workload (a training iteration, a prefill, a decode
+tick) issues an ordered set of collectives; ``CollectiveTrace`` captures
+that demand independently of *how* it was extracted.  Three extractors
+produce the same record type:
+
+* `repro.trace.static`  -- static analysis of an ``ArchConfig`` +
+  mesh via the Phase-1 sharding profile (`repro.core.planner`);
+* `repro.trace.hlo`     -- compiled-HLO analysis
+  (`repro.analysis.hlo.HloCostSummary.collective_ops`);
+* `repro.trace.runtime` -- live instrumentation hooks in
+  `repro.train.loop.Trainer` / `repro.serve.engine.ServeEngine`.
+
+and one consumer replays them: `repro.trace.replay` converts a trace
+into arbiter ``JobSpec`` streams (dependency order within a step,
+cadence across steps) and drives the fabric arbiter with and without
+intra-collective reconfiguration overlap.
+
+Events are topologically ordered: ``deps`` holds indices of *earlier*
+events in the same step that must finish before this one starts (the
+training step's dataflow -- e.g. the gradient reduce-scatter precedes
+the parameter all-gather).  ``count`` folds per-layer repetition (a
+Megatron TP sync appearing ``4 * n_layers`` times per step is one event
+with that count), keeping traces compact without losing total volume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.patterns import ALGORITHMS
+from repro.core.shim import CollectiveRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One collective (possibly repeated) inside a workload step.
+
+    Attributes:
+      op: collective algorithm, a key of `repro.core.patterns.ALGORITHMS`.
+      payload_bytes: per-node buffer bytes per issue (the pattern
+        ``size`` axis).
+      participants: communicator size (optical endpoints).
+      tag: human-readable origin, e.g. ``"dp_grad_rs"``.
+      deps: indices (into the owning trace's ``events``) of same-step
+        events that must complete before this one starts; must all be
+        smaller than this event's own index.
+      count: times the collective is issued per step (per-layer
+        repetition); total per-step traffic is
+        ``count * payload_bytes * participants`` pattern-dependent.
+      phase: which workload phase issues it (``train`` / ``prefill`` /
+        ``decode`` / ``step``).
+    """
+
+    op: str
+    payload_bytes: float
+    participants: int
+    tag: str = ""
+    deps: tuple[int, ...] = ()
+    count: int = 1
+    phase: str = "step"
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveTrace:
+    """Per-step collective demand of one model workload.
+
+    Attributes:
+      model: workload label (e.g. the ``ArchConfig.name``).
+      source: extractor that produced it (``static`` / ``hlo`` /
+        ``runtime``).
+      events: topologically-ordered per-step events.
+      cadence: seconds between successive step *starts*; 0.0 means
+        steps issue back-to-back (each step starts when the previous
+        one's collectives finish).
+      n_steps: how many times the step repeats.
+    """
+
+    model: str
+    source: str
+    events: tuple[TraceEvent, ...]
+    cadence: float = 0.0
+    n_steps: int = 1
+
+    def __post_init__(self) -> None:
+        if self.n_steps < 1:
+            raise ValueError("n_steps must be >= 1")
+        if self.cadence < 0:
+            raise ValueError("cadence must be >= 0")
+        for i, ev in enumerate(self.events):
+            if ev.op not in ALGORITHMS:
+                raise ValueError(
+                    f"event {i}: unknown collective {ev.op!r}; "
+                    f"available: {sorted(ALGORITHMS)}"
+                )
+            if ev.participants < 2:
+                raise ValueError(
+                    f"event {i}: needs >= 2 participants, got "
+                    f"{ev.participants}"
+                )
+            if ev.payload_bytes < 0:
+                raise ValueError(f"event {i}: negative payload")
+            if ev.count < 1:
+                raise ValueError(f"event {i}: count must be >= 1")
+            for d in ev.deps:
+                if not 0 <= d < i:
+                    raise ValueError(
+                        f"event {i}: dep {d} is not an earlier event "
+                        "(events must be topologically ordered)"
+                    )
+
+    @property
+    def n_events(self) -> int:
+        return len(self.events)
+
+    @property
+    def step_bytes(self) -> float:
+        """Total per-node bytes one step moves (count-weighted)."""
+        return sum(e.payload_bytes * e.count for e in self.events)
+
+    def by_kind(self) -> dict[str, float]:
+        """Per-step bytes per collective algorithm (count-weighted)."""
+        out: dict[str, float] = {}
+        for e in self.events:
+            out[e.op] = out.get(e.op, 0.0) + e.payload_bytes * e.count
+        return out
+
+    def requests(self) -> list[CollectiveRequest]:
+        """The step's events as shim/arbiter ``CollectiveRequest``s (one
+        per event; ``count`` is folded into the tag the same way the
+        Phase-1 profile does)."""
+        reqs = []
+        for e in self.events:
+            tag = e.tag or e.op
+            if e.count > 1 and not tag.endswith(f"_x{e.count}"):
+                tag = f"{tag}_x{e.count}"
+            reqs.append(
+                CollectiveRequest(e.op, e.participants, e.payload_bytes, tag)
+            )
+        return reqs
+
+
+def request_to_event(
+    req: CollectiveRequest,
+    *,
+    deps: tuple[int, ...] = (),
+    phase: str = "step",
+) -> TraceEvent:
+    """Lift a Phase-1 ``CollectiveRequest`` into a ``TraceEvent``.
+
+    The profile folds per-layer repetition into a ``_x{n}`` tag suffix
+    (e.g. ``tp_act_allreduce_x96``); that suffix becomes the event's
+    ``count`` so replay can expand or batch it explicitly.
+    """
+    tag = req.tag
+    count = 1
+    if "_x" in tag:
+        head, _, suffix = tag.rpartition("_x")
+        if suffix.isdigit():
+            tag, count = head, max(1, int(suffix))
+    return TraceEvent(
+        op=req.algorithm,
+        payload_bytes=req.size,
+        participants=req.n_nodes,
+        tag=tag,
+        deps=deps,
+        count=count,
+        phase=phase,
+    )

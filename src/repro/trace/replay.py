@@ -1,0 +1,360 @@
+"""Closed-loop trace replay: ``CollectiveTrace`` -> fabric arbiter -> BENCH.
+
+``trace_to_jobs`` converts model traces into the arbiter's ``JobSpec``
+stream, honoring the trace structure the flat workload generators
+cannot express:
+
+* **dependency order within a step** -- an event's jobs arrive only
+  after its dependencies' estimated finish (solo-CCT estimates from the
+  `repro.core.api.plan` facade, memoized per signature);
+* **per-layer repetition** -- an event with ``count=n`` expands into at
+  most ``max_expand`` serialized jobs carrying ``n``'s total bytes (so
+  a 96-layer TP sync does not become 96 arbiter jobs);
+* **cadence across steps** -- steps start every ``cadence`` seconds
+  when the trace carries one, else back-to-back after the previous
+  step's estimated finish.
+
+``replay_trace`` then drives the multi-tenant runtime
+(`repro.runtime.workload.replay` -> ``FabricArbiter`` -> SWOT planner
+via the ``plan()`` facade) and reports per-model end-to-end step time;
+``overlap_comparison`` runs it twice -- the SWOT planner vs the
+``method="strawman"`` lockstep baseline (every plane serves every step,
+no intra-collective reconfiguration overlap) -- which is the paper's
+ICR-on/off comparison driven by real model demand.  Multiple traces
+replay onto ONE shared fabric (tenant labels = trace model names), so
+co-located training + serving contend exactly as the arbiter arbitrates.
+
+CLI (the CI ``trace-smoke`` leg)::
+
+    python -m repro.trace.replay --arch gemma_2b --steps 2 \
+        --trace-out model-trace.json
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+from repro.core.api import PlannerOptions, PlanRequest, plan
+from repro.core.fabric import OpticalFabric
+from repro.core.patterns import get_pattern
+from repro.core.shim import CollectiveRequest
+from repro.runtime.workload import JobSpec, ReplayReport, replay
+from repro.trace.records import CollectiveTrace, TraceEvent
+
+# An event repeated count times expands into at most this many arbiter
+# jobs (serialized, total bytes preserved): enough to model the
+# pipelined cadence of per-layer collectives without drowning the
+# arbiter in thousands of identical jobs.
+DEFAULT_MAX_EXPAND = 4
+
+
+class _SoloEstimator:
+    """Memoized whole-fabric solo CCT per request signature, via the
+    unified planning facade (the same planner the arbiter runs)."""
+
+    def __init__(
+        self, fabric: OpticalFabric, options: PlannerOptions
+    ) -> None:
+        self._fabric = fabric
+        self._options = options
+        self._cache: dict[tuple, float] = {}
+
+    def cct(self, req: CollectiveRequest) -> float:
+        sig = req.signature
+        hit = self._cache.get(sig)
+        if hit is not None:
+            return hit
+        pattern = get_pattern(req.algorithm, req.n_nodes, req.size)
+        fabric = self._fabric
+        if fabric.initial_configs is None:
+            fabric = fabric.prestaged(pattern.steps[0].config)
+        value = plan(
+            PlanRequest.single(fabric, pattern, options=self._options)
+        ).cct
+        self._cache[sig] = value
+        return value
+
+
+def _expand_event(
+    ev: TraceEvent, max_expand: int
+) -> list[CollectiveRequest]:
+    """``count`` repeats as <= ``max_expand`` equal jobs, bytes-preserving."""
+    k = min(ev.count, max_expand)
+    per_job = ev.payload_bytes * ev.count / k
+    tag = ev.tag or ev.op
+    if ev.count > 1:
+        tag = f"{tag}_x{ev.count}"
+    return [
+        CollectiveRequest(ev.op, ev.participants, per_job, tag)
+        for _ in range(k)
+    ]
+
+
+def trace_to_jobs(
+    traces: CollectiveTrace | Sequence[CollectiveTrace],
+    fabric: OpticalFabric,
+    *,
+    options: PlannerOptions | None = None,
+    max_expand: int = DEFAULT_MAX_EXPAND,
+    size_scale: float = 1.0,
+    start: float = 0.0,
+    priorities: dict[str, int] | None = None,
+) -> list[JobSpec]:
+    """Convert model traces into a merged, sorted ``JobSpec`` stream.
+
+    Arrival times encode the trace's structure: an event's first job
+    arrives at the max of its dependencies' estimated finish times
+    (whole-fabric solo CCTs from the ``plan()`` facade -- estimates
+    only; the arbiter still decides actual start/finish), repeats of
+    the same event serialize, and steps advance by ``cadence`` (or the
+    previous step's estimated finish when cadence is 0).  ``size_scale``
+    scales every payload (benchmarks shrink real model sizes to keep
+    replay fast); ``priorities`` maps trace model names to arbiter
+    priorities.
+    """
+    if isinstance(traces, CollectiveTrace):
+        traces = [traces]
+    if max_expand < 1:
+        raise ValueError("max_expand must be >= 1")
+    # Default the arrival estimator to the greedy planner: it is what
+    # the arbiter runs per job (method="greedy"), and it keeps estimate
+    # cost flat where "auto" would hand small patterns to the MILP.
+    estimator = _SoloEstimator(
+        fabric, options or PlannerOptions(method="greedy")
+    )
+    jobs: list[JobSpec] = []
+    for trace in traces:
+        priority = (priorities or {}).get(trace.model, 0)
+        step_base = start
+        for _step in range(trace.n_steps):
+            finish: list[float] = []
+            for ev in trace.events:
+                if size_scale != 1.0:
+                    ev = dataclasses.replace(
+                        ev, payload_bytes=ev.payload_bytes * size_scale
+                    )
+                ready = step_base
+                for d in ev.deps:
+                    ready = max(ready, finish[d])
+                t = ready
+                for req in _expand_event(ev, max_expand):
+                    jobs.append(
+                        JobSpec(
+                            arrival=t,
+                            request=req,
+                            priority=priority,
+                            tenant=trace.model,
+                        )
+                    )
+                    t += estimator.cct(req)
+                finish.append(t)
+            step_end = max(finish) if finish else step_base
+            if trace.cadence > 0:
+                step_base += trace.cadence
+            else:
+                step_base = step_end
+    jobs.sort(key=lambda s: (s.arrival, s.tenant, s.request.tag))
+    return jobs
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelStepTimes:
+    """Per-model end-to-end step time out of one replay."""
+
+    model: str
+    n_steps: int
+    n_jobs: int
+    n_completed: int
+    step_time: float  # makespan of the model's jobs / n_steps
+    mean_cct: float
+    mean_queueing_delay: float
+
+
+def _step_times(
+    traces: Sequence[CollectiveTrace], report: ReplayReport
+) -> dict[str, ModelStepTimes]:
+    by_tenant = report.per_tenant()
+    out: dict[str, ModelStepTimes] = {}
+    for trace in traces:
+        stats = by_tenant.get(trace.model)
+        recs = [r for r in report.records if r.tenant == trace.model]
+        done = [r for r in recs if r.finish is not None]
+        span = (
+            max(r.finish for r in done) - min(r.arrival for r in recs)
+            if done
+            else math.nan
+        )
+        out[trace.model] = ModelStepTimes(
+            model=trace.model,
+            n_steps=trace.n_steps,
+            n_jobs=len(recs),
+            n_completed=len(done),
+            step_time=span / trace.n_steps if done else math.nan,
+            mean_cct=stats.mean_cct if stats else math.nan,
+            mean_queueing_delay=(
+                stats.mean_queueing_delay if stats else math.nan
+            ),
+        )
+    return out
+
+
+def replay_trace(
+    traces: CollectiveTrace | Sequence[CollectiveTrace],
+    fabric: OpticalFabric,
+    *,
+    overlap: bool = True,
+    options: PlannerOptions | None = None,
+    max_expand: int = DEFAULT_MAX_EXPAND,
+    size_scale: float = 1.0,
+    priorities: dict[str, int] | None = None,
+    tracer=None,
+    min_planes: int = 1,
+) -> tuple[ReplayReport, dict[str, ModelStepTimes]]:
+    """Replay model traces on a shared fabric; per-model step times.
+
+    ``overlap=False`` plans every job with the strawman-ICR baseline
+    (lockstep reconfigure-then-transmit on every plane) instead of the
+    SWOT planner, and paces dependent arrivals with strawman CCT
+    estimates (a non-overlapping system issues the next collective only
+    when the slower one finishes) -- the trace-driven version of the
+    paper's headline comparison.
+    """
+    if isinstance(traces, CollectiveTrace):
+        traces = [traces]
+    if options is None:
+        options = PlannerOptions(
+            method="greedy" if overlap else "strawman"
+        )
+    jobs = trace_to_jobs(
+        traces,
+        fabric,
+        options=options,
+        max_expand=max_expand,
+        size_scale=size_scale,
+        priorities=priorities,
+    )
+    report = replay(
+        jobs,
+        fabric,
+        method="greedy" if overlap else "strawman",
+        tracer=tracer,
+        solo_refs=False,
+        min_planes=min_planes,
+    )
+    return report, _step_times(traces, report)
+
+
+def overlap_comparison(
+    traces: CollectiveTrace | Sequence[CollectiveTrace],
+    fabric: OpticalFabric,
+    **kwargs,
+) -> dict[str, dict[str, float]]:
+    """Step-time with vs without reconfiguration-communication overlap.
+
+    Returns per model: ``step_time`` (SWOT), ``strawman_step_time``
+    (overlap off), and ``overlap_gain`` (fractional step-time reduction,
+    higher is better).
+    """
+    if isinstance(traces, CollectiveTrace):
+        traces = [traces]
+    _, on = replay_trace(traces, fabric, overlap=True, **kwargs)
+    _, off = replay_trace(traces, fabric, overlap=False, **kwargs)
+    out: dict[str, dict[str, float]] = {}
+    for trace in traces:
+        t_on = on[trace.model].step_time
+        t_off = off[trace.model].step_time
+        gain = (
+            1.0 - t_on / t_off
+            if t_off and not math.isnan(t_off) and t_off > 0
+            else math.nan
+        )
+        out[trace.model] = {
+            "step_time": t_on,
+            "strawman_step_time": t_off,
+            "overlap_gain": gain,
+        }
+    return out
+
+
+def _main(argv: Iterable[str] | None = None) -> int:
+    import argparse
+
+    from repro.trace.static import static_trace
+
+    parser = argparse.ArgumentParser(
+        description="Replay a model's collective trace on the fabric "
+        "arbiter, with and without reconfiguration overlap."
+    )
+    parser.add_argument("--arch", default="gemma_2b")
+    parser.add_argument(
+        "--kind", default="train", choices=("train", "prefill", "decode")
+    )
+    parser.add_argument("--steps", type=int, default=2)
+    parser.add_argument("--nodes", type=int, default=8)
+    parser.add_argument("--planes", type=int, default=4)
+    parser.add_argument("--t-recfg", type=float, default=200e-6)
+    parser.add_argument(
+        "--size-scale",
+        type=float,
+        default=1 / 256,
+        help="payload scale factor (keeps CLI replays fast)",
+    )
+    parser.add_argument(
+        "--trace-out",
+        default=None,
+        help="write a Chrome trace of the replay to this path",
+    )
+    args = parser.parse_args(list(argv) if argv is not None else None)
+
+    trace = static_trace(
+        args.arch,
+        kind=args.kind,
+        dp=max(args.nodes // 4, 2),
+        tp=4,
+        n_steps=args.steps,
+    )
+    fabric = OpticalFabric(
+        n_nodes=args.nodes, n_planes=args.planes, t_recfg=args.t_recfg
+    )
+    tracer = None
+    if args.trace_out:
+        from repro.obs.trace import ChromeTracer
+
+        tracer = ChromeTracer()
+    report, times = replay_trace(
+        trace,
+        fabric,
+        overlap=True,
+        size_scale=args.size_scale,
+        tracer=tracer,
+    )
+    comparison = overlap_comparison(
+        trace, fabric, size_scale=args.size_scale
+    )[trace.model]
+    print(
+        f"model={trace.model} source={trace.source} "
+        f"events/step={trace.n_events} steps={trace.n_steps}"
+    )
+    print(
+        f"jobs={len(report.records)} completed={len(report.completed)} "
+        f"makespan={report.makespan * 1e3:.3f}ms"
+    )
+    print(
+        f"step_time={comparison['step_time'] * 1e3:.3f}ms "
+        f"strawman={comparison['strawman_step_time'] * 1e3:.3f}ms "
+        f"overlap_gain={comparison['overlap_gain']:.3f}"
+    )
+    if args.trace_out:
+        tracer.write(args.trace_out)
+        print(f"chrome trace written to {args.trace_out}")
+    ok = (
+        len(report.completed) == len(report.records)
+        and comparison["overlap_gain"] >= 0
+    )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -1,0 +1,102 @@
+"""Runtime trace extraction: live instrumentation -> ``CollectiveTrace``.
+
+``TraceRecorder`` is the hook object the real model stack feeds:
+
+* `repro.train.loop.Trainer` (``recorder=``) records every collective
+  its shim intercepts per optimizer step and marks the step boundary;
+* `repro.serve.engine.ServeEngine.generate` (``recorder=``) records the
+  prefill step and each decode tick.
+
+The recorder accumulates (step, request, phase) observations; calling
+``to_trace()`` folds them into the shared schema: the first observed
+step becomes the per-step event template (events chained in issue
+order), ``n_steps`` counts observed boundaries, and ``cadence`` is the
+mean wall-clock gap between step boundaries (0.0 until two boundaries
+exist).  ``strict=True`` additionally verifies every later step issued
+the same collective sequence -- the property that makes replaying one
+step representative.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.shim import CollectiveRequest
+from repro.trace.records import CollectiveTrace, request_to_event
+
+
+class TraceRecorder:
+    """Accumulates per-step collective observations from live hooks."""
+
+    def __init__(self, model: str = "runtime", clock=time.perf_counter):
+        self.model = model
+        self._clock = clock
+        self._steps: list[list[tuple[CollectiveRequest, str]]] = [[]]
+        self._boundary_times: list[float] = []
+
+    # -- hook surface --------------------------------------------------------
+    def record(
+        self, request: CollectiveRequest, *, phase: str = "step"
+    ) -> None:
+        """One collective issued in the current step."""
+        self._steps[-1].append((request, phase))
+
+    def step_boundary(self) -> None:
+        """The current step finished; subsequent records open a new one."""
+        self._boundary_times.append(self._clock())
+        self._steps.append([])
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def n_steps(self) -> int:
+        """Completed steps (boundary-terminated)."""
+        return len(self._boundary_times)
+
+    @property
+    def n_records(self) -> int:
+        return sum(len(s) for s in self._steps)
+
+    def to_trace(self, *, strict: bool = False) -> CollectiveTrace:
+        """Fold the observations into a ``CollectiveTrace``.
+
+        Uses completed steps only (a trailing unterminated step is
+        dropped); with no completed step, the pending records count as
+        one.  ``strict=True`` raises if any later step's collective
+        sequence differs from the first step's (signature + phase).
+        """
+        steps = self._steps[: len(self._boundary_times)] or [
+            self._steps[0]
+        ]
+        template = steps[0]
+        if not template:
+            raise ValueError("recorder saw no collectives")
+        if strict:
+            sig = [(r.signature, p) for r, p in template]
+            for i, step in enumerate(steps[1:], start=2):
+                if [(r.signature, p) for r, p in step] != sig:
+                    raise ValueError(
+                        f"step {i} issued a different collective "
+                        "sequence than step 1; trace is not periodic"
+                    )
+        events = tuple(
+            request_to_event(
+                req, deps=(i - 1,) if i else (), phase=phase
+            )
+            for i, (req, phase) in enumerate(template)
+        )
+        cadence = 0.0
+        if len(self._boundary_times) >= 2:
+            gaps = [
+                b - a
+                for a, b in zip(
+                    self._boundary_times, self._boundary_times[1:]
+                )
+            ]
+            cadence = sum(gaps) / len(gaps)
+        return CollectiveTrace(
+            model=self.model,
+            source="runtime",
+            events=events,
+            cadence=cadence,
+            n_steps=max(len(steps), 1),
+        )

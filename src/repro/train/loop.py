@@ -146,6 +146,7 @@ class Trainer:
     checkpoint_dir: str | None = None
     checkpoint_every: int = 50
     shim: Any = None  # repro.core.shim.SwotShim, optional
+    recorder: Any = None  # repro.trace.TraceRecorder, optional
 
     def __post_init__(self):
         self._step_fn, self._state_sh = make_train_step(
@@ -195,6 +196,24 @@ class Trainer:
                 if self.shim is not None:
                     for req in getattr(self, "_requests", []):
                         self.shim.intercept(req)
+                        if self.recorder is not None:
+                            self.recorder.record(req, phase="train")
+                elif self.recorder is not None:
+                    # No shim installed: record the Phase-1 profile
+                    # directly so tracing does not require optics.
+                    if not hasattr(self, "_requests"):
+                        from repro.core.planner import profile_train_step
+
+                        self._requests = profile_train_step(
+                            self.model.cfg,
+                            self.model.ctx,
+                            self.cell,
+                            self.model.specs,
+                        )
+                    for req in self._requests:
+                        self.recorder.record(req, phase="train")
+                if self.recorder is not None:
+                    self.recorder.step_boundary()
                 step = int(state.step)
                 if step % log_every == 0 or step == 1:
                     loss = float(metrics["loss"])
