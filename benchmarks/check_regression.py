@@ -22,6 +22,12 @@ What is gated (and why):
   schedule hides behind transmission) and ``*_hit_rate`` (bypass
   steps served by relays): these fail when the current value falls
   *below* baseline by more than the band.
+* **Rate points, absolute band** -- fraction-valued lower-is-better
+  rows named ``*_miss_rate`` (per-tenant SLO deadline misses on the
+  scale replay) and ``*_exposed_frac`` (per-site exposed share of
+  reconfiguration time): deterministic simulated fractions in [0, 1],
+  failed when the current value exceeds baseline by more than the band
+  *absolutely* (baselines of exactly 0.0 stay gateable).
 * **Speedup ratios** -- ``speedup_vs_numpy`` per backend from
   ``BENCH_backends.json``, the INDEPENDENT-grid
   ``speedup_vs_per_instance``, the fused-planner
@@ -89,6 +95,13 @@ _TIMING_ROW = re.compile(
 # bypass/cache hit rate): gated on falling below baseline instead of
 # rising above it.
 _HIGHER_BETTER = re.compile(r"(overlap_eff|hit_rate|overlap_gain)$")
+# Fraction-valued lower-is-better rows (SLO deadline miss rates,
+# per-site exposed-reconfiguration fractions): values live in [0, 1]
+# and baselines are legitimately 0.0, so the band is *absolute* -- the
+# current rate may not exceed baseline + tolerance.  Checked before the
+# higher-is-better rule (``deadline_miss_rate`` must not fall through
+# to the relative rules).
+_RATE_ROW = re.compile(r"(miss_rate|exposed_frac)$")
 # Wall-clock-derived throughput rows (events/sec, speedup ratios):
 # higher is better, but absolute values track runner hardware, so the
 # band is deliberately wide -- only an order-of-magnitude collapse
@@ -167,7 +180,14 @@ def compare(
             failures.append(f"sweep point {name!r} missing from current run")
             continue
         cur = cur_sweep[name]
-        if _WIDE_BAND_ROW.search(name):
+        if _RATE_ROW.search(name):
+            if cur > base + tolerance:
+                failures.append(
+                    f"rate point {name!r} regressed: {cur:.3f} vs "
+                    f"baseline {base:.3f} (+{cur - base:.3f} absolute, "
+                    f"band is {tolerance:.2f})"
+                )
+        elif _WIDE_BAND_ROW.search(name):
             if base > 0 and cur < base * (1.0 - _WIDE_BAND):
                 failures.append(
                     f"throughput point {name!r} collapsed: {cur:.1f} vs "

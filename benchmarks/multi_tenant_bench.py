@@ -30,6 +30,7 @@ Two runtime-scale sections follow the sweep (ROADMAP item 2):
 
 from __future__ import annotations
 
+import re
 import time
 
 from repro.configs.registry import get_config
@@ -47,6 +48,8 @@ from repro.runtime import (
     poisson_trace,
     replay,
 )
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import SLOMonitor, SLOTarget
 from repro.trace import overlap_comparison, replay_trace, static_trace
 
 # Fleet-scale trace defaults (the gated 10k-job heavy-tailed replay).
@@ -54,6 +57,12 @@ _SCALE_JOBS = 10_000
 _SCALE_RATE = 60.0  # arrivals/s: bursty overlap without miss blowup
 _SCALE_SIGMA = 0.8  # lognormal size spread (pow2-snapped, see workload)
 _SCALE_SEED = 11
+# Per-tenant SLO deadline (arrival -> finish) for the scale replay's
+# miss-rate rows: picked so every tenant lands strictly inside (0, 1)
+# at the default scale knobs (p90..p99 responses straddle it -- the MoE
+# tenant misses ~18%, the small dense tenants <1%), keeping the gated
+# rates sensitive in both directions.
+_SLO_DEADLINE_S = 2e-3
 # Hard floor asserted in-run and gated in check_regression.py: warm
 # steady-state events/sec must beat the legacy per-job planning path by
 # this factor on the same machine in the same process.
@@ -120,11 +129,52 @@ def _assert_parity(legacy, optimized) -> None:
     assert legacy.events_fired == optimized.events_fired
 
 
+def _close(a: float, b: float, rel: float = 1e-9) -> bool:
+    return abs(a - b) <= rel * max(abs(a), abs(b), 1e-30)
+
+
+def _assert_stream_parity(acc, streamed) -> None:
+    """The memory-flat streamed replay must serve the accumulated
+    replay's statistics from its registry: counts and means exact (float
+    summation order aside), percentiles within the queue-wait
+    histogram's documented error bound."""
+    assert streamed.records == [], "streaming replay accumulated records"
+    assert streamed.n_jobs == acc.n_jobs
+    assert streamed.n_completed == acc.n_completed
+    assert _close(streamed.mean_cct, acc.mean_cct)
+    assert _close(streamed.mean_queueing_delay, acc.mean_queueing_delay)
+    err = (
+        streamed.metrics.get("fabric_queue_wait_seconds")
+        .aggregate()
+        .quantile_error
+    )
+
+    def in_bound(est: float, true: float) -> bool:
+        return true * (1 - 1e-9) <= est <= true * (1 + err) * (1 + 1e-9)
+
+    assert in_bound(streamed.p95_queueing_delay, acc.p95_queueing_delay)
+    assert in_bound(streamed.p99_queueing_delay, acc.p99_queueing_delay)
+    acc_tenants = acc.per_tenant()
+    str_tenants = streamed.per_tenant()
+    assert set(acc_tenants) == set(str_tenants)
+    for tenant, a in acc_tenants.items():
+        s = str_tenants[tenant]
+        assert (s.n_jobs, s.n_completed, s.n_rejected) == (
+            a.n_jobs, a.n_completed, a.n_rejected,
+        )
+        assert _close(s.total_bytes, a.total_bytes)
+        assert _close(s.mean_cct, a.mean_cct)
+        assert _close(s.mean_queueing_delay, a.mean_queueing_delay)
+        assert in_bound(s.p95_queueing_delay, a.p95_queueing_delay)
+        assert _close(s.overlap_efficiency, a.overlap_efficiency)
+
+
 def run(
     quick: bool = False,
     jobs: int | None = None,
     arrival: float | None = None,
     tracer=None,
+    metrics: MetricsRegistry | None = None,
 ) -> list[tuple[str, float, str]]:
     rows: list[tuple[str, float, str]] = []
     t_wall = time.perf_counter()
@@ -353,6 +403,64 @@ def run(
             f"{n_jobs}-job heavy-tailed trace generation (wall)",
         )
     )
+
+    # -- streaming replay: the same scale trace, memory-flat -------------
+    # No JobRecord list accumulates; every statistic (and the SLO rows
+    # below) comes from the live metrics registry.  Asserted in-run to
+    # match the accumulated warm replay within the histogram's
+    # documented quantile error bound.
+    reg = metrics if metrics is not None else MetricsRegistry()
+    slo = SLOMonitor(
+        default=SLOTarget(deadline=_SLO_DEADLINE_S), registry=reg
+    )
+    t0 = time.perf_counter()
+    streamed = replay(
+        scale_trace,
+        scale_fabric,
+        plan_cache=cache,
+        stream=True,
+        metrics=reg,
+        slo=slo,
+    )
+    t_stream = time.perf_counter() - t0
+    _assert_stream_parity(warm, streamed)
+    rows.append(
+        (
+            "mt_stream_events_per_sec",
+            streamed.events_fired / t_stream,
+            f"{streamed.events_fired} events streamed (no record list, "
+            f"{t_stream * 1e3:.0f}ms wall); stats match the accumulated "
+            "replay within histogram bounds (asserted)",
+        )
+    )
+    rows.append(
+        (
+            "mt_p99_wait_us",
+            warm.p99_queueing_delay * 1e6,
+            f"p99 admission wait over {warm.n_completed} scale jobs "
+            f"(streamed estimate {streamed.p99_queueing_delay * 1e6:.1f}"
+            "us from the log-bucketed histogram)",
+        )
+    )
+    for tenant, ts in sorted(warm.per_tenant().items()):
+        rows.append(
+            (
+                f"mt_scale_{tenant}_overlap_eff",
+                ts.overlap_efficiency,
+                f"hidden/(hidden+exposed) reconfiguration over "
+                f"{ts.n_completed} completed jobs",
+            )
+        )
+        rows.append(
+            (
+                f"mt_scale_{tenant}_deadline_miss_rate",
+                slo.miss_rate(tenant),
+                f"jobs finishing later than "
+                f"{_SLO_DEADLINE_S * 1e3:.0f}ms after arrival "
+                f"(windowed p99 {slo.window_quantiles(tenant)[2] * 1e3:.2f}ms)",
+            )
+        )
+
     # -- model-trace replay: closed-loop traces from the real model stack
     # Static per-step collective traces (repro.trace) replayed through
     # the arbiter with the SWOT planner vs the strawman-ICR baseline:
@@ -414,6 +522,28 @@ def run(
                 f"{tstats.mean_queueing_delay * 1e6:.1f}us",
             )
         )
+    # Per-collective-site exposed-reconfiguration fraction over the
+    # co-located replay (the attribution rollup, straight from the
+    # JobRecord components): exposed/(exposed+hidden), lower is better.
+    site_recfg: dict[str, list[float]] = {}
+    for r in colo_report.completed:
+        acc = site_recfg.setdefault(r.site, [0.0, 0.0, 0])
+        acc[0] += r.t_recfg_exposed
+        acc[1] += r.t_recfg_hidden
+        acc[2] += 1
+    for site, (exposed, hidden, n_done) in sorted(site_recfg.items()):
+        if exposed + hidden <= 0.0:
+            continue  # site carried no reconfigurations
+        slug = re.sub(r"[^0-9A-Za-z]+", "_", site).strip("_")
+        rows.append(
+            (
+                f"model_trace_site_{slug}_exposed_frac",
+                exposed / (exposed + hidden),
+                f"exposed share of {(exposed + hidden) * 1e6:.1f}us "
+                f"plane-mean reconfiguration over {n_done} jobs at "
+                f"site {site}",
+            )
+        )
     rows.append(
         (
             "mt_phase_model_trace_us",
@@ -434,6 +564,8 @@ def run(
 
 if __name__ == "__main__":
     import argparse
+    import contextlib
+    import json
 
     from repro.obs import ChromeTracer, get_logger
 
@@ -461,17 +593,39 @@ if __name__ == "__main__":
         default=None,
         help="record the cold scale replay with ChromeTracer to this file",
     )
+    parser.add_argument(
+        "--metrics-out",
+        metavar="BASE",
+        default=None,
+        help="export the streamed scale replay's live metrics to "
+        "BASE.json (full fidelity) and BASE.prom (Prometheus text)",
+    )
     args = parser.parse_args()
 
     log = get_logger("multi_tenant_bench")
-    tracer = ChromeTracer() if args.trace else None
-    for name, us, note in run(
-        quick=args.quick,
-        jobs=args.jobs,
-        arrival=args.arrival,
-        tracer=tracer,
-    ):
-        log.data(f"{name},{us:.1f},{note}")
+    metrics = MetricsRegistry() if args.metrics_out else None
+    # Context-managed tracer: the Chrome trace flushes even if a replay
+    # assertion trips mid-run.
+    with contextlib.ExitStack() as stack:
+        tracer = None
+        if args.trace:
+            tracer = stack.enter_context(ChromeTracer(path=args.trace))
+        for name, us, note in run(
+            quick=args.quick,
+            jobs=args.jobs,
+            arrival=args.arrival,
+            tracer=tracer,
+            metrics=metrics,
+        ):
+            log.data(f"{name},{us:.1f},{note}")
     if tracer is not None:
-        tracer.write(args.trace)
         log.info(f"wrote {args.trace}")
+    if args.metrics_out:
+        with open(args.metrics_out + ".json", "w") as fh:
+            json.dump(metrics.to_json(), fh)
+        with open(args.metrics_out + ".prom", "w") as fh:
+            fh.write(metrics.to_prometheus_text())
+        log.info(
+            f"wrote {args.metrics_out}.json and {args.metrics_out}.prom "
+            f"({len(metrics.families())} metric families)"
+        )

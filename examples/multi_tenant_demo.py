@@ -18,6 +18,7 @@ renders JSON lines).
 """
 
 import argparse
+import contextlib
 
 from repro.configs.registry import get_config
 from repro.core import OpticalFabric, get_pattern, swot_schedule
@@ -67,8 +68,14 @@ def main() -> None:
         f"{N_NODES} nodes x {N_PLANES} planes\n"
     )
 
-    tracer = ChromeTracer() if args.trace else None
-    report = replay(trace, fabric, method="greedy", tracer=tracer)
+    # Context-managed tracer: the trace file is written when the block
+    # exits, including on a mid-replay crash (partial traces still load
+    # in Perfetto).
+    with contextlib.ExitStack() as stack:
+        tracer = None
+        if args.trace:
+            tracer = stack.enter_context(ChromeTracer(path=args.trace))
+        report = replay(trace, fabric, method="greedy", tracer=tracer)
     log.info("== shared fabric (arbitrated) ==")
     log.info(report.summary())
 
@@ -103,7 +110,6 @@ def main() -> None:
     )
 
     if tracer is not None:
-        tracer.write(args.trace)
         log.info(
             f"\nwrote {len(tracer.events)} trace events to {args.trace} "
             "(open at https://ui.perfetto.dev)"

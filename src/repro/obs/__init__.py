@@ -13,8 +13,16 @@ Three answers to "where did the time go":
   (Perfetto-loadable; pid ``fabric``, one thread row per plane).
 * `repro.obs.log` -- the structured logger the examples and benchmark
   drivers use (``REPRO_LOG=`` plain | json | debug | quiet).
+* `repro.obs.metrics` -- the live metrics substrate: typed Counter /
+  Gauge / log-bucketed Histogram instruments with exact associative
+  ``merge()``, a ``MetricsRegistry`` with Prometheus-text and JSON
+  exporters, and the ``NULL_REGISTRY`` no-op default the runtime hot
+  paths are instrumented against.
+* `repro.obs.slo` -- per-tenant SLO monitors (deadline targets, windowed
+  response-time quantiles via histogram merge, miss counters) layered on
+  the metrics substrate.
 
-See DESIGN.md section 16.
+See DESIGN.md sections 16 and 20.
 """
 
 from repro.obs.attribution import (
@@ -23,8 +31,19 @@ from repro.obs.attribution import (
     build_attribution,
     closing_idle,
     component_sum,
+    step_barriers,
 )
 from repro.obs.log import ENV_LOG, ObsLogger, get_logger
+from repro.obs.metrics import (
+    NULL_REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullRegistry,
+    validate_prometheus_text,
+)
+from repro.obs.slo import SLOMonitor, SLOTarget, TenantSLO
 from repro.obs.trace import (
     JOBS_LANE,
     NULL_TRACER,
@@ -39,18 +58,29 @@ from repro.obs.trace import (
 __all__ = [
     "Attribution",
     "ChromeTracer",
+    "Counter",
     "ENV_LOG",
+    "Gauge",
+    "Histogram",
     "JOBS_LANE",
+    "MetricsRegistry",
+    "NULL_REGISTRY",
     "NULL_TRACER",
+    "NullRegistry",
     "NullTracer",
     "ObsLogger",
+    "SLOMonitor",
+    "SLOTarget",
+    "TenantSLO",
     "Tracer",
     "attribute",
     "build_attribution",
     "closing_idle",
     "component_sum",
     "get_logger",
+    "step_barriers",
     "trace_schedule",
+    "validate_prometheus_text",
     "validate_trace",
     "validate_trace_file",
 ]

@@ -49,7 +49,32 @@ __all__ = [
     "build_attribution",
     "closing_idle",
     "component_sum",
+    "step_barriers",
 ]
+
+
+def step_barriers(schedule: Schedule) -> tuple[float, ...]:
+    """Barrier in force entering each step, in schedule-relative time.
+
+    The running max of earlier steps' transmission-window ends (bypass
+    hops included) -- exactly the recurrence's carried barrier; steps
+    with no transmission activity inherit the previous barrier.  Shared
+    by ``attribute`` and the arbiter's incremental per-job attribution
+    (``CachedPlan.barriers``), so exposed-vs-hidden splits agree bitwise
+    between the post-hoc and live paths.
+    """
+    n_steps = schedule.pattern.n_steps
+    step_end = [-np.inf] * n_steps
+    for a in schedule.activities:
+        if a.kind is Kind.XMIT and a.end > step_end[a.step]:
+            step_end[a.step] = a.end
+    barriers = [0.0] * n_steps
+    running = 0.0
+    for i in range(n_steps):
+        barriers[i] = running
+        if step_end[i] > running:
+            running = step_end[i]
+    return tuple(barriers)
 
 
 def component_sum(
@@ -220,19 +245,7 @@ def attribute(schedule: Schedule) -> Attribution:
     t_wait = np.zeros((n_steps, n_planes))
     t_hidden = np.zeros((n_steps, n_planes))
 
-    # Barrier in force entering each step: the running max of earlier
-    # steps' transmission-window ends (bypass hops included), exactly the
-    # recurrence's carried barrier.  Zero-activity steps inherit it.
-    step_end = np.full(n_steps, -np.inf)
-    for a in schedule.activities:
-        if a.kind is Kind.XMIT:
-            step_end[a.step] = max(step_end[a.step], a.end)
-    barrier_before = np.zeros(n_steps)
-    running = 0.0
-    for i in range(n_steps):
-        barrier_before[i] = running
-        if np.isfinite(step_end[i]):
-            running = max(running, step_end[i])
+    barrier_before = step_barriers(schedule)
 
     chain = schedule.mode is DependencyMode.CHAIN
     for a in schedule.activities:

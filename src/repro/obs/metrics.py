@@ -1,0 +1,885 @@
+"""Typed live-metrics substrate: counters, gauges, mergeable histograms.
+
+The runtime's post-hoc observability (CCT attribution, Chrome traces)
+answers "where did the time go" after a replay ends; this module is the
+*live* half: instruments the arbiter/engine hot paths update in place,
+cheap enough to leave on, and a streaming replay can serve every report
+statistic from them without accumulating a record list (ROADMAP item 2's
+million-event memory flatness).
+
+Three instrument kinds, registered in a ``MetricsRegistry``:
+
+* ``Counter`` -- monotone float accumulator (``inc``);
+* ``Gauge``   -- last-write-wins level (``set``/``inc``/``dec``);
+* ``Histogram`` -- constant-memory log-bucketed distribution.
+
+**Histogram semantics.**  Positive observations land in geometric
+buckets: value ``v`` maps to bucket ``floor(resolution * log2(v))``, so
+each bucket spans a ``2**(1/resolution)`` growth factor (default
+resolution 16 -> ~4.4% per bucket); values <= 0 land in a dedicated zero
+bucket.  ``quantile(q)`` ranks observations exactly like
+``ReplayReport``'s percentile indexing (0-based rank
+``min(n-1, int(q*n))``) and returns the covering bucket's upper edge
+clamped to the observed max, which yields the documented error bound:
+for true rank value ``v``,
+
+    ``v <= quantile(q) <= v * 2**(1/resolution)``
+
+(up to one ulp of ``log2`` rounding at exact bucket edges).  ``merge``
+adds integer bucket counts -- **exact, associative and commutative** --
+so ``count``/``min``/``max`` and every quantile are invariant under any
+merge tree (shard-then-merge equals observing centrally).  ``sum`` is
+IEEE-754 addition: commutative-in-value but, like any float sum, only
+associative to rounding; means derived from it carry ~1 ulp per merge.
+
+**Exporters.**  ``to_prometheus_text`` emits the Prometheus text
+exposition format (histograms as cumulative ``_bucket{le=...}`` series
+plus ``_sum``/``_count``); ``to_json`` round-trips full fidelity
+(``from_json``), which is what makes registries mergeable across
+processes.  ``python -m repro.obs.metrics validate FILE...`` checks
+either format (the CI metrics-smoke job runs it); ``merge`` folds JSON
+exports into one registry.
+
+The default handle is ``NULL_REGISTRY`` (``enabled=False``): call sites
+follow the ``NullTracer`` discipline -- guard with one attribute load
+and skip instrument updates entirely when disabled.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from typing import Any, Iterable, Mapping
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_REGISTRY",
+    "NullRegistry",
+    "validate_prometheus_text",
+]
+
+DEFAULT_RESOLUTION = 16  # buckets per octave: 2**(1/16) ~ 4.43% growth
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def _check_name(name: str) -> None:
+    if not _NAME_RE.match(name):
+        raise ValueError(f"invalid metric name {name!r}")
+
+
+def _check_label(label: str) -> None:
+    if not _LABEL_RE.match(label) or label == "le":
+        raise ValueError(f"invalid label name {label!r}")
+
+
+def _escape(value: str) -> str:
+    return (
+        value.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+    )
+
+
+def _fmt(value: float) -> str:
+    if math.isnan(value):
+        return "NaN"
+    if math.isinf(value):
+        return "+Inf" if value > 0 else "-Inf"
+    return repr(float(value))
+
+
+# -- instrument children ----------------------------------------------------
+
+
+class _CounterValue:
+    """One (label-set) counter cell: monotone float accumulator."""
+
+    __slots__ = ("_value",)
+    kind = "counter"
+
+    def __init__(self) -> None:
+        self._value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(f"counter increment must be >= 0: {amount}")
+        self._value += amount
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class _GaugeValue:
+    """One (label-set) gauge cell: settable level."""
+
+    __slots__ = ("_value",)
+    kind = "gauge"
+
+    def __init__(self) -> None:
+        self._value = 0.0
+
+    def set(self, value: float) -> None:
+        self._value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        self._value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        self._value -= amount
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class _HistogramValue:
+    """One (label-set) histogram cell: log-bucketed counts.
+
+    Memory is O(occupied buckets) -- bounded by the observed dynamic
+    range times ``resolution`` (e.g. waits spanning 1us..1s at
+    resolution 16 occupy <= 320 buckets), independent of observation
+    count.  See the module docstring for merge/quantile semantics.
+    """
+
+    __slots__ = ("_resolution", "_buckets", "_zero", "_n", "_sum",
+                 "_min", "_max")
+    kind = "histogram"
+
+    def __init__(self, resolution: int = DEFAULT_RESOLUTION) -> None:
+        if resolution < 1:
+            raise ValueError("resolution must be >= 1")
+        self._resolution = resolution
+        self._buckets: dict[int, int] = {}
+        self._zero = 0  # observations <= 0.0
+        self._n = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+
+    @property
+    def resolution(self) -> int:
+        return self._resolution
+
+    @property
+    def quantile_error(self) -> float:
+        """Documented relative quantile error bound: the bucket growth
+        factor minus one (``quantile(q)`` never exceeds the true rank
+        value by more than this fraction, and never falls below it)."""
+        return 2.0 ** (1.0 / self._resolution) - 1.0
+
+    def observe(self, value: float) -> None:
+        value = float(value)
+        self._n += 1
+        self._sum += value
+        if value < self._min:
+            self._min = value
+        if value > self._max:
+            self._max = value
+        if value <= 0.0:
+            self._zero += 1
+            return
+        i = math.floor(self._resolution * math.log2(value))
+        self._buckets[i] = self._buckets.get(i, 0) + 1
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    @property
+    def min(self) -> float:
+        return self._min if self._n else math.nan
+
+    @property
+    def max(self) -> float:
+        return self._max if self._n else math.nan
+
+    @property
+    def mean(self) -> float:
+        return self._sum / self._n if self._n else math.nan
+
+    def quantile(self, q: float) -> float:
+        """Rank-``min(n-1, int(q*n))`` estimate (see module docstring)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1]: {q}")
+        if self._n == 0:
+            return math.nan
+        rank = min(self._n - 1, int(q * self._n))
+        cum = self._zero
+        if rank < cum:
+            return 0.0
+        for i in sorted(self._buckets):
+            cum += self._buckets[i]
+            if rank < cum:
+                edge = 2.0 ** ((i + 1) / self._resolution)
+                return min(edge, self._max)
+        return self._max  # unreachable: bucket counts cover every rank
+
+    def quantiles(self, qs: Iterable[float]) -> tuple[float, ...]:
+        return tuple(self.quantile(q) for q in qs)
+
+    def merge_from(self, other: "_HistogramValue") -> None:
+        """Fold ``other`` in: integer bucket adds (exact), float sum."""
+        if other._resolution != self._resolution:
+            raise ValueError(
+                f"cannot merge histograms with resolutions "
+                f"{self._resolution} and {other._resolution}"
+            )
+        self._n += other._n
+        self._sum += other._sum
+        self._zero += other._zero
+        for i, c in other._buckets.items():
+            self._buckets[i] = self._buckets.get(i, 0) + c
+        if other._min < self._min:
+            self._min = other._min
+        if other._max > self._max:
+            self._max = other._max
+
+    def merge(self, other: "_HistogramValue") -> "_HistogramValue":
+        """Pure merge: a new cell holding both distributions."""
+        out = _HistogramValue(self._resolution)
+        out.merge_from(self)
+        out.merge_from(other)
+        return out
+
+
+# -- metric families --------------------------------------------------------
+
+
+class _Family:
+    """A named metric with a fixed label schema; holds one cell per
+    observed label-value tuple (the classic Prometheus family shape).
+    Unlabeled metrics hold a single default cell and expose its methods
+    directly."""
+
+    _value_cls: type = _CounterValue
+
+    def __init__(
+        self,
+        name: str,
+        help: str = "",
+        labelnames: Iterable[str] = (),
+    ) -> None:
+        _check_name(name)
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        for label in self.labelnames:
+            _check_label(label)
+        self._children: dict[tuple[str, ...], Any] = {}
+
+    @property
+    def kind(self) -> str:
+        return self._value_cls.kind
+
+    def _new_child(self):
+        return self._value_cls()
+
+    def labels(self, *values: Any, **by_name: Any):
+        """The cell for one label-value tuple (created on first use)."""
+        if by_name:
+            if values:
+                raise ValueError("pass labels positionally or by name")
+            try:
+                values = tuple(by_name[ln] for ln in self.labelnames)
+            except KeyError as e:
+                raise ValueError(f"missing label {e.args[0]!r}") from None
+        key = tuple(str(v) for v in values)
+        if len(key) != len(self.labelnames):
+            raise ValueError(
+                f"{self.name} takes labels {self.labelnames}, got {key}"
+            )
+        child = self._children.get(key)
+        if child is None:
+            child = self._new_child()
+            self._children[key] = child
+        return child
+
+    def collect(self) -> dict[tuple[str, ...], Any]:
+        """Label tuple -> cell, sorted for stable export order."""
+        return dict(sorted(self._children.items()))
+
+    def _default(self):
+        if self.labelnames:
+            raise ValueError(
+                f"{self.name} requires labels {self.labelnames}"
+            )
+        return self.labels()
+
+
+class Counter(_Family):
+    _value_cls = _CounterValue
+
+    def inc(self, amount: float = 1.0) -> None:
+        self._default().inc(amount)
+
+    @property
+    def value(self) -> float:
+        return self._default().value
+
+
+class Gauge(_Family):
+    _value_cls = _GaugeValue
+
+    def set(self, value: float) -> None:
+        self._default().set(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        self._default().inc(amount)
+
+    def dec(self, amount: float = 1.0) -> None:
+        self._default().dec(amount)
+
+    @property
+    def value(self) -> float:
+        return self._default().value
+
+
+class Histogram(_Family):
+    _value_cls = _HistogramValue
+
+    def __init__(
+        self,
+        name: str,
+        help: str = "",
+        labelnames: Iterable[str] = (),
+        *,
+        resolution: int = DEFAULT_RESOLUTION,
+    ) -> None:
+        super().__init__(name, help, labelnames)
+        self.resolution = resolution
+
+    def _new_child(self) -> _HistogramValue:
+        return _HistogramValue(self.resolution)
+
+    def observe(self, value: float) -> None:
+        self._default().observe(value)
+
+    def quantile(self, q: float) -> float:
+        return self._default().quantile(q)
+
+    @property
+    def count(self) -> int:
+        return self._default().count
+
+    @property
+    def sum(self) -> float:
+        return self._default().sum
+
+    def aggregate(self) -> _HistogramValue:
+        """All label cells merged into one distribution (exact counts)."""
+        out = _HistogramValue(self.resolution)
+        for child in self._children.values():
+            out.merge_from(child)
+        return out
+
+
+# -- registry ---------------------------------------------------------------
+
+
+class MetricsRegistry:
+    """Create-or-get instrument registry with text/JSON exporters.
+
+    ``counter``/``gauge``/``histogram`` return the existing family when
+    the name is already registered (validating that kind and label
+    schema agree), so hot-path modules can declare their instruments
+    independently against one shared registry.
+    """
+
+    enabled: bool = True
+
+    def __init__(self) -> None:
+        self._families: dict[str, _Family] = {}
+
+    def _register(self, cls: type, name: str, help: str,
+                  labelnames: Iterable[str], **kwargs) -> Any:
+        fam = self._families.get(name)
+        if fam is None:
+            fam = cls(name, help, labelnames, **kwargs)
+            self._families[name] = fam
+            return fam
+        labelnames = tuple(labelnames)
+        if not isinstance(fam, cls) or fam.labelnames != labelnames:
+            raise ValueError(
+                f"metric {name!r} already registered as {fam.kind} with "
+                f"labels {fam.labelnames}"
+            )
+        if kwargs.get("resolution", getattr(fam, "resolution", None)) != (
+            getattr(fam, "resolution", None)
+        ):
+            raise ValueError(
+                f"histogram {name!r} already registered with resolution "
+                f"{fam.resolution}"
+            )
+        return fam
+
+    def counter(
+        self, name: str, help: str = "", labelnames: Iterable[str] = ()
+    ) -> Counter:
+        return self._register(Counter, name, help, labelnames)
+
+    def gauge(
+        self, name: str, help: str = "", labelnames: Iterable[str] = ()
+    ) -> Gauge:
+        return self._register(Gauge, name, help, labelnames)
+
+    def histogram(
+        self,
+        name: str,
+        help: str = "",
+        labelnames: Iterable[str] = (),
+        *,
+        resolution: int = DEFAULT_RESOLUTION,
+    ) -> Histogram:
+        return self._register(
+            Histogram, name, help, labelnames, resolution=resolution
+        )
+
+    def get(self, name: str) -> _Family | None:
+        return self._families.get(name)
+
+    def families(self) -> dict[str, _Family]:
+        return dict(sorted(self._families.items()))
+
+    # -- merge --------------------------------------------------------------
+    def merge_from(self, other: "MetricsRegistry") -> None:
+        """Fold ``other``'s families in (multi-shard rollup).
+
+        Counters and gauges merge additively (a summed gauge reads as
+        fleet total -- e.g. free planes across shards); histograms merge
+        exactly per the bucket-count semantics.  Kind/label mismatches
+        on a shared name raise.
+        """
+        for name, fam in other.families().items():
+            if isinstance(fam, Histogram):
+                mine = self.histogram(
+                    name, fam.help, fam.labelnames,
+                    resolution=fam.resolution,
+                )
+                for key, child in fam.collect().items():
+                    mine.labels(*key).merge_from(child)
+            elif isinstance(fam, Gauge):
+                mine = self.gauge(name, fam.help, fam.labelnames)
+                for key, child in fam.collect().items():
+                    mine.labels(*key).inc(child.value)
+            else:
+                mine = self.counter(name, fam.help, fam.labelnames)
+                for key, child in fam.collect().items():
+                    mine.labels(*key).inc(child.value)
+
+    # -- exporters ----------------------------------------------------------
+    def _label_str(
+        self, fam: _Family, key: tuple[str, ...], extra: str = ""
+    ) -> str:
+        parts = [
+            f'{ln}="{_escape(v)}"' for ln, v in zip(fam.labelnames, key)
+        ]
+        if extra:
+            parts.append(extra)
+        return "{" + ",".join(parts) + "}" if parts else ""
+
+    def to_prometheus_text(self) -> str:
+        """Prometheus text exposition format (0.0.4)."""
+        lines: list[str] = []
+        for name, fam in self.families().items():
+            if fam.help:
+                lines.append(f"# HELP {name} {_escape(fam.help)}")
+            lines.append(f"# TYPE {name} {fam.kind}")
+            for key, child in fam.collect().items():
+                if isinstance(child, _HistogramValue):
+                    cum = child._zero
+                    lines.append(
+                        f"{name}_bucket"
+                        f"{self._label_str(fam, key, extra=_le(0.0))}"
+                        f" {cum}"
+                    )
+                    for i in sorted(child._buckets):
+                        cum += child._buckets[i]
+                        edge = 2.0 ** ((i + 1) / child._resolution)
+                        lines.append(
+                            f"{name}_bucket"
+                            f"{self._label_str(fam, key, extra=_le(edge))}"
+                            f" {cum}"
+                        )
+                    lines.append(
+                        f"{name}_bucket"
+                        f"{self._label_str(fam, key, extra=_le(math.inf))}"
+                        f" {child._n}"
+                    )
+                    lines.append(
+                        f"{name}_sum{self._label_str(fam, key)}"
+                        f" {_fmt(child._sum)}"
+                    )
+                    lines.append(
+                        f"{name}_count{self._label_str(fam, key)}"
+                        f" {child._n}"
+                    )
+                else:
+                    lines.append(
+                        f"{name}{self._label_str(fam, key)}"
+                        f" {_fmt(child.value)}"
+                    )
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def to_json(self) -> dict[str, Any]:
+        """Full-fidelity export; ``from_json`` round-trips it."""
+        metrics: list[dict[str, Any]] = []
+        for name, fam in self.families().items():
+            entry: dict[str, Any] = {
+                "name": name,
+                "kind": fam.kind,
+                "help": fam.help,
+                "labelnames": list(fam.labelnames),
+                "samples": [],
+            }
+            if isinstance(fam, Histogram):
+                entry["resolution"] = fam.resolution
+            for key, child in fam.collect().items():
+                labels = dict(zip(fam.labelnames, key))
+                if isinstance(child, _HistogramValue):
+                    entry["samples"].append(
+                        {
+                            "labels": labels,
+                            "count": child._n,
+                            "sum": child._sum,
+                            "zero": child._zero,
+                            "min": child._min if child._n else None,
+                            "max": child._max if child._n else None,
+                            "buckets": {
+                                str(i): c
+                                for i, c in sorted(child._buckets.items())
+                            },
+                        }
+                    )
+                else:
+                    entry["samples"].append(
+                        {"labels": labels, "value": child.value}
+                    )
+            metrics.append(entry)
+        return {"version": 1, "metrics": metrics}
+
+    @classmethod
+    def from_json(cls, payload: Mapping[str, Any]) -> "MetricsRegistry":
+        """Rebuild a registry from ``to_json`` output (validating it)."""
+        if not isinstance(payload, Mapping) or "metrics" not in payload:
+            raise ValueError("metrics payload must have a 'metrics' list")
+        if payload.get("version") != 1:
+            raise ValueError(
+                f"unsupported metrics payload version "
+                f"{payload.get('version')!r}"
+            )
+        reg = cls()
+        for entry in payload["metrics"]:
+            kind = entry.get("kind")
+            name = entry.get("name", "")
+            labelnames = tuple(entry.get("labelnames", ()))
+            if kind == "histogram":
+                fam = reg.histogram(
+                    name,
+                    entry.get("help", ""),
+                    labelnames,
+                    resolution=int(entry.get(
+                        "resolution", DEFAULT_RESOLUTION
+                    )),
+                )
+            elif kind == "gauge":
+                fam = reg.gauge(name, entry.get("help", ""), labelnames)
+            elif kind == "counter":
+                fam = reg.counter(name, entry.get("help", ""), labelnames)
+            else:
+                raise ValueError(
+                    f"metric {name!r} has unknown kind {kind!r}"
+                )
+            for sample in entry.get("samples", ()):
+                labels = sample.get("labels", {})
+                key = tuple(str(labels[ln]) for ln in labelnames)
+                child = fam.labels(*key)
+                if kind == "histogram":
+                    child._n = int(sample["count"])
+                    child._sum = float(sample["sum"])
+                    child._zero = int(sample.get("zero", 0))
+                    child._min = (
+                        float(sample["min"])
+                        if sample.get("min") is not None
+                        else math.inf
+                    )
+                    child._max = (
+                        float(sample["max"])
+                        if sample.get("max") is not None
+                        else -math.inf
+                    )
+                    buckets = {
+                        int(i): int(c)
+                        for i, c in sample.get("buckets", {}).items()
+                    }
+                    if any(c < 0 for c in buckets.values()):
+                        raise ValueError(
+                            f"histogram {name!r} has negative bucket"
+                        )
+                    if sum(buckets.values()) + child._zero != child._n:
+                        raise ValueError(
+                            f"histogram {name!r} bucket counts do not "
+                            f"sum to count"
+                        )
+                    child._buckets = buckets
+                elif kind == "gauge":
+                    child.set(float(sample["value"]))
+                else:
+                    child.inc(float(sample["value"]))
+        return reg
+
+
+def _le(edge: float) -> str:
+    return f'le="{_fmt(edge)}"'
+
+
+class _NullInstrument:
+    """Shared no-op cell: every mutator is a pass, ``labels`` returns
+    itself, reads return empty values.  One instance serves every
+    instrument the ``NullRegistry`` hands out."""
+
+    enabled = False
+    kind = "null"
+    value = 0.0
+    count = 0
+    sum = 0.0
+    resolution = DEFAULT_RESOLUTION
+
+    def labels(self, *values: Any, **by_name: Any) -> "_NullInstrument":
+        return self
+
+    def inc(self, amount: float = 1.0) -> None:
+        pass
+
+    def dec(self, amount: float = 1.0) -> None:
+        pass
+
+    def set(self, value: float) -> None:
+        pass
+
+    def observe(self, value: float) -> None:
+        pass
+
+    def quantile(self, q: float) -> float:
+        return math.nan
+
+    def collect(self) -> dict:
+        return {}
+
+
+_NULL_INSTRUMENT = _NullInstrument()
+
+
+class NullRegistry(MetricsRegistry):
+    """Disabled registry: ``enabled=False`` and no-op instruments.
+
+    The metrics analogue of ``NULL_TRACER``: hot paths hold one of
+    these by default and guard every update with ``if metrics.enabled``,
+    so the disabled cost is a single attribute load per site.
+    """
+
+    enabled = False
+
+    def counter(self, name, help="", labelnames=()):  # type: ignore[override]
+        return _NULL_INSTRUMENT
+
+    def gauge(self, name, help="", labelnames=()):  # type: ignore[override]
+        return _NULL_INSTRUMENT
+
+    def histogram(self, name, help="", labelnames=(), *, resolution=DEFAULT_RESOLUTION):  # type: ignore[override]
+        return _NULL_INSTRUMENT
+
+
+NULL_REGISTRY = NullRegistry()
+
+
+# -- Prometheus text validation ---------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>\S+)(?:\s+\d+)?$"
+)
+_LABEL_PAIR_RE = re.compile(
+    r'\s*([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"\s*(?:,|$)'
+)
+_HIST_SUFFIX = ("_bucket", "_sum", "_count")
+
+
+def _parse_value(raw: str) -> float:
+    if raw == "+Inf":
+        return math.inf
+    if raw == "-Inf":
+        return -math.inf
+    if raw == "NaN":
+        return math.nan
+    return float(raw)  # raises ValueError on junk
+
+
+def validate_prometheus_text(text: str) -> int:
+    """Raise ``ValueError`` unless ``text`` is a well-formed exposition.
+
+    Checks the structure CI relies on: every sample line parses, every
+    sampled metric carries a ``# TYPE``, histogram ``_bucket`` series
+    are cumulative and non-decreasing in ``le`` order, end at ``+Inf``,
+    and agree with the family's ``_count``.  Returns the number of
+    sample lines checked.
+    """
+    types: dict[str, str] = {}
+    # (name, non-le labels) -> list of (le, cumulative count)
+    buckets: dict[tuple[str, tuple], list[tuple[float, float]]] = {}
+    counts: dict[tuple[str, tuple], float] = {}
+    n_samples = 0
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(None, 3)
+            if len(parts) < 4 or parts[3] not in (
+                "counter", "gauge", "histogram", "summary", "untyped"
+            ):
+                raise ValueError(f"line {lineno}: malformed TYPE: {line!r}")
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue  # HELP / comments: free-form
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"line {lineno}: unparseable sample: {line!r}")
+        name = m.group("name")
+        try:
+            value = _parse_value(m.group("value"))
+        except ValueError:
+            raise ValueError(
+                f"line {lineno}: bad sample value {m.group('value')!r}"
+            ) from None
+        labels: dict[str, str] = {}
+        raw = m.group("labels")
+        if raw:
+            consumed = 0
+            for pm in _LABEL_PAIR_RE.finditer(raw):
+                labels[pm.group(1)] = pm.group(2)
+                consumed = pm.end()
+            if consumed != len(raw):
+                raise ValueError(
+                    f"line {lineno}: malformed labels {raw!r}"
+                )
+        base = name
+        for suffix in _HIST_SUFFIX:
+            stem = name[: -len(suffix)] if name.endswith(suffix) else None
+            if stem and types.get(stem) == "histogram":
+                base = stem
+                break
+        if base not in types:
+            raise ValueError(
+                f"line {lineno}: sample {name!r} has no # TYPE"
+            )
+        n_samples += 1
+        if types[base] == "histogram" and name == f"{base}_bucket":
+            if "le" not in labels:
+                raise ValueError(
+                    f"line {lineno}: histogram bucket missing 'le'"
+                )
+            le = _parse_value(labels["le"])
+            key = (
+                base,
+                tuple(sorted(
+                    (k, v) for k, v in labels.items() if k != "le"
+                )),
+            )
+            buckets.setdefault(key, []).append((le, value))
+        elif types[base] == "histogram" and name == f"{base}_count":
+            key = (base, tuple(sorted(labels.items())))
+            counts[key] = value
+    for (base, lkey), series in buckets.items():
+        les = [le for le, _ in series]
+        if les != sorted(les):
+            raise ValueError(
+                f"histogram {base!r}{dict(lkey)}: 'le' edges not sorted"
+            )
+        cums = [c for _, c in series]
+        if any(b < a for a, b in zip(cums, cums[1:])):
+            raise ValueError(
+                f"histogram {base!r}{dict(lkey)}: cumulative bucket "
+                f"counts decrease"
+            )
+        if not math.isinf(les[-1]):
+            raise ValueError(
+                f"histogram {base!r}{dict(lkey)}: missing +Inf bucket"
+            )
+        total = counts.get((base, lkey))
+        if total is not None and total != cums[-1]:
+            raise ValueError(
+                f"histogram {base!r}{dict(lkey)}: _count {total} != "
+                f"+Inf bucket {cums[-1]}"
+            )
+    return n_samples
+
+
+# -- CLI --------------------------------------------------------------------
+
+
+def _validate_file(path: str) -> str:
+    if path.endswith(".json"):
+        with open(path) as fh:
+            reg = MetricsRegistry.from_json(json.load(fh))
+        return f"{path}: valid metrics JSON ({len(reg.families())} metrics)"
+    with open(path) as fh:
+        n = validate_prometheus_text(fh.read())
+    return f"{path}: valid Prometheus exposition ({n} samples)"
+
+
+def main(argv: list[str] | None = None) -> int:
+    """``python -m repro.obs.metrics {validate|merge} ...``."""
+    import sys
+
+    args = list(sys.argv[1:] if argv is None else argv)
+    usage = (
+        "usage: python -m repro.obs.metrics validate FILE...\n"
+        "       python -m repro.obs.metrics merge OUT.json IN.json..."
+    )
+    if not args:
+        print(usage)
+        return 2
+    cmd, rest = args[0], args[1:]
+    if cmd == "validate":
+        if not rest:
+            print(usage)
+            return 2
+        for path in rest:
+            try:
+                print(_validate_file(path))
+            except (ValueError, KeyError, json.JSONDecodeError) as e:
+                print(f"{path}: INVALID: {e}")
+                return 1
+        return 0
+    if cmd == "merge":
+        if len(rest) < 2:
+            print(usage)
+            return 2
+        out_path, in_paths = rest[0], rest[1:]
+        merged = MetricsRegistry()
+        for path in in_paths:
+            with open(path) as fh:
+                merged.merge_from(MetricsRegistry.from_json(json.load(fh)))
+        with open(out_path, "w") as fh:
+            json.dump(merged.to_json(), fh)
+        print(
+            f"merged {len(in_paths)} registries "
+            f"({len(merged.families())} metrics) -> {out_path}"
+        )
+        return 0
+    print(usage)
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

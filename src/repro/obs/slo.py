@@ -1,0 +1,243 @@
+"""Per-tenant SLO monitoring on top of the metrics substrate.
+
+An ``SLOMonitor`` watches completed/rejected ``JobRecord``s as they
+retire (one ``observe`` per record -- works identically in accumulated
+and streaming replay) and answers two questions per tenant:
+
+* **miss rate** -- the fraction of jobs violating that tenant's
+  ``SLOTarget`` (a response-time deadline, measured arrival->finish;
+  rejected jobs always count as misses);
+* **windowed latency quantiles** -- p50/p95/p99 over the last *k* time
+  windows, computed by merging per-window log-bucketed histograms
+  (exact merge, so "last 3 windows" equals one histogram that observed
+  those windows directly; error bounds are the histogram's).
+
+Window bookkeeping is constant-memory: each (tenant, window) pair keeps
+one bounded histogram and the monitor retains at most ``max_windows``
+windows per tenant, evicting the oldest.  Cumulative counters (jobs,
+misses) are fed to the registry at observe time, so eviction never
+loses totals.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Iterable, Mapping
+
+from .metrics import (
+    DEFAULT_RESOLUTION,
+    MetricsRegistry,
+    NULL_REGISTRY,
+    _HistogramValue,
+)
+
+__all__ = ["SLOTarget", "SLOMonitor", "TenantSLO"]
+
+
+@dataclass(frozen=True)
+class SLOTarget:
+    """A tenant's service objective.
+
+    ``deadline``: max acceptable response time (arrival -> finish),
+    seconds; ``None`` disables deadline checking (only rejections
+    count as misses).
+    """
+
+    deadline: float | None = None
+
+    def __post_init__(self) -> None:
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError(f"deadline must be > 0: {self.deadline}")
+
+
+@dataclass
+class TenantSLO:
+    """Snapshot row: one tenant's SLO standing."""
+
+    tenant: str
+    target: SLOTarget
+    n_jobs: int
+    n_miss: int
+    p50_response: float
+    p95_response: float
+    p99_response: float
+
+    @property
+    def miss_rate(self) -> float:
+        return self.n_miss / self.n_jobs if self.n_jobs else 0.0
+
+
+class _TenantState:
+    __slots__ = ("n_jobs", "n_miss", "windows")
+
+    def __init__(self) -> None:
+        self.n_jobs = 0
+        self.n_miss = 0
+        # window index -> response-time histogram (insertion-ordered,
+        # so eviction pops the oldest window first).
+        self.windows: dict[int, _HistogramValue] = {}
+
+
+class SLOMonitor:
+    """Tracks per-tenant deadline misses and windowed latency quantiles.
+
+    ``targets`` maps tenant name -> ``SLOTarget``; tenants not listed
+    fall back to ``default`` (or to rejection-only monitoring when no
+    default is given).  ``window`` is the bucketing period in sim
+    seconds; ``max_windows`` bounds retained history per tenant.
+
+    Pass a ``MetricsRegistry`` to additionally publish
+    ``slo_jobs_total{tenant}``, ``slo_deadline_miss_total{tenant}`` and
+    the ``slo_miss_rate{tenant}`` gauge on every observation.
+    """
+
+    def __init__(
+        self,
+        targets: Mapping[str, SLOTarget] | None = None,
+        *,
+        default: SLOTarget | None = None,
+        window: float = 60.0,
+        max_windows: int = 16,
+        resolution: int = DEFAULT_RESOLUTION,
+        registry: MetricsRegistry | None = None,
+    ) -> None:
+        if window <= 0:
+            raise ValueError(f"window must be > 0: {window}")
+        if max_windows < 1:
+            raise ValueError(f"max_windows must be >= 1: {max_windows}")
+        self.targets = dict(targets or {})
+        self.default = default
+        self.window = float(window)
+        self.max_windows = max_windows
+        self.resolution = resolution
+        self._tenants: dict[str, _TenantState] = {}
+        reg = registry if registry is not None else NULL_REGISTRY
+        self._m_on = reg.enabled
+        self._m_jobs = reg.counter(
+            "slo_jobs_total", "Jobs observed by the SLO monitor",
+            ("tenant",),
+        )
+        self._m_miss = reg.counter(
+            "slo_deadline_miss_total",
+            "Jobs that missed their tenant SLO (deadline or rejection)",
+            ("tenant",),
+        )
+        self._m_rate = reg.gauge(
+            "slo_miss_rate", "Current per-tenant SLO miss fraction",
+            ("tenant",),
+        )
+
+    def target_for(self, tenant: str) -> SLOTarget:
+        target = self.targets.get(tenant, self.default)
+        return target if target is not None else SLOTarget()
+
+    def observe(self, record: Any) -> bool:
+        """Fold one retired ``JobRecord`` in; returns True on a miss."""
+        tenant = record.tenant
+        state = self._tenants.get(tenant)
+        if state is None:
+            state = self._tenants[tenant] = _TenantState()
+        state.n_jobs += 1
+        target = self.target_for(tenant)
+        if record.rejected:
+            miss = True
+        else:
+            response = record.finish - record.arrival
+            miss = (
+                target.deadline is not None and response > target.deadline
+            )
+            idx = int(record.finish // self.window)
+            hist = state.windows.get(idx)
+            if hist is None:
+                hist = state.windows[idx] = _HistogramValue(
+                    self.resolution
+                )
+                while len(state.windows) > self.max_windows:
+                    state.windows.pop(next(iter(state.windows)))
+            hist.observe(response)
+        if miss:
+            state.n_miss += 1
+        if self._m_on:
+            self._m_jobs.labels(tenant).inc()
+            if miss:
+                self._m_miss.labels(tenant).inc()
+            self._m_rate.labels(tenant).set(state.n_miss / state.n_jobs)
+        return miss
+
+    # -- queries ------------------------------------------------------------
+    def tenants(self) -> tuple[str, ...]:
+        return tuple(sorted(self._tenants))
+
+    def miss_rate(self, tenant: str) -> float:
+        state = self._tenants.get(tenant)
+        if state is None or state.n_jobs == 0:
+            return 0.0
+        return state.n_miss / state.n_jobs
+
+    def window_histogram(
+        self, tenant: str, *, last: int | None = None
+    ) -> _HistogramValue:
+        """Response-time distribution over the last ``last`` retained
+        windows (all retained windows when ``None``), as one exact
+        histogram merge."""
+        out = _HistogramValue(self.resolution)
+        state = self._tenants.get(tenant)
+        if state is None:
+            return out
+        indices = sorted(state.windows)
+        if last is not None:
+            if last < 1:
+                raise ValueError(f"last must be >= 1: {last}")
+            indices = indices[-last:]
+        for idx in indices:
+            out.merge_from(state.windows[idx])
+        return out
+
+    def window_quantiles(
+        self,
+        tenant: str,
+        qs: Iterable[float] = (0.5, 0.95, 0.99),
+        *,
+        last: int | None = None,
+    ) -> tuple[float, ...]:
+        hist = self.window_histogram(tenant, last=last)
+        return tuple(hist.quantile(q) for q in qs)
+
+    def snapshot(self) -> dict[str, TenantSLO]:
+        """Per-tenant standing: totals plus whole-history quantiles."""
+        out: dict[str, TenantSLO] = {}
+        for tenant in self.tenants():
+            state = self._tenants[tenant]
+            p50, p95, p99 = self.window_quantiles(tenant)
+            out[tenant] = TenantSLO(
+                tenant=tenant,
+                target=self.target_for(tenant),
+                n_jobs=state.n_jobs,
+                n_miss=state.n_miss,
+                p50_response=p50,
+                p95_response=p95,
+                p99_response=p99,
+            )
+        return out
+
+    def summary(self) -> str:
+        rows = ["tenant            jobs  miss  rate   p50        p95        p99"]
+        for tenant, row in self.snapshot().items():
+            rows.append(
+                f"{tenant:<16} {row.n_jobs:>5} {row.n_miss:>5} "
+                f"{row.miss_rate:>5.1%}  "
+                f"{_fmt_s(row.p50_response)}  {_fmt_s(row.p95_response)}  "
+                f"{_fmt_s(row.p99_response)}"
+            )
+        return "\n".join(rows)
+
+
+def _fmt_s(seconds: float) -> str:
+    if math.isnan(seconds):
+        return "      nan"
+    if seconds < 1e-3:
+        return f"{seconds * 1e6:>7.1f}us"
+    if seconds < 1.0:
+        return f"{seconds * 1e3:>7.2f}ms"
+    return f"{seconds:>7.3f}s "

@@ -68,14 +68,32 @@ NULL_TRACER = NullTracer()
 
 
 class ChromeTracer(Tracer):
-    """In-memory recorder exporting Chrome trace-event JSON."""
+    """In-memory recorder exporting Chrome trace-event JSON.
+
+    Usable as a context manager: ``with ChromeTracer(path="out.json") as
+    tracer: ...`` writes the trace on exit *even when the body raises*,
+    so a demo that crashes mid-replay still leaves a valid, validatable
+    trace of everything recorded up to the failure.
+    """
 
     enabled = True
 
-    def __init__(self, process_name: str = "fabric") -> None:
+    def __init__(
+        self, process_name: str = "fabric", path: str | None = None
+    ) -> None:
         self.process_name = process_name
+        self.path = path
         self.events: list[dict[str, Any]] = []
         self._named_lanes: dict[int, str] = {}
+
+    def __enter__(self) -> "ChromeTracer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # Flush on both clean exit and exception; never swallow the
+        # in-flight exception (returning None propagates it).
+        if self.path is not None:
+            self.write(self.path)
 
     # -- recording ----------------------------------------------------------
     def span(

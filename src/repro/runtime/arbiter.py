@@ -128,6 +128,22 @@ class JobRecord:
     # Which workload the job belongs to (the JobSpec.tenant label);
     # purely descriptive -- admission and leasing never read it.
     tenant: str = ""
+    # Collective call-site label (threaded from TraceEvent.site_id via
+    # trace_to_jobs); empty for ad-hoc submissions -- metric rollups
+    # then fall back to ``tag``.
+    site_id: str = ""
+    # Live CCT attribution, accumulated as plan segments retire: each
+    # component is the *plane-mean* seconds over the job's lease (per
+    # segment), so once the job completes
+    # ``t_xmit + t_bypass + t_recfg_exposed + t_recfg_hidden + t_idle``
+    # equals ``cct`` bitwise -- ``t_idle`` is set at completion as the
+    # exact closing complement (it can dip below zero only when an
+    # in-flight reconfiguration runs past a resize boundary).
+    t_xmit: float = 0.0
+    t_bypass: float = 0.0
+    t_recfg_exposed: float = 0.0
+    t_recfg_hidden: float = 0.0
+    t_idle: float = 0.0
 
     @property
     def queueing_delay(self) -> float | None:
@@ -142,6 +158,21 @@ class JobRecord:
     @property
     def response_time(self) -> float | None:
         return None if self.finish is None else self.finish - self.arrival
+
+    @property
+    def site(self) -> str:
+        """Attribution-rollup label: ``site_id`` when threaded, else
+        the submission tag."""
+        return self.site_id or self.tag
+
+    @property
+    def overlap_efficiency(self) -> float | None:
+        """Hidden / (hidden + exposed) reconfiguration time for this
+        job; 1.0 when it carried none (vacuous), None until finished."""
+        if self.finish is None:
+            return None
+        total = self.t_recfg_hidden + self.t_recfg_exposed
+        return self.t_recfg_hidden / total if total > 0.0 else 1.0
 
 
 @dataclasses.dataclass
@@ -183,6 +214,7 @@ class _Job:
     target_planes: int = 0
     pending_planes: tuple[int, ...] = ()
     planned: bool = False
+    lease_since: float = 0.0  # last grant/resize instant (metrics only)
 
     @property
     def key(self) -> ConfigKey:
@@ -289,6 +321,9 @@ class FabricArbiter:
         optimize: bool = True,
         plan_cache: PlanCache | None = None,
         placement: str = "first_free",
+        metrics=None,
+        record_sink=None,
+        keep_records: bool = True,
     ) -> None:
         if min_planes < 1 or min_planes > fabric.n_planes:
             raise ValueError(
@@ -316,6 +351,19 @@ class FabricArbiter:
         # has enabled=False; every site below guards on that flag, so the
         # untraced cost is one attribute load per lifecycle event.
         self.tracer = NULL_TRACER if tracer is None else tracer
+        # Live metrics (repro.obs.metrics), same NULL-default discipline
+        # as the tracer: ``self._m_on`` is hoisted once and every update
+        # site guards on it.  ``record_sink`` receives each JobRecord in
+        # its final state (completion or rejection); ``keep_records=False``
+        # drops the accumulated ``records`` dict so streaming replays
+        # stay memory-flat (stats then come from the registry/sink).
+        from repro.obs.metrics import NULL_REGISTRY
+
+        self.metrics = NULL_REGISTRY if metrics is None else metrics
+        self.record_sink = record_sink
+        self.keep_records = keep_records
+        self._m_on = self.metrics.enabled
+        self._init_instruments()
         # Memoized hot path: plan + release-choice cache (DESIGN.md
         # section 18).  ``optimize=False`` disables every cached/batched
         # path and restores the per-job legacy behavior -- the reference
@@ -357,6 +405,134 @@ class FabricArbiter:
         self.tracer.counter("free_planes", now, len(self._free))
         self.tracer.counter("running_jobs", now, len(self._running))
 
+    def _init_instruments(self) -> None:
+        """Declare every live instrument against ``self.metrics``.
+
+        Against the NULL registry each call returns the shared no-op
+        instrument, so a disabled arbiter allocates nothing.
+        """
+        m = self.metrics
+        self._m_queue_wait = m.histogram(
+            "fabric_queue_wait_seconds",
+            "Admission queueing delay (arrival -> lease grant)",
+            ("tenant",),
+        )
+        self._m_lease_s = m.histogram(
+            "fabric_lease_seconds",
+            "Lease segment lifetime (grant/resize -> resize/completion)",
+            ("tenant",),
+        )
+        self._m_lease_planes = m.histogram(
+            "fabric_lease_planes", "Lease width at grant and resize"
+        )
+        self._m_cct = m.histogram(
+            "fabric_cct_seconds",
+            "Collective completion time (grant -> finish)",
+            ("tenant",),
+        )
+        self._m_jobs = m.counter(
+            "fabric_jobs_total", "Jobs submitted", ("tenant",)
+        )
+        self._m_completed = m.counter(
+            "fabric_jobs_completed_total", "Jobs completed", ("tenant",)
+        )
+        self._m_rejected = m.counter(
+            "fabric_jobs_rejected_total",
+            "Jobs rejected by backpressure",
+            ("tenant",),
+        )
+        self._m_bytes = m.counter(
+            "fabric_bytes_total", "Payload bytes completed", ("tenant",)
+        )
+        self._m_backpressure = m.counter(
+            "fabric_backpressure_total", "Backpressure rejections"
+        )
+        self._m_replans = m.counter(
+            "fabric_replans_total", "Lease-change re-plans"
+        )
+        self._mg_queue = m.gauge(
+            "fabric_queue_depth", "Jobs waiting for admission"
+        )
+        self._mg_free = m.gauge("fabric_free_planes", "Unleased planes")
+        self._mg_running = m.gauge(
+            "fabric_running_jobs", "Jobs holding a lease"
+        )
+        # Plan-cache counters, synced by delta from the bound cache's
+        # CacheStats at gauge-sample time (never inline per lookup).  A
+        # cache shared across arbiters reports fleet-wide totals.
+        self._m_cache_hits = m.counter(
+            "fabric_plan_cache_hits_total", "Plan-cache hits"
+        )
+        self._m_cache_misses = m.counter(
+            "fabric_plan_cache_misses_total", "Plan-cache misses"
+        )
+        self._m_plan_wall = m.counter(
+            "fabric_plan_wall_seconds_total",
+            "Wall time spent planning cache misses",
+        )
+        self._seen_hits = 0
+        self._seen_misses = 0
+        self._seen_wall = 0.0
+        self._seen_replans = 0
+        # Per-collective-site attribution rollups, fed at completion
+        # from the job's accumulated plane-mean components.
+        site_labels = ("tenant", "site")
+        self._m_site_jobs = m.counter(
+            "fabric_site_jobs_total",
+            "Jobs completed per collective site",
+            site_labels,
+        )
+        self._m_site_cct = m.counter(
+            "fabric_site_cct_seconds_total",
+            "CCT seconds per collective site",
+            site_labels,
+        )
+        self._m_site_xmit = m.counter(
+            "fabric_site_xmit_seconds_total",
+            "Plane-mean direct transmission seconds per site",
+            site_labels,
+        )
+        self._m_site_bypass = m.counter(
+            "fabric_site_bypass_seconds_total",
+            "Plane-mean relay-carry seconds per site",
+            site_labels,
+        )
+        self._m_site_exposed = m.counter(
+            "fabric_site_recfg_exposed_seconds_total",
+            "Plane-mean exposed reconfiguration seconds per site",
+            site_labels,
+        )
+        self._m_site_hidden = m.counter(
+            "fabric_site_recfg_hidden_seconds_total",
+            "Plane-mean overlapped reconfiguration seconds per site",
+            site_labels,
+        )
+        self._m_site_idle = m.counter(
+            "fabric_site_idle_seconds_total",
+            "Plane-mean closing idle seconds per site",
+            site_labels,
+        )
+
+    def _metric_gauges(self) -> None:
+        """Publish fabric levels + plan-cache counter deltas."""
+        self._mg_queue.set(len(self._waiting))
+        self._mg_free.set(len(self._free))
+        self._mg_running.set(len(self._running))
+        if self.stats.replans != self._seen_replans:
+            self._m_replans.inc(self.stats.replans - self._seen_replans)
+            self._seen_replans = self.stats.replans
+        if self._cache is not None:
+            st = self._cache.stats
+            if st.hits != self._seen_hits:
+                self._m_cache_hits.inc(st.hits - self._seen_hits)
+                self._seen_hits = st.hits
+            if st.misses != self._seen_misses:
+                self._m_cache_misses.inc(st.misses - self._seen_misses)
+                self._seen_misses = st.misses
+            if st.plan_wall_s != self._seen_wall:
+                self._m_plan_wall.inc(st.plan_wall_s - self._seen_wall)
+                self._seen_wall = st.plan_wall_s
+
     # -- physical prestaging ------------------------------------------------
     def prestage(self, req: CollectiveRequest) -> None:
         """Install ``req``'s first-step config on every plane (Fig. 5 setup).
@@ -377,13 +553,18 @@ class FabricArbiter:
         priority: int = 0,
         method: str | None = None,
         allow_independent: bool | None = None,
+        *,
+        tenant: str = "",
+        site_id: str = "",
     ) -> JobRecord:
         """Submit one collective; returns its (live) ``JobRecord``.
 
         The record's ``rejected`` flag is set when backpressure drops the
         job; otherwise the job is admitted now or queued.  ``method`` /
         ``allow_independent`` override the arbiter defaults per job (the
-        shim passes its own planning preferences through).
+        shim passes its own planning preferences through).  ``tenant`` /
+        ``site_id`` label the record for metric rollups; neither affects
+        admission or leasing.
         """
         job_id = next(self._ids)
         independent_ok = (
@@ -404,8 +585,13 @@ class FabricArbiter:
             size=req.size,
             priority=priority,
             arrival=self.engine.now,
+            tenant=tenant,
+            site_id=site_id,
         )
-        self.records[job_id] = record
+        if self.keep_records:
+            self.records[job_id] = record
+        if self._m_on:
+            self._m_jobs.labels(tenant).inc()
         job = _Job(
             job_id=job_id,
             req=req,
@@ -440,6 +626,12 @@ class FabricArbiter:
                     queue_depth=len(self._waiting),
                 )
                 self._trace_gauges()
+            if self._m_on:
+                self._m_backpressure.inc()
+                self._m_rejected.labels(tenant).inc()
+                self._metric_gauges()
+            if self.record_sink is not None:
+                self.record_sink(record)
             return record
         heapq.heappush(
             self._waiting, (-priority, next(self._wait_seq), job)
@@ -449,6 +641,8 @@ class FabricArbiter:
         self._drain_queue()
         if self.tracer.enabled:
             self._trace_gauges()
+        if self._m_on:
+            self._metric_gauges()
         return record
 
     def run_collective(
@@ -573,6 +767,12 @@ class FabricArbiter:
                 queueing_delay=now - job.record.arrival,
             )
             self._trace_gauges()
+        if self._m_on:
+            self._m_queue_wait.labels(job.record.tenant).observe(
+                now - job.record.arrival
+            )
+            self._m_lease_planes.observe(len(job.planes))
+            job.lease_since = now
         if deferred is None:
             self._plan(job)
         else:
@@ -839,6 +1039,8 @@ class FabricArbiter:
         """
         assert job.plan is not None and job.cached is not None
         trace = self.tracer.enabled
+        rec = job.record
+        n_p = len(job.planes)
         if (
             self._cache is not None
             and not trace
@@ -859,22 +1061,45 @@ class FabricArbiter:
                     self.stats.plane_busy.get(p, 0.0) + ret.busy
                 )
                 self.stats.reconfigurations += ret.recfgs
+                # Plane-mean attribution: identical per-plane sums and
+                # fold order as the walk below (see CachedPlan docs).
+                rec.t_xmit += ret.xmit / n_p
+                rec.t_bypass += ret.bypass / n_p
+                rec.t_recfg_exposed += ret.exposed / n_p
+                rec.t_recfg_hidden += ret.hidden / n_p
             job.plan = None
             job.cached = None
             return
         sub_fabric = job.plan.fabric
         rel_cutoff = cutoff - job.plan_t0  # plan times are plan-relative
+        barriers = job.cached.barriers()
+        chain = job.mode is DependencyMode.CHAIN
         for j, p in enumerate(job.planes):
             config = sub_fabric.initial_config(j)
             free_at = self._plane_free_at[p]
             busy = 0.0
             recfgs = 0
+            xmit = bypass = exposed = hidden = 0.0
             for a in job.cached.plane_activities(j):
                 if a.start >= rel_cutoff - _EPS:
                     continue  # never started: the re-plan supersedes it
                 if a.kind is Kind.RECFG:
                     config = a.config
                     recfgs += 1
+                    dur = a.duration
+                    if chain:
+                        b = barriers[a.step]
+                        wait = min(
+                            max(max(b, a.end) - max(b, a.start), 0.0), dur
+                        )
+                    else:
+                        wait = dur
+                    exposed += wait
+                    hidden += dur - wait
+                elif a.route >= 0:
+                    bypass += a.duration
+                else:
+                    xmit += a.duration
                 busy += a.duration
                 free_at = max(free_at, job.plan_t0 + a.end)
                 if trace:
@@ -905,6 +1130,10 @@ class FabricArbiter:
                 self.stats.plane_busy.get(p, 0.0) + busy
             )
             self.stats.reconfigurations += recfgs
+            rec.t_xmit += xmit / n_p
+            rec.t_bypass += bypass / n_p
+            rec.t_recfg_exposed += exposed / n_p
+            rec.t_recfg_hidden += hidden / n_p
         job.plan = None
         job.cached = None
 
@@ -1215,13 +1444,34 @@ class FabricArbiter:
         job.target_planes = len(job.planes)
         job.record.planes_min = min(job.record.planes_min, len(job.planes))
         job.record.planes_max = max(job.record.planes_max, len(job.planes))
+        if self._m_on and job.planes != before:
+            self._m_lease_planes.observe(len(job.planes))
+            self._m_lease_s.labels(job.record.tenant).observe(
+                now - job.lease_since
+            )
+            job.lease_since = now
         self._plan(job)
         self._drain_queue()
 
     def _complete(self, job: _Job) -> None:
         now = self.engine.now
         self._cut_plan(job, now)  # every activity started strictly before now
-        job.record.finish = now
+        rec = job.record
+        rec.finish = now
+        # Close the live attribution: t_idle is the exact complement of
+        # the accumulated components against the CCT (same ulp-refined
+        # construction as obs.attribution.closing_idle, scalar form).
+        cct = now - rec.start
+        comp = (
+            (rec.t_xmit + rec.t_bypass) + rec.t_recfg_exposed
+        ) + rec.t_recfg_hidden
+        idle = cct - comp
+        for _ in range(4):
+            err = cct - (comp + idle)
+            if err == 0.0:
+                break
+            idle += err
+        rec.t_idle = idle
         self.stats.completed += 1
         del self._running[job.job_id]
         self._free.update(job.planes)
@@ -1233,13 +1483,36 @@ class FabricArbiter:
                 "job_complete",
                 now,
                 job=job.job_id,
-                tag=job.record.tag,
-                cct=job.record.cct,
-                replans=job.record.replans,
+                tag=rec.tag,
+                cct=rec.cct,
+                replans=rec.replans,
             )
+        if self._m_on:
+            tenant = rec.tenant
+            self._m_completed.labels(tenant).inc()
+            self._m_bytes.labels(tenant).inc(rec.size)
+            self._m_cct.labels(tenant).observe(cct)
+            self._m_lease_s.labels(tenant).observe(now - job.lease_since)
+            site = rec.site
+            self._m_site_jobs.labels(tenant, site).inc()
+            self._m_site_cct.labels(tenant, site).inc(cct)
+            self._m_site_xmit.labels(tenant, site).inc(rec.t_xmit)
+            self._m_site_bypass.labels(tenant, site).inc(rec.t_bypass)
+            self._m_site_exposed.labels(tenant, site).inc(
+                rec.t_recfg_exposed
+            )
+            self._m_site_hidden.labels(tenant, site).inc(
+                rec.t_recfg_hidden
+            )
+            if rec.t_idle >= 0.0:
+                self._m_site_idle.labels(tenant, site).inc(rec.t_idle)
+        if self.record_sink is not None:
+            self.record_sink(rec)
         self._drain_queue()
         if self.tracer.enabled:
             self._trace_gauges()
+        if self._m_on:
+            self._metric_gauges()
 
     # -- introspection ------------------------------------------------------
     @property

@@ -57,11 +57,13 @@ class SimEngine:
 
     ``tracer`` (default: the no-op ``NULL_TRACER``) samples the
     ``sim_events`` counter at every fired event, giving traces an
-    event-density track; the disabled cost is one attribute check per
-    event.
+    event-density track; ``metrics`` (default: ``NULL_REGISTRY``) keeps
+    a live ``sim_events_total`` counter the same way.  The disabled cost
+    of either is one attribute check per event.
     """
 
-    def __init__(self, tracer=None) -> None:
+    def __init__(self, tracer=None, *, metrics=None) -> None:
+        from repro.obs.metrics import NULL_REGISTRY
         from repro.obs.trace import NULL_TRACER
 
         self.now = 0.0
@@ -69,6 +71,10 @@ class SimEngine:
         self._seq = 0
         self.events_fired = 0
         self.tracer = NULL_TRACER if tracer is None else tracer
+        self.metrics = NULL_REGISTRY if metrics is None else metrics
+        self._m_events = self.metrics.counter(
+            "sim_events_total", "Simulation events fired"
+        )
 
     def at(self, time: float, fn: Callable[[], Any]) -> EventHandle:
         """Schedule ``fn`` to run at absolute simulated ``time``."""
@@ -106,6 +112,8 @@ class SimEngine:
         pop = heapq.heappop
         tracer = self.tracer
         trace = tracer.enabled
+        m_on = self.metrics.enabled
+        m_events = self._m_events
         while heap:
             entry = heap[0]
             if entry.cancelled:
@@ -119,6 +127,8 @@ class SimEngine:
             self.events_fired += 1
             if trace:
                 tracer.counter("sim_events", self.now, self.events_fired)
+            if m_on:
+                m_events.inc()
             entry.fn()
         if until is not None:
             self.now = max(self.now, until)
@@ -136,6 +146,8 @@ class SimEngine:
                 self.tracer.counter(
                     "sim_events", self.now, self.events_fired
                 )
+            if self.metrics.enabled:
+                self._m_events.inc()
             entry.fn()
             return True
         return False

@@ -42,7 +42,7 @@ import dataclasses
 from collections import OrderedDict
 from typing import TYPE_CHECKING, Hashable
 
-from repro.core.schedule import Kind
+from repro.core.schedule import DependencyMode, Kind
 from repro.core.tolerances import EPS as _EPS
 
 if TYPE_CHECKING:
@@ -75,6 +75,13 @@ class _PlaneRetirement:
     recfgs: int
     final_config: int | None  # installed config after the last RECFG
     max_end_rel: float | None  # latest retired end, plan-relative
+    # CCT attribution components for this plane, accumulated in the same
+    # (start, end)-sorted activity order as the arbiter's walk path, so
+    # the fast-retire path reproduces the per-job rollup bit for bit.
+    xmit: float = 0.0  # direct transmission time
+    bypass: float = 0.0  # relay-hop carry time
+    exposed: float = 0.0  # reconfiguration time past the step barrier
+    hidden: float = 0.0  # reconfiguration time behind the barrier
 
 
 class CachedPlan:
@@ -93,6 +100,7 @@ class CachedPlan:
         "boundaries_rel",
         "_by_plane",
         "_retirement",
+        "_barriers",
     )
 
     def __init__(
@@ -103,6 +111,16 @@ class CachedPlan:
         self.boundaries_rel = boundaries_rel
         self._by_plane: list[list] | None = None
         self._retirement: list[_PlaneRetirement] | None = None
+        self._barriers: tuple[float, ...] | None = None
+
+    def barriers(self) -> tuple[float, ...]:
+        """Per-step barriers (plan-relative), via ``obs.step_barriers``
+        -- computed once, shared by every cut of this plan."""
+        if self._barriers is None:
+            from repro.obs.attribution import step_barriers
+
+            self._barriers = step_barriers(self.schedule)
+        return self._barriers
 
     def plane_activities(self, plane: int) -> list:
         """Activities of ``plane``, sorted by (start, end) -- computed once."""
@@ -129,19 +147,37 @@ class CachedPlan:
         if self._retirement is None:
             rel_cutoff = self.boundaries_rel[-1]
             sub_fabric = self.schedule.fabric
+            barriers = self.barriers()
+            chain = self.schedule.mode is DependencyMode.CHAIN
             out: list[_PlaneRetirement] = []
             for j in range(sub_fabric.n_planes):
                 config = sub_fabric.initial_config(j)
                 busy = 0.0
                 recfgs = 0
                 max_end: float | None = None
+                xmit = bypass = exposed = hidden = 0.0
                 for a in self.plane_activities(j):
                     if a.start >= rel_cutoff - _EPS:
                         continue  # never started before the final boundary
+                    dur = a.duration
                     if a.kind is Kind.RECFG:
                         config = a.config
                         recfgs += 1
-                    busy += a.duration
+                        if chain:
+                            b = barriers[a.step]
+                            wait = min(
+                                max(max(b, a.end) - max(b, a.start), 0.0),
+                                dur,
+                            )
+                        else:
+                            wait = dur
+                        exposed += wait
+                        hidden += dur - wait
+                    elif a.route >= 0:
+                        bypass += dur
+                    else:
+                        xmit += dur
+                    busy += dur
                     max_end = (
                         a.end if max_end is None else max(max_end, a.end)
                     )
@@ -151,6 +187,10 @@ class CachedPlan:
                         recfgs=recfgs,
                         final_config=config,
                         max_end_rel=max_end,
+                        xmit=xmit,
+                        bypass=bypass,
+                        exposed=exposed,
+                        hidden=hidden,
                     )
                 )
             self._retirement = out

@@ -14,6 +14,7 @@ arrivals from ``random.Random(seed)``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import random
 from typing import Iterable, Sequence
@@ -97,6 +98,10 @@ class JobSpec:
     request: CollectiveRequest
     priority: int = 0
     tenant: str = ""
+    # Collective call-site label for attribution rollups (threaded from
+    # TraceEvent.site_id by trace_to_jobs); empty falls back to the
+    # request tag.
+    site_id: str = ""
 
 
 def poisson_trace(
@@ -250,6 +255,10 @@ class TenantStats:
     mean_queueing_delay: float  # NaN when the tenant started nothing
     p95_queueing_delay: float  # NaN when the tenant started nothing
     total_bytes: float  # sum of completed jobs' request sizes
+    p99_queueing_delay: float = math.nan
+    # Aggregate hidden/(hidden+exposed) reconfiguration time over the
+    # tenant's completed jobs; 1.0 when none carried reconfigurations.
+    overlap_efficiency: float = 1.0
 
 
 def _mean_cct(records: Sequence[JobRecord]) -> float:
@@ -265,21 +274,42 @@ def _queueing_delays(records: Sequence[JobRecord]) -> list[float]:
     )
 
 
+def _percentile(delays: Sequence[float], q: float) -> float:
+    """Rank ``min(n-1, int(q*n))`` of an already-sorted list (the same
+    indexing the metrics histogram's ``quantile`` uses); NaN on empty."""
+    if not delays:
+        return math.nan
+    return delays[min(len(delays) - 1, int(q * len(delays)))]
+
+
 def _mean_queueing_delay(records: Sequence[JobRecord]) -> float:
     delays = _queueing_delays(records)
     return sum(delays) / len(delays) if delays else math.nan
 
 
-def _p95_queueing_delay(records: Sequence[JobRecord]) -> float:
-    delays = _queueing_delays(records)
-    if not delays:
-        return math.nan
-    return delays[min(len(delays) - 1, int(0.95 * len(delays)))]
+def _overlap_efficiency(records: Sequence[JobRecord]) -> float:
+    hidden = sum(
+        r.t_recfg_hidden for r in records if r.finish is not None
+    )
+    exposed = sum(
+        r.t_recfg_exposed for r in records if r.finish is not None
+    )
+    total = hidden + exposed
+    return hidden / total if total > 0.0 else 1.0
 
 
 @dataclasses.dataclass
 class ReplayReport:
-    """Outcome of replaying one trace on one fabric."""
+    """Outcome of replaying one trace on one fabric.
+
+    Statistics are served from ``records`` when the replay accumulated
+    them (the default), and from the live ``metrics`` registry when it
+    streamed (``records`` empty): counts and means are then exact, and
+    percentiles come from the log-bucketed queue-wait histogram within
+    its documented error bound (~4.4% at the default resolution).  The
+    sorted-delay list behind the record-path percentiles is computed
+    once per report, not per property access.
+    """
 
     fabric: OpticalFabric
     records: list[JobRecord]
@@ -288,27 +318,74 @@ class ReplayReport:
     solo_cct: dict[tuple, float]  # signature -> whole-fabric solo CCT
     events_fired: int = 0  # simulation events the replay processed
     cache: CacheStats | None = None  # plan-cache counters (optimize=True)
+    metrics: object | None = None  # MetricsRegistry when instrumented
+    slo: object | None = None  # SLOMonitor when attached
 
     @property
     def completed(self) -> list[JobRecord]:
         return [r for r in self.records if r.finish is not None]
 
+    @functools.cached_property
+    def _sorted_delays(self) -> list[float]:
+        return _queueing_delays(self.records)
+
+    def _wait_hist(self):
+        """Aggregated queue-wait histogram, or None when unavailable."""
+        if self.metrics is None:
+            return None
+        fam = self.metrics.get("fabric_queue_wait_seconds")
+        return None if fam is None else fam.aggregate()
+
+    @property
+    def n_jobs(self) -> int:
+        """Total jobs submitted (works with or without ``records``)."""
+        if self.records:
+            return len(self.records)
+        return self.stats.admitted + self.stats.rejected
+
+    @property
+    def n_completed(self) -> int:
+        return len(self.completed) if self.records else (
+            self.stats.completed
+        )
+
     @property
     def mean_cct(self) -> float:
         """Mean CCT over completed jobs; NaN when nothing completed
         (NaN, unlike 0.0, cannot be mistaken for a perfect fabric)."""
-        return _mean_cct(self.records)
+        if self.records:
+            return _mean_cct(self.records)
+        if self.metrics is not None:
+            fam = self.metrics.get("fabric_cct_seconds")
+            if fam is not None:
+                return fam.aggregate().mean
+        return math.nan
 
     @property
     def mean_queueing_delay(self) -> float:
         """Mean admission wait over started jobs; NaN when nothing
         started."""
-        return _mean_queueing_delay(self.records)
+        if self.records:
+            delays = self._sorted_delays
+            return sum(delays) / len(delays) if delays else math.nan
+        hist = self._wait_hist()
+        return hist.mean if hist is not None else math.nan
+
+    def _delay_quantile(self, q: float) -> float:
+        if self.records:
+            return _percentile(self._sorted_delays, q)
+        hist = self._wait_hist()
+        return hist.quantile(q) if hist is not None else math.nan
 
     @property
     def p95_queueing_delay(self) -> float:
         """95th-percentile admission wait; NaN when nothing started."""
-        return _p95_queueing_delay(self.records)
+        return self._delay_quantile(0.95)
+
+    @property
+    def p99_queueing_delay(self) -> float:
+        """99th-percentile admission wait; NaN when nothing started."""
+        return self._delay_quantile(0.99)
 
     def per_tenant(self) -> dict[str, TenantStats]:
         """Break the replay down by ``JobSpec.tenant`` label.
@@ -316,12 +393,18 @@ class ReplayReport:
         Jobs submitted without a tenant group under ``""``.  Keys are
         sorted for stable iteration; per-tenant means/percentiles follow
         the NaN-on-empty convention of the report-level properties.
+        Streamed replays serve the same rows from the registry (counts,
+        means, bytes exact; percentiles histogram-bounded).
         """
+        if not self.records and self.metrics is not None:
+            return self._per_tenant_from_metrics()
         groups: dict[str, list[JobRecord]] = {}
         for r in self.records:
             groups.setdefault(r.tenant, []).append(r)
-        return {
-            tenant: TenantStats(
+        out = {}
+        for tenant, recs in sorted(groups.items()):
+            delays = _queueing_delays(recs)
+            out[tenant] = TenantStats(
                 tenant=tenant,
                 n_jobs=len(recs),
                 n_completed=sum(
@@ -329,14 +412,78 @@ class ReplayReport:
                 ),
                 n_rejected=sum(1 for r in recs if r.rejected),
                 mean_cct=_mean_cct(recs),
-                mean_queueing_delay=_mean_queueing_delay(recs),
-                p95_queueing_delay=_p95_queueing_delay(recs),
+                mean_queueing_delay=(
+                    sum(delays) / len(delays) if delays else math.nan
+                ),
+                p95_queueing_delay=_percentile(delays, 0.95),
+                p99_queueing_delay=_percentile(delays, 0.99),
                 total_bytes=sum(
                     r.size for r in recs if r.finish is not None
                 ),
+                overlap_efficiency=_overlap_efficiency(recs),
             )
-            for tenant, recs in sorted(groups.items())
-        }
+        return out
+
+    def _per_tenant_from_metrics(self) -> dict[str, TenantStats]:
+        reg = self.metrics
+
+        def fam_value(name: str, tenant: str) -> float:
+            fam = reg.get(name)
+            if fam is None:
+                return 0.0
+            child = fam.collect().get((tenant,))
+            return child.value if child is not None else 0.0
+
+        jobs_fam = reg.get("fabric_jobs_total")
+        tenants = sorted(
+            key[0] for key in (jobs_fam.collect() if jobs_fam else {})
+        )
+        wait_fam = reg.get("fabric_queue_wait_seconds")
+        cct_fam = reg.get("fabric_cct_seconds")
+        hidden_fam = reg.get("fabric_site_recfg_hidden_seconds_total")
+        exposed_fam = reg.get("fabric_site_recfg_exposed_seconds_total")
+        out = {}
+        for tenant in tenants:
+            wait = (
+                wait_fam.collect().get((tenant,)) if wait_fam else None
+            )
+            cct = cct_fam.collect().get((tenant,)) if cct_fam else None
+            hidden = sum(
+                c.value
+                for key, c in (hidden_fam.collect() if hidden_fam else {}).items()
+                if key[0] == tenant
+            )
+            exposed = sum(
+                c.value
+                for key, c in (exposed_fam.collect() if exposed_fam else {}).items()
+                if key[0] == tenant
+            )
+            recfg_total = hidden + exposed
+            out[tenant] = TenantStats(
+                tenant=tenant,
+                n_jobs=int(fam_value("fabric_jobs_total", tenant)),
+                n_completed=int(
+                    fam_value("fabric_jobs_completed_total", tenant)
+                ),
+                n_rejected=int(
+                    fam_value("fabric_jobs_rejected_total", tenant)
+                ),
+                mean_cct=cct.mean if cct is not None else math.nan,
+                mean_queueing_delay=(
+                    wait.mean if wait is not None else math.nan
+                ),
+                p95_queueing_delay=(
+                    wait.quantile(0.95) if wait is not None else math.nan
+                ),
+                p99_queueing_delay=(
+                    wait.quantile(0.99) if wait is not None else math.nan
+                ),
+                total_bytes=fam_value("fabric_bytes_total", tenant),
+                overlap_efficiency=(
+                    hidden / recfg_total if recfg_total > 0.0 else 1.0
+                ),
+            )
+        return out
 
     @property
     def utilization(self) -> float:
@@ -353,12 +500,13 @@ class ReplayReport:
 
     def summary(self) -> str:
         lines = [
-            f"{len(self.completed)}/{len(self.records)} jobs completed, "
+            f"{self.n_completed}/{self.n_jobs} jobs completed, "
             f"{self.stats.rejected} rejected, makespan "
             f"{self.makespan * 1e3:.2f} ms",
             f"mean CCT {self.mean_cct * 1e6:.1f} us, mean queueing "
             f"{self.mean_queueing_delay * 1e6:.1f} us (p95 "
-            f"{self.p95_queueing_delay * 1e6:.1f} us)",
+            f"{self.p95_queueing_delay * 1e6:.1f} us, p99 "
+            f"{self.p99_queueing_delay * 1e6:.1f} us)",
             f"plane utilization {self.utilization:.1%}, mean slowdown vs "
             f"solo {self.mean_slowdown():.2f}x, {self.stats.replans} "
             f"re-plans",
@@ -370,6 +518,8 @@ class ReplayReport:
                 f"({self.cache.hit_rate:.1%}), "
                 f"{self.cache.plan_wall_s:.2f} s planning"
             )
+        if self.slo is not None:
+            lines.append(self.slo.summary())
         return "\n".join(lines)
 
 
@@ -388,6 +538,10 @@ def replay(
     placement: str = "first_free",
     plan_cache: PlanCache | None = None,
     solo_refs: bool = True,
+    metrics=None,
+    slo=None,
+    stream: bool = False,
+    record_sink=None,
 ) -> ReplayReport:
     """Replay ``trace`` through a fresh engine + arbiter; returns stats.
 
@@ -401,8 +555,32 @@ def replay(
     ``solo_refs=False`` skips the per-signature whole-fabric reference
     plans (the report's ``solo_cct``/slowdown), which at fleet scale cost
     more than the replay itself.
+
+    ``metrics`` attaches a live ``repro.obs.MetricsRegistry``; ``slo`` an
+    ``SLOMonitor`` that observes each record as it retires.  ``stream``
+    makes the replay memory-flat: no ``JobRecord`` list accumulates (the
+    report's ``records`` stays empty and its statistics come from the
+    registry -- one is created automatically if not passed), arrivals are
+    scheduled one-ahead instead of all upfront, and each record flows to
+    ``record_sink`` (if given) in its final state.  Streaming implies
+    ``solo_refs=False``.
     """
-    engine = SimEngine(tracer=tracer)
+    if stream and metrics is None:
+        from repro.obs.metrics import MetricsRegistry
+
+        metrics = MetricsRegistry()
+    done_cbs = []
+    if slo is not None:
+        done_cbs.append(slo.observe)
+    if record_sink is not None:
+        done_cbs.append(record_sink)
+    sink = None
+    if done_cbs:
+        def sink(record: JobRecord) -> None:
+            for cb in done_cbs:
+                cb(record)
+
+    engine = SimEngine(tracer=tracer, metrics=metrics)
     arbiter = FabricArbiter(
         engine,
         fabric,
@@ -416,20 +594,53 @@ def replay(
         optimize=optimize,
         placement=placement,
         plan_cache=plan_cache,
+        metrics=metrics,
+        record_sink=sink,
+        keep_records=not stream,
     )
     specs = sorted(trace, key=lambda s: s.arrival)
     records: list[JobRecord] = []
 
-    def make_submit(spec: JobSpec):
-        def fire() -> None:
-            record = arbiter.submit(spec.request, spec.priority)
-            record.tenant = spec.tenant
-            records.append(record)
+    if stream:
+        solo_refs = False
 
-        return fire
+        # Chained arrival feed: each arrival schedules the next before
+        # submitting, so the engine heap holds O(running + 1) events
+        # instead of the whole trace.  Ordering matches the upfront
+        # schedule except on exact float-equal timestamp ties between an
+        # arrival and a boundary event (the same-time seq tie-break).
+        def fire_at(i: int):
+            def fire() -> None:
+                if i + 1 < len(specs):
+                    engine.at(specs[i + 1].arrival, fire_at(i + 1))
+                spec = specs[i]
+                arbiter.submit(
+                    spec.request,
+                    spec.priority,
+                    tenant=spec.tenant,
+                    site_id=spec.site_id,
+                )
 
-    for spec in specs:
-        engine.at(spec.arrival, make_submit(spec))
+            return fire
+
+        if specs:
+            engine.at(specs[0].arrival, fire_at(0))
+    else:
+
+        def make_submit(spec: JobSpec):
+            def fire() -> None:
+                record = arbiter.submit(
+                    spec.request,
+                    spec.priority,
+                    tenant=spec.tenant,
+                    site_id=spec.site_id,
+                )
+                records.append(record)
+
+            return fire
+
+        for spec in specs:
+            engine.at(spec.arrival, make_submit(spec))
     engine.run()
     arbiter.assert_invariants()
 
@@ -459,4 +670,6 @@ def replay(
             if arbiter.plan_cache is not None
             else None
         ),
+        metrics=metrics,
+        slo=slo,
     )

@@ -51,6 +51,10 @@ class TraceEvent:
         ``count * payload_bytes * participants`` pattern-dependent.
       phase: which workload phase issues it (``train`` / ``prefill`` /
         ``decode`` / ``step``).
+      site_id: stable collective call-site label for metric rollups
+        (e.g. ``"gemma_2b/dp_grad_rs"``); empty means replay derives
+        one as ``"{model}/{tag or op}"``, so every job a trace submits
+        lands in a per-site attribution bucket.
     """
 
     op: str
@@ -60,6 +64,7 @@ class TraceEvent:
     deps: tuple[int, ...] = ()
     count: int = 1
     phase: str = "step"
+    site_id: str = ""
 
 
 @dataclasses.dataclass(frozen=True)

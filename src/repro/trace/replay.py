@@ -138,6 +138,11 @@ def trace_to_jobs(
                 ready = step_base
                 for d in ev.deps:
                     ready = max(ready, finish[d])
+                # Per-collective-site label: explicit site_id wins, else
+                # a stable "{model}/{tag or op}" so attribution rollups
+                # (exposed vs hidden reconfiguration per call site) can
+                # answer "which layer's collective pays reconfiguration".
+                site = ev.site_id or f"{trace.model}/{ev.tag or ev.op}"
                 t = ready
                 for req in _expand_event(ev, max_expand):
                     jobs.append(
@@ -146,6 +151,7 @@ def trace_to_jobs(
                             request=req,
                             priority=priority,
                             tenant=trace.model,
+                            site_id=site,
                         )
                     )
                     t += estimator.cct(req)
@@ -211,6 +217,8 @@ def replay_trace(
     priorities: dict[str, int] | None = None,
     tracer=None,
     min_planes: int = 1,
+    metrics=None,
+    slo=None,
 ) -> tuple[ReplayReport, dict[str, ModelStepTimes]]:
     """Replay model traces on a shared fabric; per-model step times.
 
@@ -242,6 +250,8 @@ def replay_trace(
         tracer=tracer,
         solo_refs=False,
         min_planes=min_planes,
+        metrics=metrics,
+        slo=slo,
     )
     return report, _step_times(traces, report)
 
@@ -318,18 +328,24 @@ def _main(argv: Iterable[str] | None = None) -> int:
     fabric = OpticalFabric(
         n_nodes=args.nodes, n_planes=args.planes, t_recfg=args.t_recfg
     )
-    tracer = None
-    if args.trace_out:
-        from repro.obs.trace import ChromeTracer
+    import contextlib
 
-        tracer = ChromeTracer()
-    report, times = replay_trace(
-        trace,
-        fabric,
-        overlap=True,
-        size_scale=args.size_scale,
-        tracer=tracer,
-    )
+    with contextlib.ExitStack() as stack:
+        tracer = None
+        if args.trace_out:
+            from repro.obs.trace import ChromeTracer
+
+            # Context-managed: the trace flushes even if replay raises.
+            tracer = stack.enter_context(
+                ChromeTracer(path=args.trace_out)
+            )
+        report, times = replay_trace(
+            trace,
+            fabric,
+            overlap=True,
+            size_scale=args.size_scale,
+            tracer=tracer,
+        )
     comparison = overlap_comparison(
         trace, fabric, size_scale=args.size_scale
     )[trace.model]
@@ -347,7 +363,6 @@ def _main(argv: Iterable[str] | None = None) -> int:
         f"overlap_gain={comparison['overlap_gain']:.3f}"
     )
     if args.trace_out:
-        tracer.write(args.trace_out)
         print(f"chrome trace written to {args.trace_out}")
     ok = (
         len(report.completed) == len(report.records)

@@ -46,6 +46,22 @@ _SWEEP = {
         # Per-phase wall-clock + replay throughput: machine-dependent.
         {"name": "mt_phase_replay_us", "us_per_call": 2.6e6, "note": ""},
         {"name": "mt_events_per_sec", "us_per_call": 40.0, "note": ""},
+        # Lower-is-better fraction rows: gated with an ABSOLUTE band.
+        {
+            "name": "mt_scale_qwen3_4b_deadline_miss_rate",
+            "us_per_call": 0.08,
+            "note": "",
+        },
+        {
+            "name": "mt_scale_gemma_2b_deadline_miss_rate",
+            "us_per_call": 0.0,  # a zero baseline must stay gateable
+            "note": "",
+        },
+        {
+            "name": "model_trace_site_gemma_2b_tp_act_allreduce_exposed_frac",
+            "us_per_call": 0.91,
+            "note": "",
+        },
     ],
 }
 _BACKENDS = {
@@ -148,6 +164,37 @@ def test_higher_better_rise_passes(baseline, tmp_path):
     for pt in sweep["points"]:
         if check_regression._HIGHER_BETTER.search(pt["name"]):
             pt["us_per_call"] *= 2.0
+    current = tmp_path / "current"
+    _write(current, sweep, _BACKENDS)
+    assert check_regression.compare(baseline, current, 0.25) == []
+
+
+def test_rate_rise_past_absolute_band_fails(baseline, tmp_path):
+    """miss_rate / exposed_frac rows regress by RISING more than the
+    band *absolutely* -- including from a 0.0 baseline, where any
+    relative rule would be vacuous."""
+    sweep = copy.deepcopy(_SWEEP)
+    for pt in sweep["points"]:
+        if check_regression._RATE_ROW.search(pt["name"]):
+            pt["us_per_call"] += 0.30  # past the 0.25 absolute band
+    current = tmp_path / "current"
+    _write(current, sweep, _BACKENDS)
+    failures = check_regression.compare(baseline, current, 0.25)
+    assert len(failures) == 3
+    assert any("deadline_miss_rate" in f for f in failures)
+    assert any("exposed_frac" in f for f in failures)
+    assert any("gemma_2b_deadline_miss_rate" in f for f in failures)
+
+
+def test_rate_within_band_or_improving_passes(baseline, tmp_path):
+    sweep = copy.deepcopy(_SWEEP)
+    for pt in sweep["points"]:
+        if pt["name"] == "mt_scale_qwen3_4b_deadline_miss_rate":
+            pt["us_per_call"] = 0.0  # improvement: fewer misses
+        if pt["name"] == "mt_scale_gemma_2b_deadline_miss_rate":
+            pt["us_per_call"] = 0.2  # rise, but inside the 0.25 band
+        if pt["name"].endswith("_exposed_frac"):
+            pt["us_per_call"] *= 0.5
     current = tmp_path / "current"
     _write(current, sweep, _BACKENDS)
     assert check_regression.compare(baseline, current, 0.25) == []
